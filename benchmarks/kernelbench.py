@@ -1,0 +1,72 @@
+"""Wall-clock microbenchmarks (CPU sanity numbers; TPU is the target).
+
+Times the three MDK entry points on their jnp execution path plus an
+end-to-end reduced-gpt2 decode/train step.  These feed the
+``us_per_call`` CSV column so the harness emits real measurements
+alongside the analytic table reproductions.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    from repro.configs import get_config
+    from repro.kernels import ops
+    from repro.models import lm
+
+    rng = np.random.default_rng(0)
+    out: List[Tuple[str, float, str]] = []
+
+    # Fused MP (W8A8 matmul) — gpt2 ffn_up shape
+    M, K, N = 8, 1024, 4096
+    xq = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    xs = jnp.asarray(rng.uniform(1e-3, 0.05, (M, 1)), jnp.float32)
+    ws = jnp.asarray(rng.uniform(1e-3, 0.05, (1, N)), jnp.float32)
+    f = jax.jit(lambda *a: ops.quant_matmul(*a, backend="jnp"))
+    out.append((f"kernel/mp_w8a8_{M}x{K}x{N}", _time(f, xq, wq, xs, ws),
+                "jnp-path CPU"))
+
+    # Fused MHA decode — gpt2 16 heads, 1k cache
+    B, H, S, D = 8, 16, 1024, 64
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    ln = jnp.full((B,), S, jnp.int32)
+    f = jax.jit(lambda *a: ops.mha_decode(*a, backend="jnp"))
+    out.append((f"kernel/mha_decode_b{B}h{H}s{S}", _time(f, q, k, v, ln),
+                "jnp-path CPU"))
+
+    # Fused LN&Res
+    x = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
+    w = jnp.ones((1024,), jnp.float32)
+    f = jax.jit(lambda *a: ops.ln_res(*a, kind="layernorm", backend="jnp"))
+    out.append(("kernel/ln_res_256x1024", _time(f, x, r, w), "jnp-path CPU"))
+
+    # end-to-end reduced-gpt2 decode step (the serving engine's inner loop)
+    cfg = get_config("gpt2-345m").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=64)
+    cache = lm.init_cache(cfg, 4, 64)
+    tok = jnp.zeros((4, 1), jnp.int32)
+    lens = jnp.zeros((4,), jnp.int32)
+    step = jax.jit(lambda p, t, c, l: lm.decode_step(p, cfg, t, c, l))
+    out.append(("e2e/gpt2_reduced_decode_step",
+                _time(step, params, tok, cache, lens), "CPU"))
+    return out

@@ -1,0 +1,146 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Reads artifacts/dryrun/<mesh>/<arch>__<shape>.json (written by
+launch/dryrun.py) and derives, per cell:
+
+  compute_s    = HLO_flops_per_device / 197 TF/s
+  memory_s     = HLO_bytes_per_device / 819 GB/s
+  collective_s = wire_bytes_per_device / 50 GB/s
+  dominant term, MODEL_FLOPS = 6ND (train) / 2ND (inference),
+  useful-compute ratio MODEL_FLOPS / HLO_FLOPS (remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.core.perfmodel import model_flops, roofline_terms
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+
+def ideal_bytes_per_device(cfg, shape, chips: int = 256,
+                           model_axis: int = 16) -> float:
+    """Physical lower bound on HBM traffic per device per step (documented
+    approximation; the denominator of ``mem_efficiency``).
+
+      decode : serving params once (int8 linears; MoE reads only routed
+               experts) + full KV/state cache read + O(B) writes
+      prefill: params once + 2 passes over activations + cache write
+      train  : fp32 master params/grads/opt state R/W (6 passes) + 3
+               activation passes (fwd, remat-fwd, bwd)
+    """
+    pc = cfg.param_counts()
+    d = cfg.d_model
+    B, S = shape.global_batch, shape.seq_len
+    # --- cache bytes (bf16) ---
+    cache = 0.0
+    for li in range(cfg.n_layers):
+        kind = cfg.block_kind(li)
+        if kind == "attn":
+            cache += 2 * B * cfg.kv_dim * S * 2
+        elif kind == "local_attn":
+            cache += 2 * B * cfg.kv_dim * min(cfg.window or S, S) * 2
+        elif kind == "rglru":
+            cache += B * (cfg.lru_width or d) * 4
+        elif kind == "mlstm":
+            cache += B * cfg.n_heads * cfg.head_dim ** 2 * 4
+        elif kind == "slstm":
+            cache += 4 * B * d * 4
+    if cfg.is_encoder_decoder:
+        cache += cfg.n_layers * 2 * B * cfg.kv_dim * cfg.encoder_seq * 2
+    if shape.kind == "train":
+        param_traffic = pc["total"] * 4 * 6  # p,g,m,v passes (f32)
+        act = B * S * d * cfg.n_layers * 2 * 3  # bf16, 3 passes
+        total = param_traffic + act
+    elif shape.kind == "prefill":
+        if cfg.n_experts:
+            params = pc["total"] * 1  # prefill touches ~all experts
+        else:
+            params = pc["total"] * 1  # int8 serving weights
+        act = B * S * d * cfg.n_layers * 2 * 2
+        total = params + act + cache
+    else:  # decode
+        if cfg.n_experts:
+            dense = pc["active"] - (
+                cfg.n_layers * cfg.experts_per_token * 3 * d * cfg.d_ff)
+            expert_reads = min(
+                cfg.n_layers * B * cfg.experts_per_token * 3 * d * cfg.d_ff,
+                cfg.n_layers * cfg.n_experts * 3 * d * cfg.d_ff)
+            params = dense + expert_reads
+        else:
+            params = pc["total"]
+        total = params + cache + B * d * cfg.n_layers * 2 * 4
+    return total / chips
+
+
+def load_cells(mesh: str = "pod16x16") -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def analyze_cell(rec: Dict, chips: Optional[int] = None) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = chips or CHIPS.get(rec.get("mesh", "pod16x16"), 256)
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    terms = roofline_terms(
+        rec["flops_per_device"],
+        rec["bytes_per_device"],
+        rec["collective_bytes"].get("total", 0.0),
+    )
+    mf = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    hlo_total = rec["flops_per_device"] * chips
+    ideal_b = ideal_bytes_per_device(cfg, shape, chips)
+    # roofline fraction: time the step WOULD take at the binding resource's
+    # physical floor divided by the time the compiled artifact implies.
+    # compute floor = MODEL_FLOPS; memory floor = ideal traffic.
+    ideal_bound = max(mf / chips / 197e12, ideal_b / 819e9)
+    terms.update(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        kind=shape.kind,
+        model_flops=mf,
+        hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total > 0 else 0.0,
+        ideal_bytes=ideal_b,
+        mem_efficiency=min(1.0, ideal_b / max(rec["bytes_per_device"], 1.0)),
+        roofline_fraction=ideal_bound / terms["bound_s"]
+        if terms["bound_s"] > 0 else 0.0,
+        bytes_per_device=rec["bytes_per_device"],
+        collective_total=rec["collective_bytes"].get("total", 0.0),
+    )
+    return terms
+
+
+def rows(mesh: str = "pod16x16") -> List[tuple]:
+    out = []
+    for rec in load_cells(mesh):
+        a = analyze_cell(rec)
+        if a is None:
+            continue
+        key = f"roofline/{a['arch']}/{a['shape']}"
+        out.append((f"{key}/compute_us", a["compute_s"] * 1e6, ""))
+        out.append((f"{key}/memory_us", a["memory_s"] * 1e6, ""))
+        out.append((f"{key}/collective_us", a["collective_s"] * 1e6, ""))
+        out.append((f"{key}/dominant", a["dominant"], ""))
+        out.append((f"{key}/useful_ratio", round(a["useful_ratio"], 4), ""))
+        out.append((f"{key}/mem_efficiency",
+                    round(a["mem_efficiency"], 4), ""))
+        out.append((f"{key}/roofline_fraction",
+                    round(a["roofline_fraction"], 4), ""))
+    return out
+
+
+def table(mesh: str = "pod16x16") -> List[Dict]:
+    return [a for rec in load_cells(mesh)
+            if (a := analyze_cell(rec)) is not None]

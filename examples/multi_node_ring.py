@@ -1,0 +1,67 @@
+"""Ring-overlap tensor parallelism demo — the paper's Fig 4(c) on 8
+virtual devices.
+
+    python examples/multi_node_ring.py          # (sets its own XLA_FLAGS)
+
+Runs a Megatron-style sharded matmul three ways — exposed all-gather,
+ring-overlapped collective matmul (LoopLynx schedule), and reduce-scatter
+ring — verifies they agree, and shows the HLO-level difference: the ring
+schedule lowers to ``collective-permute`` hops interleaved with partial
+dots (transmission hidden in compute), the naive one to a monolithic
+``all-gather`` ahead of one big dot.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ring
+
+
+def hlo_profile(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    ops = {}
+    for op in ("all-gather", "all-reduce", "reduce-scatter",
+               "collective-permute", "dot"):
+        ops[op] = sum(1 for line in txt.splitlines() if f" {op}(" in line
+                      or f" {op}-start(" in line)
+    return ops
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    M, K, N = 8, 1024, 2048  # decode-shaped: tiny M, fat weights
+    x = jnp.asarray(rng.normal(size=(M, K)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, N)), jnp.float32)
+    want = np.asarray(x @ w)
+
+    print(f"distributed matmul ({M}x{K}x{N}) over an 8-node ring\n")
+    for strat, story in (
+        ("naive_ag", "exposed all-gather, then one dot (temporal arch)"),
+        ("ring_ag", "ppermute ring: transfer of chunk k+1 overlaps dot of "
+                    "chunk k (LoopLynx Fig 4c)"),
+        ("ring_rs", "row-parallel travelling-accumulator reduce-scatter"),
+    ):
+        y = ring.tp_matmul(x, w, mesh, "model", strat)
+        err = float(np.max(np.abs(np.asarray(y) - want)))
+        prof = hlo_profile(
+            lambda a, b, s=strat: ring.tp_matmul(a, b, mesh, "model", s),
+            x, w)
+        print(f"{strat:10s} max_err={err:.2e}  HLO: {prof}")
+        print(f"           {story}\n")
+
+    print("note the ring variants: n-1 collective-permutes interleaved "
+          "with n partial dots,\nvs one blocking all-gather — the same "
+          "dependency structure the paper hides behind\nblock matmuls on "
+          "the FPGA ring network.")
+
+
+if __name__ == "__main__":
+    main()

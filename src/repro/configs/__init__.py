@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ASSIGNED_ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    applicable_shapes,
+    get_config,
+    list_archs,
+    register,
+)
+
+__all__ = [
+    "ASSIGNED_ARCHS",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "applicable_shapes",
+    "get_config",
+    "list_archs",
+    "register",
+]

@@ -1,0 +1,264 @@
+"""Model/shape configuration system.
+
+Every assigned architecture is a frozen :class:`ModelConfig`; the registry maps
+``--arch <id>`` names to configs.  ``reduced()`` derives a tiny same-family
+config for CPU smoke tests; the full configs are only ever lowered abstractly
+(dry-run), never allocated on this host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, Tuple
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned to every LM-family arch; 4 per arch)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One benchmark cell: (kind, seq_len, global_batch).
+
+    ``kind`` selects which step gets lowered:
+      * ``train``   -> train_step   (full fwd+bwd+optimizer)
+      * ``prefill`` -> prefill_step (forward, fills KV cache)
+      * ``decode``  -> serve_step   (1 new token against a seq_len cache)
+    """
+
+    name: str
+    kind: str
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int  # per-expert FFN width for MoE; 0 => no FFN (xLSTM)
+    vocab_size: int
+
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+
+    # --- layer body ---
+    activation: str = "swiglu"  # swiglu | geglu | gelu_mlp | relu2_mlp
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    pos: str = "rope"  # rope | learned | none
+    rope_theta: float = 10_000.0
+
+    # --- hybrid / ssm ---
+    # cycled over layer indices, e.g. ("rglru","rglru","local_attn")
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 0  # local-attention window (0 => full/causal)
+    lru_width: int = 0  # RG-LRU recurrent width (defaults to d_model)
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500  # audio frames after conv stub (whisper 30 s)
+
+    # --- modality frontend stub ---
+    frontend: str = "none"  # none | audio_frames | vision_patches
+    frontend_tokens: int = 0  # prepended stub-embedding tokens for vlm
+
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    source: str = ""  # provenance note
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        assert self.family in ("dense", "moe", "hybrid", "ssm", "audio", "vlm")
+        assert self.n_heads % self.n_kv_heads == 0, (self.name, "GQA groups")
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.experts_per_token > 0
+
+    # ------------------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def block_kind(self, layer_idx: int) -> str:
+        return self.block_pattern[layer_idx % len(self.block_pattern)]
+
+    @property
+    def attention_free(self) -> bool:
+        return not any(
+            k in ("attn", "local_attn") for k in self.block_pattern
+        )
+
+    @property
+    def subquadratic(self) -> bool:
+        """True when no block attends over an unbounded full-cache span."""
+        return all(
+            k != "attn" for k in self.block_pattern
+        )  # local_attn / rglru / mlstm / slstm are all O(window or 1)
+
+    # ------------------------------------------------------------------
+    # Parameter counting (used by roofline MODEL_FLOPS and perf model)
+    # ------------------------------------------------------------------
+    def param_counts(self) -> Dict[str, float]:
+        d, hd = self.d_model, self.head_dim
+        qd, kvd = self.q_dim, self.kv_dim
+        attn = d * qd + 2 * d * kvd + qd * d  # q,k,v,o
+        if self.activation in ("swiglu", "geglu"):
+            ffn_dense = 3 * d * self.d_ff
+        else:
+            ffn_dense = 2 * d * self.d_ff
+        per_layer = {}
+        for kind in set(self.block_pattern):
+            if kind in ("attn", "local_attn"):
+                per_layer[kind] = attn
+            elif kind == "rglru":
+                w = self.lru_width or d
+                per_layer[kind] = 2 * d * w + 3 * w  # in/out proj + gates/decay
+            elif kind == "mlstm":
+                per_layer[kind] = d * qd + 2 * d * kvd + qd * d + 3 * d * self.n_heads
+            elif kind == "slstm":
+                per_layer[kind] = 4 * d * d + 4 * d
+            else:
+                raise ValueError(kind)
+        mixer_total = sum(
+            per_layer[self.block_kind(i)] for i in range(self.n_layers)
+        )
+        if self.n_experts:
+            ffn_total = self.n_layers * (
+                self.n_experts * ffn_dense + d * self.n_experts
+            )
+            ffn_active = self.n_layers * (
+                self.experts_per_token * ffn_dense + d * self.n_experts
+            )
+        else:
+            ffn_total = ffn_active = self.n_layers * ffn_dense
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        enc = 0
+        if self.is_encoder_decoder:
+            enc = self.n_encoder_layers * (attn + ffn_dense)
+            # decoder cross-attention
+            mixer_total += self.n_layers * attn
+            ffn_active += 0
+        total = mixer_total + ffn_total + embed + enc
+        active = mixer_total + ffn_active + embed + enc
+        return {"total": float(total), "active": float(active)}
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        n_layers = max(2, len(self.block_pattern))
+        n_kv = max(1, min(self.n_kv_heads, 2))
+        group = self.n_heads // self.n_kv_heads
+        n_heads = min(4, max(n_kv * min(group, 2), n_kv))
+        return replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=n_layers,
+            d_model=64,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=16,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 8),
+            experts_per_token=min(self.experts_per_token, 2),
+            window=min(self.window, 32) if self.window else 0,
+            lru_width=64 if self.lru_width else 0,
+            n_encoder_layers=2 if self.is_encoder_decoder else 0,
+            encoder_seq=16 if self.is_encoder_decoder else self.encoder_seq,
+            frontend_tokens=8 if self.frontend_tokens else 0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    assert cfg.name not in _REGISTRY, cfg.name
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]
+
+
+def list_archs() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+ASSIGNED_ARCHS = (
+    "pixtral-12b",
+    "olmoe-1b-7b",
+    "kimi-k2-1t-a32b",
+    "minitron-4b",
+    "tinyllama-1.1b",
+    "gemma-7b",
+    "llama3-8b",
+    "recurrentgemma-9b",
+    "whisper-large-v3",
+    "xlstm-350m",
+)
+
+
+def applicable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Which of the 4 assigned shapes this arch runs (skips recorded)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        out.append("long_500k")
+    return tuple(out)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    """Import all per-arch config modules exactly once."""
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.configs import (  # noqa: F401
+        gemma_7b,
+        gpt2_345m,
+        kimi_k2,
+        llama3_8b,
+        minitron_4b,
+        olmoe_1b_7b,
+        pixtral_12b,
+        recurrentgemma_9b,
+        tinyllama_1_1b,
+        whisper_large_v3,
+        xlstm_350m,
+    )

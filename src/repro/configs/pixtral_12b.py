@@ -1,0 +1,29 @@
+"""pixtral-12b — ViT frontend (stub) + mistral-nemo decoder backbone
+[hf:mistralai/Pixtral-12B-2409; unverified].
+
+Per the assignment spec the modality frontend is a STUB: ``input_specs()``
+supplies precomputed patch embeddings which are prepended to the token
+embeddings; the backbone below is the transformer that is actually lowered.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="pixtral-12b",
+        family="vlm",
+        n_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,  # mistral-nemo uses explicit head_dim 128 (32*128 != d_model)
+        d_ff=14336,
+        vocab_size=131072,
+        activation="swiglu",
+        norm="rmsnorm",
+        pos="rope",
+        rope_theta=1_000_000.0,
+        frontend="vision_patches",
+        frontend_tokens=256,  # stub: one 16x16-patch image tile
+        source="hf:mistralai/Pixtral-12B-2409",
+    )
+)

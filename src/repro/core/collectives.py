@@ -1,0 +1,74 @@
+"""Distributed-optimization collectives: compressed ring all-reduce.
+
+``compressed_psum`` is a ring reduce-scatter + all-gather all-reduce whose
+wire format is int8 (per-chunk symmetric scales), cutting gradient
+synchronization bytes ~4x vs f32 — with re-quantization at each hop, which
+is the standard trade (error feedback at the accumulation level compensates,
+see training/trainer.py).  Built on the same ``ppermute`` ring machinery as
+the LoopLynx collective matmul (core/ring.py), so on TPU the hops overlap
+the optimizer's elementwise work.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array):
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-wire ring all-reduce of a flat f32 vector (per-device body).
+
+    x: (L,) with L divisible by the axis size.  Returns sum over devices.
+    """
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    L = x.shape[0]
+    chunk = L // n
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def get_chunk(vec, b):
+        return jax.lax.dynamic_slice_in_dim(vec, b * chunk, chunk)
+
+    # --- ring reduce-scatter (int8 wire) ---
+    # travelling accumulator for block (idx - t - 1) mod n lands home
+    b0 = (idx - 1) % n
+    acc = get_chunk(x, b0)
+
+    def rs_body(t, acc):
+        q, s = _quantize(acc)
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        b = (idx - t - 1) % n
+        return _dequantize(q, s) + get_chunk(x, b)
+
+    acc = jax.lax.fori_loop(1, n, rs_body, acc, unroll=True)  # (chunk,)
+
+    # --- ring all-gather (int8 wire) ---
+    q, s = _quantize(acc)
+    out = jnp.zeros((L,), jnp.float32)
+    out = jax.lax.pcast(out, (axis_name,), to="varying")
+
+    def ag_body(t, carry):
+        out, q, s = carry
+        src = (idx - t) % n  # whose chunk we currently hold
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, _dequantize(q, s), src * chunk, 0
+        )
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        return out, q, s
+
+    out, _, _ = jax.lax.fori_loop(
+        0, n, ag_body, (out, q, s), unroll=True
+    )
+    return out

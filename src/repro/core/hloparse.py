@@ -1,0 +1,136 @@
+"""HLO-text analysis: collective-communication byte accounting.
+
+``cost_analysis()`` has no collective term, so the roofline's third axis is
+derived here from the compiled (post-SPMD, per-device) module.  XLA's final
+HLO printer omits operand types, so wire bytes are reconstructed from each
+collective's *result* type plus its replica-group size, using the standard
+ring-algorithm cost model (per-device bytes on the wire):
+
+  all-reduce        2 * |result| * (g-1)/g
+  all-gather        |result| * (g-1)/g
+  reduce-scatter    |result| * (g-1)            (input = g * |result|)
+  all-to-all        |result| * (g-1)/g
+  collective-permute|result|                     (one hop)
+
+Collectives inside a ``while`` body (the lax.scan over layer periods) fire
+once per trip, so callers pass ``scan_trips`` and lines whose metadata
+shows a single ``while/body`` frame are multiplied by it.  Deeper nesting
+is tallied separately under ``nested_unscaled`` for manual review.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# "%x = f32[128,4,64]{2,1,0} all-gather(...)" or tuple-result async starts
+# "%x = (f32[1,128]{1,0}, f32[8,128]{1,0}) all-gather-start(...)"
+_LINE_RE = re.compile(
+    r"=\s*(\(?[^=]*?)\s(" + "|".join(_COLL) + r")(-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=")
+
+
+def _result_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # collective-permute etc.: treat as one-hop pairwise
+
+
+def _wire_bytes(kind: str, rbytes: int, g: int, is_start: bool) -> float:
+    """rbytes = the largest shape printed left of the op name: the result
+    for sync ops, the full (operand, result, ...) tuple max for -start ops
+    — which is the result for all-gather and the operand for
+    reduce-scatter, hence the branch below."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * rbytes * (g - 1) / g
+    if kind == "all-gather":
+        return rbytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        # sync print shows the result (= operand/g); async tuple max shows
+        # the operand itself.
+        return rbytes * (g - 1) / g if is_start else rbytes * (g - 1)
+    if kind == "all-to-all":
+        return rbytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(rbytes)
+    raise ValueError(kind)
+
+
+def collective_bytes(hlo_text: str, scan_trips: int = 1) -> Dict[str, float]:
+    """Per-device wire bytes for one executable invocation."""
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pair second half
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        result_types, kind, start = m.group(1), m.group(2), m.group(3)
+        shapes = _SHAPE_RE.findall(result_types)
+        if not shapes:
+            continue
+        if start:
+            # async tuple = (operand(s), result(s), sync flags): largest
+            # member approximates the payload without double counting
+            rbytes = max(_result_bytes(dt, dims) for dt, dims in shapes)
+        else:
+            # sync variadic collectives reduce every tuple member: sum
+            rbytes = sum(_result_bytes(dt, dims) for dt, dims in shapes)
+        g = _group_size(line)
+        wire = _wire_bytes(kind, rbytes, g, start is not None)
+        depth = line.count("while/body")
+        if depth == 0:
+            mult = 1.0
+        elif depth == 1:
+            mult = float(scan_trips)
+        else:
+            out["nested_unscaled"] += wire
+            mult = float(scan_trips)  # lower bound; flagged separately
+        out[kind] += wire * mult
+        out["total"] += wire * mult
+    return dict(out)
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "scatter", "gather",
+                                     "while", "custom-call")) -> Dict[str, int]:
+    """Rough structural profile of the compiled module."""
+    hist: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for op in ops:
+            if f" {op}(" in line:
+                hist[op] += 1
+    return dict(hist)

@@ -1,0 +1,54 @@
+"""Macro Dataflow Kernels (MDK) — the paper's hybrid temporal-spatial core.
+
+LoopLynx instantiates a *small set of large fused kernels* (Fused MP, Fused
+MHA, Fused LN&Res, plus small functional units) and temporally reuses them
+across every stage of every transformer block (Fig 3c).  This module is the
+kernel registry: each MDK has
+
+  * an execution entry point (the Pallas kernel via ``kernels/ops.py``),
+  * an activation counter, so the scheduler can report per-token reuse and
+    peak-utilization statistics (the paper's core efficiency argument), and
+  * an analytic cost hook used by ``core/perfmodel.py``.
+
+``MDKStats`` is what Fig 3(c) looks like in software: one MP kernel instance
+serving QKV / out-proj / FFN-up / FFN-down of all layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Callable, Dict
+
+from repro.kernels import ops
+
+#: The three macro kernels + the small functional units bucket.
+MDK_KINDS = ("mp", "mha", "ln_res", "func")
+
+
+@dataclasses.dataclass
+class MDKStats:
+    """Reuse accounting across one forward step (per token)."""
+
+    activations: Counter = dataclasses.field(default_factory=Counter)
+    # stage name -> kernel kind, for the latency-breakdown benchmark
+    stages: list = dataclasses.field(default_factory=list)
+
+    def record(self, kind: str, stage: str) -> None:
+        assert kind in MDK_KINDS, kind
+        self.activations[kind] += 1
+        self.stages.append((stage, kind))
+
+    def reuse_factor(self) -> Dict[str, int]:
+        """How many stages each *single* kernel instance served —
+        the paper's temporal-reuse measure (spatial archs would need this
+        many separate kernel instantiations)."""
+        return dict(self.activations)
+
+
+#: kernel kind -> callable. One entry per physical kernel instance — the
+#: whole point of the hybrid design is that this table is tiny.
+MDK_REGISTRY: Dict[str, Callable] = {
+    "mp": ops.quant_matmul,
+    "mha": ops.mha_decode,
+    "ln_res": ops.ln_res,
+}

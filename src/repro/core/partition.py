@@ -1,0 +1,233 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs per mesh.
+
+Megatron TP over ``"model"`` + optional FSDP (ZeRO-3-style) over the data
+axes for training; paper-faithful head-wise KV partitioning for decode with
+an automatic fallback to sequence-sharded KV when n_kv_heads doesn't divide
+the model axis (GQA on wide meshes — the MaxText kv-replication pattern for
+weights, flash-decoding-style sequence parallelism for the cache).
+
+Every rule degrades to replication when a dimension isn't divisible by the
+target axis — sharding must never be a correctness hazard.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+MODEL_AXIS = "model"
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh: Mesh, axes, dim: int):
+    """axes if they evenly divide dim else None (replicate)."""
+    if axes in (None, ()):
+        return None
+    if dim % _axsize(mesh, axes) == 0:
+        return axes
+    return None
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# (path-suffix match, (spec for last-2 dims as (row_axes, col_axes))) where
+# axes entries are "model" | "fsdp" | None.  Leading (stacked) dims replicate.
+_W_RULES = (
+    ("/q/w", ("fsdp", "model")),
+    ("/k/w", ("fsdp", "kv_model")),  # col-shard only if Hkv divides model
+    ("/v/w", ("fsdp", "kv_model")),
+    ("/o_gate/w", ("fsdp", "model")),
+    ("/out/w", ("model", "fsdp")),
+    ("/up/w", ("fsdp", "model")),
+    ("/gate/w", ("fsdp", "model")),
+    ("/down/w", ("model", "fsdp")),
+    ("/gates/w", ("fsdp", "model")),
+    ("/in_proj/w", ("fsdp", "model")),
+    ("/out_proj/w", ("model", "fsdp")),
+    ("/w_r/w", ("model", None)),
+    ("/w_i/w", ("model", None)),
+    ("/router/w", ("fsdp", None)),
+    ("/lm_head/w", ("fsdp", "model")),
+)
+
+
+def _resolve(mesh, cfg, token, dim, fsdp_axes):
+    if token is None:
+        return None
+    if token == "model":
+        return _maybe(mesh, MODEL_AXIS, dim)
+    if token == "kv_model":
+        if cfg.n_kv_heads % _axsize(mesh, MODEL_AXIS) == 0:
+            return _maybe(mesh, MODEL_AXIS, dim)
+        return None
+    if token == "fsdp":
+        return _maybe(mesh, fsdp_axes, dim)
+    raise ValueError(token)
+
+
+def param_pspec(
+    path: str, shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh,
+    *, fsdp: bool, moe_ep: str = "data"
+) -> P:
+    fsdp_axes = data_axes(mesh) if fsdp else None
+    nd = len(shape)
+    # MoE expert banks: (.., E, d_in, d_out) raw leaves.
+    # Serving (moe_ep="data"): experts shard over the data axes — tokens
+    # all-to-all to the expert's owner, weights stay put — and each expert
+    # is Megatron-split over model (EXPERIMENTS.md §Perf it3: 102x less
+    # decode wire).  Training (moe_ep="model"): tokens already shard the
+    # data axes, so experts shard over model only (data-EP regressed train
+    # collectives 3x — measured, §Perf optimized-sweep notes).
+    if path.endswith(("/w_up", "/w_gate", "/w_down")):
+        pre = (None,) * (nd - 3)
+        if moe_ep == "data":
+            e_ax = _maybe(mesh, data_axes(mesh), shape[nd - 3])
+            if path.endswith("/w_down"):
+                return P(*pre, e_ax,
+                         _maybe(mesh, MODEL_AXIS, shape[nd - 2]), None)
+            return P(*pre, e_ax, None,
+                     _maybe(mesh, MODEL_AXIS, shape[nd - 1]))
+        e_ax = _maybe(mesh, MODEL_AXIS, shape[nd - 3])
+        row = _maybe(mesh, fsdp_axes, shape[nd - 2])
+        return P(*pre, e_ax, row, None)
+    if path.endswith("embed/table"):
+        v_ax = _maybe(mesh, MODEL_AXIS, shape[0])
+        return P(v_ax, _maybe(mesh, fsdp_axes, shape[1]))
+    if path.endswith("/conv") or path.endswith("/lam"):
+        # per-channel params over the recurrent width (last dim); any
+        # stacked-period / tap leading dims replicate
+        return P(*(None,) * (nd - 1), _maybe(mesh, MODEL_AXIS, shape[-1]))
+    if path.endswith("pos_embed"):
+        return P(*(None,) * nd)
+    for suffix, (row_t, col_t) in _W_RULES:
+        if path.endswith(suffix):
+            pre = (None,) * (nd - 2)
+            row = _resolve(mesh, cfg, row_t, shape[nd - 2], fsdp_axes)
+            col = _resolve(mesh, cfg, col_t, shape[nd - 1], fsdp_axes)
+            return P(*pre, row, col)
+    # biases: follow the column sharding of their weight when divisible
+    if path.endswith("/b") or path.endswith("/bias"):
+        owner = path.rsplit("/", 1)[0]
+        for suffix, (_, col_t) in _W_RULES:
+            if owner.endswith(suffix[: -len("/w")]):
+                col = _resolve(mesh, cfg, col_t, shape[-1], fsdp_axes)
+                return P(*(None,) * (nd - 1), col)
+        return P(*(None,) * nd)
+    # norms, scalars, anything unmatched: replicate
+    return P(*(None,) * nd)
+
+
+def param_shardings(params_abs, cfg: ModelConfig, mesh: Mesh, *,
+                    fsdp: bool, moe_ep: str = "data"):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_abs)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        spec = param_pspec("/" + pstr, leaf.shape, cfg, mesh, fsdp=fsdp,
+                           moe_ep=moe_ep)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# cache rules
+# ---------------------------------------------------------------------------
+
+
+def cache_pspec(
+    path: str, shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh,
+    batch: int,
+) -> P:
+    dp = _maybe(mesh, data_axes(mesh), batch)
+    nd = len(shape)
+    # find the batch dim position: stacked period leaves carry (n_per, B, ..)
+    b_pos = 1 if (nd >= 2 and shape[0] != batch and shape[1] == batch) else 0
+    if shape[b_pos] != batch:
+        return P(*(None,) * nd)
+
+    def with_b(*rest):
+        full = [None] * nd
+        full[b_pos] = dp
+        for i, ax in enumerate(rest):
+            full[b_pos + 1 + i] = ax
+        return P(*full)
+
+    last = path.rsplit("/", 1)[-1]
+    if last in ("k", "v") and nd - b_pos == 4:  # (B, Hkv, S, hd)
+        hkv, S = shape[b_pos + 1], shape[b_pos + 2]
+        if hkv % _axsize(mesh, MODEL_AXIS) == 0:
+            return with_b(MODEL_AXIS, None, None)  # paper head-wise
+        if S % _axsize(mesh, MODEL_AXIS) == 0:
+            return with_b(None, MODEL_AXIS, None)  # sequence-sharded KV
+        return with_b(None, None, None)
+    if last == "C" and nd - b_pos == 4:  # mLSTM (B, H, hd, hd)
+        H, hd = shape[b_pos + 1], shape[b_pos + 2]
+        if H % _axsize(mesh, MODEL_AXIS) == 0:
+            return with_b(MODEL_AXIS, None, None)
+        if hd % _axsize(mesh, MODEL_AXIS) == 0:
+            return with_b(None, MODEL_AXIS, None)
+        return with_b(None, None, None)
+    if last in ("h", "c", "n", "m", "conv_tail"):
+        rest = [None] * (nd - b_pos - 1)
+        if nd - b_pos >= 2:
+            d = shape[-1]
+            rest[-1] = _maybe(mesh, MODEL_AXIS, d)
+        return with_b(*rest)
+    return with_b(*([None] * (nd - b_pos - 1)))
+
+
+def cache_shardings(cache_abs, cfg: ModelConfig, mesh: Mesh, batch: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        spec = cache_pspec("/" + pstr, leaf.shape, cfg, mesh, batch)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# batch / misc
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(batch_abs, mesh: Mesh, batch: int):
+    dp = _maybe(mesh, data_axes(mesh), batch)
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd >= 1 and leaf.shape[0] == batch:
+            return NamedSharding(mesh, P(dp, *(None,) * (nd - 1)))
+        return NamedSharding(mesh, P(*(None,) * nd))
+
+    return jax.tree_util.tree_map(spec, batch_abs)
+
+
+def replicated(tree_abs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, P(*(None,) * len(leaf.shape))),
+        tree_abs,
+    )

@@ -1,0 +1,112 @@
+"""SmoothQuant W8A8 quantization (paper §III-E).
+
+Pipeline (matches Xiao et al., ICML'23, as used by LoopLynx):
+
+  1. **Calibrate** — run the fp model eagerly over sample batches while a
+     calibration context records per-channel activation absmax for every
+     named linear (:func:`calibration`, :func:`record_act_stats`).
+  2. **Smooth** — migrate activation outliers into the weights with
+     ``s_j = amax(X_j)^alpha / amax(W_j,:)^(1-alpha)``; activations are
+     divided by ``s`` and weight rows multiplied by ``s`` (exact rescaling:
+     ``(X diag(1/s)) (diag(s) W) == X W``).
+  3. **Quantize** — per-output-channel symmetric int8 weights, dynamic
+     per-token symmetric int8 activations (computed in the fused LN&Res
+     kernel epilogue or :func:`quantize_act`).
+
+Quantized linears then execute on the Fused MP kernel
+(:func:`repro.kernels.ops.quant_matmul`) with int32 accumulation and a
+fused dequant+bias epilogue — exactly the paper's MAC->quant-unit chain.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Calibration context (eager-mode only — used on small sample batches)
+# ---------------------------------------------------------------------------
+
+_local = threading.local()
+
+
+@contextlib.contextmanager
+def calibration():
+    """Context under which eager forward passes record activation absmax."""
+    stats: Dict[str, jax.Array] = {}
+    _local.stats = stats
+    try:
+        yield stats
+    finally:
+        _local.stats = None
+
+
+def record_act_stats(name: str, x: jax.Array) -> None:
+    """Called by ``linear()`` on its input when calibration is active."""
+    stats = getattr(_local, "stats", None)
+    if stats is None:
+        return
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32).reshape(-1, x.shape[-1])), axis=0)
+    prev = stats.get(name)
+    stats[name] = amax if prev is None else jnp.maximum(prev, amax)
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+
+def smooth_factors(
+    act_amax: jax.Array, w: jax.Array, alpha: float = 0.5
+) -> jax.Array:
+    """Per-in-channel smoothing factors s (K,) for weight w (K, N)."""
+    w_amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1)  # (K,)
+    a = jnp.maximum(act_amax.astype(jnp.float32), 1e-5)
+    wmax = jnp.maximum(w_amax, 1e-5)
+    s = (a**alpha) / (wmax ** (1.0 - alpha))
+    # normalize so the median channel is unscaled (keeps ranges sane)
+    s = s / jnp.median(s)
+    return jnp.clip(s, 1e-3, 1e3)
+
+
+def quantize_weight(w: jax.Array):
+    """Symmetric per-output-channel int8. w: (K, N) -> (w_q, scale (1, N))."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    w_q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(
+        jnp.int8
+    )
+    return w_q, scale.astype(jnp.float32)
+
+
+def quantize_act(x: jax.Array):
+    """Symmetric dynamic per-token int8. x: (M, K) -> (x_q, scale (M, 1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(
+        jnp.int8
+    )
+    return x_q, scale.astype(jnp.float32)
+
+
+def quantize_linear_params(
+    w: jax.Array,
+    bias: Optional[jax.Array],
+    act_amax: Optional[jax.Array] = None,
+    alpha: float = 0.5,
+) -> Dict[str, jax.Array]:
+    """Build the serving-side QuantLinear param group from an fp weight."""
+    K, N = w.shape
+    if act_amax is None:
+        smooth = jnp.ones((K,), jnp.float32)  # no calibration -> plain W8A8
+    else:
+        smooth = smooth_factors(act_amax, w, alpha)
+    w_s = w.astype(jnp.float32) * smooth[:, None]
+    w_q, w_scale = quantize_weight(w_s)
+    out = {"w_q": w_q, "w_scale": w_scale, "smooth": smooth}
+    if bias is not None:
+        out["bias"] = bias.astype(jnp.float32)
+    return out

@@ -1,0 +1,133 @@
+"""Temporal MDK scheduler — the state machine of Fig 3(c).
+
+The scheduler turns a model config into a *stage program*: an explicit,
+static sequence of (stage-name, MDK-kind) pairs for every layer.  The
+serving path executes this program against a shared activation buffer
+(paper: "kernels are connected through a shared buffer for data exchange
+and are managed by a scheduler"), and the analytic perf model walks the
+same program to produce the Fig 5 latency breakdown — one source of truth
+for both execution and modeling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.mdk import MDKStats
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str  # e.g. "l3.qkv"
+    kernel: str  # MDK kind: mp | mha | ln_res | func
+    # analytic-cost descriptor: matmul (K, N) dims for mp, cache span for
+    # mha, feature width for ln_res/func — used by core/perfmodel.py
+    k: int = 0
+    n: int = 0
+
+
+def _attn_stages(cfg: ModelConfig, li: int, local: bool) -> List[Stage]:
+    d = cfg.d_model
+    pre = f"l{li}."
+    return [
+        Stage(pre + "ln1", "ln_res", k=d, n=d),
+        Stage(pre + "qkv", "mp", k=d, n=cfg.q_dim + 2 * cfg.kv_dim),
+        Stage(
+            pre + ("local_attn" if local else "attn"),
+            "mha",
+            k=cfg.head_dim,
+            n=cfg.n_heads,
+        ),
+        Stage(pre + "attn_out", "mp", k=cfg.q_dim, n=d),
+    ]
+
+
+def _ffn_stages(cfg: ModelConfig, li: int) -> List[Stage]:
+    d = cfg.d_model
+    pre = f"l{li}."
+    if cfg.d_ff == 0:
+        return []
+    gated = cfg.activation in ("swiglu", "geglu")
+    up_n = 2 * cfg.d_ff if gated else cfg.d_ff
+    stages = [Stage(pre + "ln2", "ln_res", k=d, n=d)]
+    if cfg.n_experts:
+        stages.append(Stage(pre + "router", "func", k=d, n=cfg.n_experts))
+        # active experts per token — each expert's up/down runs on the MP MDK
+        stages.append(
+            Stage(pre + "moe_up", "mp", k=d, n=up_n * cfg.experts_per_token)
+        )
+        stages.append(Stage(pre + "act", "func", k=cfg.d_ff, n=1))
+        stages.append(
+            Stage(pre + "moe_down", "mp", k=cfg.d_ff * cfg.experts_per_token, n=d)
+        )
+    else:
+        stages.append(Stage(pre + "ffn_up", "mp", k=d, n=up_n))
+        stages.append(Stage(pre + "act", "func", k=cfg.d_ff, n=1))
+        stages.append(Stage(pre + "ffn_down", "mp", k=cfg.d_ff, n=d))
+    return stages
+
+
+def _recurrent_stages(cfg: ModelConfig, li: int, kind: str) -> List[Stage]:
+    d = cfg.d_model
+    pre = f"l{li}."
+    if kind == "rglru":
+        w = cfg.lru_width or d
+        return [
+            Stage(pre + "ln1", "ln_res", k=d, n=d),
+            Stage(pre + "lru_in", "mp", k=d, n=2 * w),
+            Stage(pre + "rglru", "func", k=w, n=1),
+            Stage(pre + "lru_out", "mp", k=w, n=d),
+        ]
+    if kind == "mlstm":
+        return [
+            Stage(pre + "ln1", "ln_res", k=d, n=d),
+            Stage(pre + "qkv", "mp", k=d, n=cfg.q_dim + 2 * cfg.kv_dim),
+            Stage(pre + "mlstm", "func", k=cfg.head_dim, n=cfg.n_heads),
+            Stage(pre + "out", "mp", k=cfg.q_dim, n=d),
+        ]
+    if kind == "slstm":
+        return [
+            Stage(pre + "ln1", "ln_res", k=d, n=d),
+            Stage(pre + "gates", "mp", k=d, n=4 * d),
+            Stage(pre + "slstm", "func", k=d, n=1),
+        ]
+    raise ValueError(kind)
+
+
+def block_program(cfg: ModelConfig, layer_idx: int) -> List[Stage]:
+    kind = cfg.block_kind(layer_idx)
+    if kind == "attn":
+        mixer = _attn_stages(cfg, layer_idx, local=False)
+    elif kind == "local_attn":
+        mixer = _attn_stages(cfg, layer_idx, local=True)
+    else:
+        mixer = _recurrent_stages(cfg, layer_idx, kind)
+    return mixer + _ffn_stages(cfg, layer_idx)
+
+
+def model_program(cfg: ModelConfig) -> List[Stage]:
+    """Full per-token decode program: L blocks + final norm + LM head."""
+    stages: List[Stage] = []
+    for li in range(cfg.n_layers):
+        stages.extend(block_program(cfg, li))
+    d = cfg.d_model
+    stages.append(Stage("final_ln", "ln_res", k=d, n=d))
+    stages.append(Stage("lm_head", "mp", k=d, n=cfg.vocab_size))
+    return stages
+
+
+def mdk_stats(cfg: ModelConfig) -> MDKStats:
+    """Per-token MDK activation/reuse accounting (the Fig 3c argument)."""
+    stats = MDKStats()
+    for st in model_program(cfg):
+        stats.record(st.kernel, st.name)
+    return stats
+
+
+def spatial_equivalent_kernels(cfg: ModelConfig) -> Dict[str, int]:
+    """How many *dedicated* kernel instances a classical spatial
+    architecture would instantiate for the same program — the resource-
+    waste comparison the paper draws in Fig 3(b.2)."""
+    stats = mdk_stats(cfg)
+    return stats.reuse_factor()

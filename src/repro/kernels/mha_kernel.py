@@ -1,0 +1,125 @@
+"""Fused MHA decode Pallas kernel — LoopLynx's Fused MHA MDK on TPU.
+
+The paper's Fused MHA kernel (Fig 6b) is a head-wise task-level pipeline:
+score MAC -> mask -> softmax -> token-mixing MAC, with softmax of head i-1
+hidden under the attention compute of head i (Fig 4b).  On TPU we adapt this
+to the strictly-stronger single-pass form: the grid iterates (batch, head,
+kv-block) and an *online softmax* (running max/denominator in VMEM scratch)
+eliminates the two-phase softmax barrier the paper pipelines around, while
+independent head rows of the grid give the same head-level overlap for free.
+
+GQA is expressed in the BlockSpec index map (query head h reads KV head
+h // group), so grouped heads re-read the same KV block from VMEM —
+mirroring the paper's head-wise KV-cache partitioning.  A sliding-window
+mask (recurrentgemma local attention) reuses the same kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _mha_kernel(
+    len_ref,  # (1, 1) i32 SMEM
+    q_ref,  # (1, 1, D)
+    k_ref,  # (1, 1, bs, D)
+    v_ref,  # (1, 1, bs, D)
+    o_ref,  # (1, 1, D)
+    acc_ref,  # (1, D) f32 scratch
+    m_ref,  # (1, 1) f32 scratch
+    l_ref,  # (1, 1) f32 scratch
+    *,
+    n_s: int,
+    bs: int,
+    window: int,
+):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    d = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32)  # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bs, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bs, D)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (1.0 / (d**0.5))  # (1, bs)
+
+    length = len_ref[0, 0]
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < length
+    if window:
+        valid = jnp.logical_and(valid, pos >= length - window)
+    scores = jnp.where(valid, scores, _NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(scores))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (1, bs)
+
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p)
+    m_ref[0, 0] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _final():
+        l = l_ref[0, 0]
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)[None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bs", "window", "interpret")
+)
+def mha_decode(
+    q: jax.Array,  # (B, H, D)
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,  # (B, Hkv, S, D)
+    lengths: jax.Array,  # (B,) i32
+    *,
+    bs: int = 128,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    assert H % Hkv == 0 and S % bs == 0, (q.shape, k_cache.shape, bs)
+    group = H // Hkv
+    n_s = S // bs
+    grid = (B, H, n_s)
+    return pl.pallas_call(
+        functools.partial(_mha_kernel, n_s=n_s, bs=bs, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1), lambda b, h, s: (b, 0), memory_space=pltpu.SMEM
+            ),
+            pl.BlockSpec((1, 1, D), lambda b, h, s: (b, h, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, s: (b, h // group, s, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, s: (b, h // group, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, s: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.reshape(B, 1).astype(jnp.int32), q, k_cache, v_cache)

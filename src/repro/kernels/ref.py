@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: each ``kernels/<name>.py`` Pallas
+implementation must match its oracle here (asserted by the per-kernel
+allclose sweeps in ``tests/test_kernels*.py``), and they are also the
+CPU/dry-run execution path selected by ``ops.py`` when not on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Fused MP kernel oracle: W8A8 matmul + dequant + bias (LoopLynx Fused MP)
+# ---------------------------------------------------------------------------
+
+
+def quant_matmul_ref(
+    x_q: jax.Array,  # int8 (M, K)
+    w_q: jax.Array,  # int8 (K, N)
+    x_scale: jax.Array,  # f32 (M, 1) per-token
+    w_scale: jax.Array,  # f32 (1, N) per-channel
+    bias: jax.Array | None = None,  # f32 (N,)
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Y = (x_q @ w_q) * x_scale * w_scale + bias, int32 accumulation."""
+    acc = jax.lax.dot_general(
+        x_q,
+        w_q,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    y = acc.astype(jnp.float32) * x_scale.astype(jnp.float32) * w_scale.astype(
+        jnp.float32
+    )
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :]
+    return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused MHA decode oracle: one query token vs KV cache, GQA, optional window
+# ---------------------------------------------------------------------------
+
+
+def mha_decode_ref(
+    q: jax.Array,  # (B, H, D) bf16/f32
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,  # (B, Hkv, S, D)
+    lengths: jax.Array,  # (B,) i32 — number of valid cache entries
+    window: int = 0,  # 0 => full causal cache; else sliding window
+) -> jax.Array:
+    """Single-token attention with online-softmax semantics (exact softmax).
+
+    GQA is computed as a grouped einsum — the KV cache is contracted
+    directly at its stored width/dtype (no ``jnp.repeat`` materialization,
+    no f32 copy of the cache), so HBM traffic is one cache read.
+    """
+    B, H, D = q.shape
+    Hkv = k_cache.shape[1]
+    group = H // Hkv
+    S = k_cache.shape[2]
+    qg = q.reshape(B, Hkv, group, D)
+    scores = jnp.einsum(
+        "bhgd,bhsd->bhgs", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    ) / jnp.sqrt(float(D))  # (B, Hkv, g, S) f32
+    pos = jnp.arange(S)[None, None, None, :]
+    valid = pos < lengths[:, None, None, None]
+    if window:
+        valid = valid & (pos >= (lengths[:, None, None, None] - window))
+    scores = jnp.where(valid, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bhsd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused LN&Res oracle: residual add + norm (+ per-token int8 quant epilogue)
+# ---------------------------------------------------------------------------
+
+
+def ln_res_ref(
+    x: jax.Array,  # (B, D) block output
+    res: jax.Array,  # (B, D) running residual
+    weight: jax.Array,  # (D,)
+    bias: jax.Array | None,  # (D,) or None (rmsnorm)
+    *,
+    kind: str = "layernorm",  # layernorm | rmsnorm
+    eps: float = 1e-5,
+):
+    """Returns (normed bf16, new_residual, normed_int8, inv127_scale)."""
+    r = x.astype(jnp.float32) + res.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(r, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(r - mu), axis=-1, keepdims=True)
+        y = (r - mu) * jax.lax.rsqrt(var + eps)
+    elif kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(r), axis=-1, keepdims=True)
+        y = r * jax.lax.rsqrt(ms + eps)
+    else:
+        raise ValueError(kind)
+    y = y * weight.astype(jnp.float32)[None, :]
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :]
+    # dynamic per-token symmetric int8 quantization (SmoothQuant W8A8 act path)
+    amax = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    y_q = jnp.clip(jnp.round(y / scale), -127, 127).astype(jnp.int8)
+    return (
+        y.astype(jnp.bfloat16),
+        r.astype(res.dtype),
+        y_q,
+        scale.astype(jnp.float32),
+    )

@@ -1,0 +1,237 @@
+"""Dry-run cell builder: for an (arch, shape, mesh) cell, produce the step
+function, abstract inputs (ShapeDtypeStructs — nothing is allocated), and
+in/out shardings, ready for ``jax.jit(...).lower(...).compile()``.
+
+Used by launch/dryrun.py, benchmarks/roofline.py and the perf hillclimb —
+one source of truth for what each of the 40 cells lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, get_config
+from repro.core import partition
+from repro.models import lm
+from repro.serving.quantize import quantize_model_params
+from repro.training import optimizer as opt
+from repro.training import trainer as trn
+
+# serving weights also shard over the data axes when a model-axis shard
+# alone would blow past a v5e HBM budget (weight-gathered serving).
+_SERVE_FSDP_BYTES = 8e9
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    step_fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    note: str = ""
+
+
+def _token_sds(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    B = shape.global_batch
+    if shape.kind == "train":
+        out = {"tokens": _token_sds(B, shape.seq_len)}
+    elif shape.kind == "prefill":
+        out = {"tokens": _token_sds(B, shape.seq_len)}
+    else:  # decode
+        out = {"tokens": _token_sds(B, 1)}
+    if cfg.frontend == "vision_patches" and shape.kind != "decode":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def _serve_params_abstract(cfg: ModelConfig, max_seq: int,
+                           layout: str = "layers"):
+    return jax.eval_shape(
+        lambda: quantize_model_params(
+            lm.init(cfg, jax.random.PRNGKey(0), max_seq=max_seq,
+                    layout=layout), cfg)
+    )
+
+
+def _serve_fsdp(cfg: ModelConfig, mesh) -> bool:
+    per_model_shard = cfg.param_counts()["total"] / mesh.shape["model"]
+    return per_model_shard > _SERVE_FSDP_BYTES  # int8 ~ 1 B/param
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, remat: bool = True,
+               serve_quantized: bool = True, unroll: bool = True) -> Cell:
+    """``unroll=True`` lowers python-looped layers (exact cost/collective
+    analysis: XLA's cost model counts while bodies once); runtime paths use
+    the scanned variant."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    if shape.kind == "train":
+        return _train_cell(cfg, shape, mesh, remat, unroll)
+    if shape.kind == "prefill":
+        return _prefill_cell(cfg, shape, mesh, serve_quantized, unroll)
+    return _decode_cell(cfg, shape, mesh, serve_quantized, unroll)
+
+
+def _train_cell(cfg, shape, mesh, remat, unroll=True) -> Cell:
+    tcfg = trn.TrainConfig(
+        opt=opt.AdamWConfig(), remat=remat, microbatches=1,
+        compress_grads=False, unroll_periods=unroll,
+        layout="layers" if unroll else "stacked")
+    max_seq = shape.seq_len + (cfg.frontend_tokens or 0)
+    state_abs = trn.init_train_state_abstract(cfg, tcfg, max_seq=max_seq)
+    batch_abs = input_specs(cfg, shape)
+
+    # ZeRO-1: compute weights are TP-sharded but *replicated over data*
+    # (contraction dims never carry a data-axis sharding — ZeRO-3-style
+    # storage sharding made GSPMD all-reduce full activations, 9e11 wire
+    # B/step on llama3; EXPERIMENTS.md §Perf it5); optimizer moments are
+    # additionally sharded over the data axes and re-gathered at update.
+    pspecs = partition.param_shardings(
+        state_abs.params, cfg, mesh, fsdp=False, moe_ep="model")
+    state_sh = trn.TrainState(
+        params=pspecs,
+        opt=opt.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=partition.param_shardings(state_abs.opt.m, cfg, mesh,
+                                        fsdp=True, moe_ep="model"),
+            v=partition.param_shardings(state_abs.opt.v, cfg, mesh,
+                                        fsdp=True, moe_ep="model"),
+        ),
+        ef=None,
+    )
+    batch_sh = partition.batch_shardings(batch_abs, mesh, shape.global_batch)
+    step = trn.make_train_step(cfg, tcfg)
+
+    metrics_sh = {
+        k: NamedSharding(mesh, P())
+        for k in ("ce", "aux", "grad_norm", "lr", "loss")
+    }
+    return Cell(
+        arch=cfg.name, shape=shape, step_fn=step,
+        abstract_args=(state_abs, batch_abs),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+    )
+
+
+def _prefill_cell(cfg, shape, mesh, quantized, unroll=True) -> Cell:
+    B = shape.global_batch
+    max_seq = shape.seq_len + (cfg.frontend_tokens or 0)
+    if quantized:
+        params_abs = _serve_params_abstract(cfg, max_seq)
+    else:
+        params_abs = lm.init_abstract(cfg, max_seq=max_seq, layout="layers")
+    cache_abs = lm.init_cache_abstract(cfg, B, max_seq, layout="layers")
+    batch_abs = input_specs(cfg, shape)
+
+    fsdp = _serve_fsdp(cfg, mesh)
+    p_sh = partition.param_shardings(params_abs, cfg, mesh, fsdp=fsdp)
+    c_sh = partition.cache_shardings(cache_abs, cfg, mesh, B)
+    b_sh = partition.batch_shardings(batch_abs, mesh, B)
+
+    def prefill_step(params, batch, cache):
+        # capacity-factor routing at prefill scale: exact capacity would
+        # allocate T*k slots per expert (TB-scale for kimi @32k).
+        logits, cache, lengths = lm.batch_prefill(
+            params, cfg, batch["tokens"], cache,
+            frames=batch.get("frames"), patches=batch.get("patches"),
+            unroll_periods=unroll, moe_cf=2.0 if cfg.n_experts else None)
+        return logits, cache, lengths
+
+    dpax = partition.data_axes(mesh)
+    dp = dpax if B % partition._axsize(mesh, dpax) == 0 else None
+    out_sh = (
+        NamedSharding(mesh, P(dp, None)),
+        c_sh,
+        NamedSharding(mesh, P(dp)),
+    )
+    return Cell(
+        arch=cfg.name, shape=shape, step_fn=prefill_step,
+        abstract_args=(params_abs, batch_abs, cache_abs),
+        in_shardings=(p_sh, b_sh, c_sh),
+        out_shardings=out_sh,
+        donate_argnums=(2,),
+    )
+
+
+def _decode_cell(cfg, shape, mesh, quantized, unroll=True) -> Cell:
+    B = shape.global_batch
+    max_seq = shape.seq_len
+    if quantized:
+        params_abs = _serve_params_abstract(cfg, max_seq)
+    else:
+        params_abs = lm.init_abstract(cfg, max_seq=max_seq, layout="layers")
+    cache_abs = lm.init_cache_abstract(cfg, B, max_seq, layout="layers")
+    batch_abs = input_specs(cfg, shape)
+    lengths_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+    fsdp = _serve_fsdp(cfg, mesh)
+    p_sh = partition.param_shardings(params_abs, cfg, mesh, fsdp=fsdp)
+    c_sh = partition.cache_shardings(cache_abs, cfg, mesh, B)
+    b_sh = partition.batch_shardings(batch_abs, mesh, B)
+    l_sh = partition.batch_shardings(lengths_abs, mesh, B)
+
+    if cfg.is_encoder_decoder:
+
+        def serve_step(params, batch, cache, lengths, enc_lengths):
+            return lm.decode_step(params, cfg, batch["tokens"], cache,
+                                  lengths, enc_lengths=enc_lengths,
+                                  unroll_periods=unroll)
+
+        args = (params_abs, batch_abs, cache_abs, lengths_abs, lengths_abs)
+        in_sh = (p_sh, b_sh, c_sh, l_sh, l_sh)
+    else:
+
+        def serve_step(params, batch, cache, lengths):
+            # finite expert capacity at fleet batch (4x expected load);
+            # exact capacity would compute E*C >> routed tokens
+            return lm.decode_step(params, cfg, batch["tokens"], cache,
+                                  lengths, unroll_periods=unroll,
+                                  moe_cf=4.0 if cfg.n_experts else None)
+
+        args = (params_abs, batch_abs, cache_abs, lengths_abs)
+        in_sh = (p_sh, b_sh, c_sh, l_sh)
+
+    dpax = partition.data_axes(mesh)
+    dp = dpax if B % partition._axsize(mesh, dpax) == 0 else None
+    out_sh = (NamedSharding(mesh, P(dp, None)), c_sh)
+    return Cell(
+        arch=cfg.name, shape=shape, step_fn=serve_step,
+        abstract_args=args, in_shardings=in_sh, out_shardings=out_sh,
+        donate_argnums=(2,),
+    )
+
+
+def lower_cell(cell: Cell, mesh):
+    fn = jax.jit(
+        cell.step_fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    with jax.sharding.set_mesh(mesh):
+        lowered = fn.lower(*cell.abstract_args)
+    return lowered

@@ -1,0 +1,131 @@
+"""GQA attention: full-sequence (train/prefill) and cached decode paths.
+
+Decode routes through the Fused MHA MDK (``ops.mha_decode``) with head-wise
+online-softmax pipelining; train/prefill use a standard causal (optionally
+sliding-window) softmax attention in jnp, sharded head-wise under TP.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import linear, linear_init, rope
+
+_NEG_INF = -1e30
+
+
+def attn_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    """Separate q/k/v projections (not fused): under 16-way tensor
+    parallelism the fused qkv column split is shard-misaligned for GQA, and
+    k/v must be *replicable* independently of q when n_kv_heads < model
+    axis (the MaxText kv-replication pattern).  The serving scheduler still
+    issues them as one Fused-MP activation (concatenated column blocks)."""
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "q": linear_init(k1, cfg.d_model, cfg.q_dim, dtype),
+        "k": linear_init(k2, cfg.d_model, cfg.kv_dim, dtype),
+        "v": linear_init(k3, cfg.d_model, cfg.kv_dim, dtype),
+        "out": linear_init(k4, cfg.q_dim, cfg.d_model, dtype),
+    }
+
+
+def _project_qkv(p, cfg: ModelConfig, x: jax.Array, name: str):
+    B, S = x.shape[:2]
+    q = linear(p["q"], x, name + ".q").reshape(
+        B, S, cfg.n_heads, cfg.head_dim)
+    k = linear(p["k"], x, name + ".k").reshape(
+        B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p["v"], x, name + ".v").reshape(
+        B, S, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def full_attention(
+    p: Dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # (B, S)
+    window: int = 0,
+    causal: bool = True,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    name: str = "",
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (out (B,S,D), (k,v) for cache fill). ``cross_kv`` bypasses
+    self-attention K/V (whisper cross-attention)."""
+    q, k, v = _project_qkv(p, cfg, x, name)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if cross_kv is not None:
+        k, v = cross_kv
+    group = cfg.n_heads // cfg.n_kv_heads
+    B, Sq = q.shape[:2]
+    # grouped-query einsum: contract K/V at stored width & dtype (no
+    # jnp.repeat materialization, no f32 cache copy)
+    qg = q.reshape(B, Sq, cfg.n_kv_heads, group, cfg.head_dim)
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) / (cfg.head_dim**0.5)
+    Sk = scores.shape[-1]
+    if causal and cross_kv is None:
+        iq = jnp.arange(Sq)[:, None]
+        ik = jnp.arange(Sk)[None, :]
+        mask = ik <= iq
+        if window:
+            mask = mask & (ik > iq - window)
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.astype(x.dtype).reshape(B, Sq, cfg.q_dim)
+    return linear(p["out"], out, name + ".out"), (k, v)
+
+
+def decode_attention(
+    p: Dict,
+    x: jax.Array,  # (B, 1, D) current token
+    cfg: ModelConfig,
+    k_cache: jax.Array,  # (B, Hkv, S, hd)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (B,) tokens already in cache (position of new one)
+    *,
+    window: int = 0,
+    cross: bool = False,
+    name: str = "",
+):
+    """One-token cached attention through the Fused MHA MDK.
+
+    Returns (out (B,1,D), new_k_cache, new_v_cache).  With ``cross=True``
+    the cache is static (whisper encoder K/V) and is not written.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x, name)  # (B,1,H,hd) / (B,1,Hkv,hd)
+    if cfg.pos == "rope":
+        pos = lengths[:, None]  # (B, 1) — position of the new token
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    if not cross:
+        k_cache = _write_cache(k_cache, k[:, 0], lengths)
+        v_cache = _write_cache(v_cache, v[:, 0], lengths)
+        attn_len = lengths + 1  # the new token attends to itself
+    else:
+        attn_len = lengths
+    qh = q[:, 0]  # (B, H, hd)
+    out = ops.mha_decode(
+        qh, k_cache, v_cache, attn_len, window=window
+    )  # (B, H, hd)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return linear(p["out"], out, name + ".out"), k_cache, v_cache
+
+
+def _write_cache(cache: jax.Array, new: jax.Array, lengths: jax.Array):
+    """cache (B, Hkv, S, hd); new (B, Hkv, hd) written at slot lengths[b]."""
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), :, lengths].set(new.astype(cache.dtype))

@@ -1,0 +1,233 @@
+"""Transformer-block assembly for every block kind in the assigned pool.
+
+Each block kind provides three functions used by ``models/lm.py``:
+  * ``block_init``        — params for one layer
+  * ``block_apply_seq``   — full-sequence path (train / prefill)
+  * ``block_apply_step``  — single-token decode path against a cache entry
+  * ``block_init_cache``  — that layer's decode-state allocation
+
+Kinds: ``attn`` | ``local_attn`` | ``rglru`` | ``mlstm`` | ``slstm``.
+All blocks are pre-norm with a shared residual stream.  Local attention
+uses a rotating window cache: slot = position mod window — after the
+window fills, *every* slot is one of the last W positions, so decode
+attends over all slots without an extra mask (softmax is permutation
+invariant; RoPE is applied at write time).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, moe, rglru, xlstm
+from repro.models.layers import apply_norm, mlp, mlp_init, norm_init
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def block_init(
+    rng, cfg: ModelConfig, kind: str, *, cross: bool = False, dtype=jnp.float32
+) -> Dict:
+    ks = jax.random.split(rng, 8)
+    p: Dict = {"ln1": norm_init(cfg.d_model, cfg.norm, dtype)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = attention.attn_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rglru"] = rglru.rglru_init(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.slstm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:  # whisper decoder cross-attention sub-block
+        p["cross_ln"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["cross_attn"] = attention.attn_init(ks[1], cfg, dtype)
+    if cfg.d_ff > 0 and kind != "slstm":
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        if cfg.n_experts:
+            p["moe"] = moe.moe_init(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-sequence apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_apply_seq(
+    p: Dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    positions: jax.Array,  # (B, S)
+    causal: bool = True,
+    encoder_out: Optional[jax.Array] = None,
+    moe_cf: Optional[float] = 1.25,
+    name: str = "",
+):
+    """Returns (x_out, aux_loss, state) where state is the prefill->decode
+    handoff: (k, v) for attention kinds, the recurrent state otherwise."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else 0
+        out, state = attention.full_attention(
+            p["attn"], h, cfg, positions=positions, window=window,
+            causal=causal, name=name + ".attn",
+        )
+    elif kind == "rglru":
+        out, state = rglru.rglru_seq(p["rglru"], h, cfg, name + ".rglru")
+    elif kind == "mlstm":
+        out, state = xlstm.mlstm_seq(p["mlstm"], h, cfg, name + ".mlstm")
+    elif kind == "slstm":
+        out, state = xlstm.slstm_seq(p["slstm"], h, cfg, name + ".slstm")
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if "cross_attn" in p and encoder_out is not None:
+        h = apply_norm(p["cross_ln"], x, cfg.norm)
+        ck, cv = cross_kv(p["cross_attn"], encoder_out, cfg)
+        out, _ = attention.full_attention(
+            p["cross_attn"], h, cfg, positions=positions,
+            cross_kv=(ck, cv), causal=False, name=name + ".cross",
+        )
+        x = x + out
+    if "mlp" in p or "moe" in p:
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        if cfg.n_experts:
+            out, aux = moe.moe_apply(p["moe"], h, cfg,
+                                     capacity_factor=moe_cf, name=name + ".moe")
+        else:
+            out = mlp(p["mlp"], h, cfg.activation, name + ".mlp")
+        x = x + out
+    return x, aux, state
+
+
+def cross_kv(p_attn, encoder_out, cfg: ModelConfig):
+    """K,V of the encoder output through the cross-attn k/v weights.
+    Returns k, v of shape (B, Se, Hkv, hd) — also used to fill the static
+    cross cache at prefill."""
+    from repro.models.layers import linear
+
+    B, Se = encoder_out.shape[:2]
+    k = linear(p_attn["k"], encoder_out, "cross.k").reshape(
+        B, Se, cfg.n_kv_heads, cfg.head_dim)
+    v = linear(p_attn["v"], encoder_out, "cross.v").reshape(
+        B, Se, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# decode cache + step
+# ---------------------------------------------------------------------------
+
+
+def block_init_cache(
+    cfg: ModelConfig, kind: str, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> Dict:
+    if kind == "attn":
+        S = max_seq
+    elif kind == "local_attn":
+        S = min(cfg.window, max_seq)
+    else:
+        S = 0
+    if kind in ("attn", "local_attn"):
+        shape = (batch, cfg.n_kv_heads, S, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "rglru":
+        return rglru.rglru_init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_apply_step(
+    p: Dict,
+    x: jax.Array,  # (B, 1, d)
+    cache: Dict,
+    lengths: jax.Array,  # (B,) tokens generated so far (cache fill level)
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    cross_cache: Optional[Dict] = None,
+    enc_lengths: Optional[jax.Array] = None,
+    moe_cf: Optional[float] = None,  # None = exact capacity (tiny batches)
+    name: str = "",
+) -> Tuple[jax.Array, Dict]:
+    """Returns (x_out (B,1,d), new_cache)."""
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if kind in ("attn", "local_attn"):
+        if kind == "local_attn":
+            W = cache["k"].shape[2]
+            slots = lengths % W
+            eff_len = jnp.minimum(lengths, W)  # valid entries before write
+            out, k_c, v_c = _decode_attn_rotating(
+                p["attn"], h, cfg, cache, slots, eff_len, lengths, name
+            )
+        else:
+            out, k_c, v_c = attention.decode_attention(
+                p["attn"], h, cfg, cache["k"], cache["v"], lengths,
+                name=name + ".attn",
+            )
+        cache = {"k": k_c, "v": v_c}
+    elif kind == "rglru":
+        out, cache = rglru.rglru_step(p["rglru"], h, cache, cfg, name + ".rglru")
+    elif kind == "mlstm":
+        out, cache = xlstm.mlstm_step(p["mlstm"], h, cache, cfg, name + ".mlstm")
+    elif kind == "slstm":
+        out, cache = xlstm.slstm_step(p["slstm"], h, cache, cfg, name + ".slstm")
+    else:
+        raise ValueError(kind)
+    x = x + out
+    if "cross_attn" in p and cross_cache is not None:
+        h = apply_norm(p["cross_ln"], x, cfg.norm)
+        out, _, _ = attention.decode_attention(
+            p["cross_attn"], h, cfg, cross_cache["k"], cross_cache["v"],
+            enc_lengths, cross=True, name=name + ".cross",
+        )
+        x = x + out
+    if "mlp" in p or "moe" in p:
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        if cfg.n_experts:
+            # default: exact capacity so decode == forward bit-for-bit;
+            # at fleet batch sizes the dry-run passes a finite factor
+            out, _ = moe.moe_apply(p["moe"], h, cfg, capacity_factor=moe_cf,
+                                   name=name + ".moe")
+        else:
+            out = mlp(p["mlp"], h, cfg.activation, name + ".mlp")
+        x = x + out
+    return x, cache
+
+
+def _decode_attn_rotating(
+    p_attn, h, cfg: ModelConfig, cache, slots, eff_len, abs_pos, name
+):
+    """Sliding-window decode: write at slot pos%W, attend over filled slots."""
+    from repro.kernels import ops
+    from repro.models.layers import linear, rope
+
+    B = h.shape[0]
+    q, k, v = attention._project_qkv(p_attn, cfg, h, name)
+    if cfg.pos == "rope":
+        pos = abs_pos[:, None]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    k_c = cache["k"].at[jnp.arange(B), :, slots].set(
+        k[:, 0].astype(cache["k"].dtype)
+    )
+    v_c = cache["v"].at[jnp.arange(B), :, slots].set(
+        v[:, 0].astype(cache["v"].dtype)
+    )
+    out = ops.mha_decode(q[:, 0], k_c, v_c, eff_len + 1)
+    out = linear(p_attn["out"], out.reshape(B, 1, cfg.q_dim), name + ".out")
+    return out, k_c, v_c

@@ -1,0 +1,157 @@
+"""Shared layer primitives: norms, RoPE, activations, embeddings, linear.
+
+All layers are pure functions over param pytrees.  ``linear`` is the single
+entry point for every matmul in the framework: it executes dense (training)
+or W8A8-quantized (serving, via the Fused MP kernel) depending on which
+params are present, and feeds the SmoothQuant calibration recorder when a
+calibration context is active.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import ops
+
+# ---------------------------------------------------------------------------
+# Linear (dense or quantized)
+# ---------------------------------------------------------------------------
+
+
+def linear_init(rng, d_in: int, d_out: int, dtype=jnp.float32, bias=False):
+    scale = 1.0 / (d_in**0.5)
+    p = {"w": jax.random.normal(rng, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Dict[str, jax.Array], x: jax.Array, name: str = "", *,
+           backend: str = "auto") -> jax.Array:
+    """x: (..., K) -> (..., N).  Dense or W8A8 depending on params."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    if "w_q" in p:  # quantized serving path -> Fused MP MDK
+        xs = x2.astype(jnp.float32) * (1.0 / p["smooth"])[None, :]
+        x_q, x_scale = quant.quantize_act(xs)
+        y = ops.quant_matmul(
+            x_q, p["w_q"], x_scale, p["w_scale"], p.get("bias"),
+            out_dtype=x.dtype, backend=backend,
+        )
+    else:
+        quant.record_act_stats(name, x2)
+        y = jnp.dot(x2, p["w"].astype(x.dtype))
+        if "b" in p:
+            y = y + p["b"].astype(x.dtype)
+    return y.reshape(*lead, y.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    p = {"w": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    elif kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["w"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    while ang.ndim < x.ndim:  # broadcast over head dim if present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+
+def activation_fn(name: str):
+    return {
+        "swiglu": jax.nn.silu,
+        "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+        "gelu_mlp": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu2_mlp": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def mlp_init(rng, d: int, d_ff: int, activation: str, dtype=jnp.float32):
+    gated = activation in ("swiglu", "geglu")
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {
+        "up": linear_init(k1, d, d_ff, dtype),
+        "down": linear_init(k2, d_ff, d, dtype),
+    }
+    if gated:
+        # gate/up as separate column-sharded weights: a fused [gate|up]
+        # matmul splits into *different shard groups* under TP, forcing a
+        # collective-permute of both halves (measured 1.2e12 wire B/step
+        # on llama3 train; EXPERIMENTS.md §Perf it5)
+        p["gate"] = linear_init(k3, d, d_ff, dtype)
+    return p
+
+
+def mlp(p, x, activation: str, name: str = ""):
+    """Gated (swiglu/geglu) or plain 2-layer MLP.  Gate+up are separate
+    TP-aligned matmuls issued back-to-back on the Fused-MP MDK — the
+    paper's 'all linear layers reuse one MP kernel'."""
+    act = activation_fn(activation)
+    h = linear(p["up"], x, name + ".up")
+    if activation in ("swiglu", "geglu"):
+        h = act(linear(p["gate"], x, name + ".gate")) * h
+    else:
+        h = act(h)
+    return linear(p["down"], h, name + ".down")
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(rng, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x: jax.Array) -> jax.Array:
+    """Logits via tied embedding transpose."""
+    return jnp.dot(x, p["table"].astype(x.dtype).T)

@@ -1,0 +1,588 @@
+"""Model assembly: decoder-only LMs (dense / MoE / hybrid / ssm / vlm) and
+the whisper encoder-decoder, with a unified step API:
+
+  init / init_abstract      -> param pytree (abstract for the dry-run)
+  forward                   -> logits over a full sequence (train path)
+  loss_fn                   -> next-token CE (+ MoE aux)
+  init_cache / prefill / decode_step -> serving path
+
+Layers are *stacked per pattern-period* and executed with ``jax.lax.scan``
+so the lowered HLO is O(period), not O(n_layers) — essential for the
+61-layer kimi dry-run and fast multi-pod compiles.  Remainder layers
+(n_layers % period) run unscanned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, blocks
+from repro.models.layers import apply_norm, embed, embed_init, linear, \
+    linear_init, norm_init, unembed
+
+
+def _period(cfg: ModelConfig) -> int:
+    return len(cfg.block_pattern)
+
+
+def _layer_counts(cfg: ModelConfig) -> Tuple[int, int]:
+    p = _period(cfg)
+    return cfg.n_layers // p, cfg.n_layers % p
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, rng: jax.Array, *, max_seq: int = 0,
+         layout: str = "stacked", dtype=jnp.float32) -> Dict:
+    """``layout="stacked"``: per-period stacked params executed with
+    ``lax.scan`` (small HLO; training default).  ``layout="layers"``: one
+    param subtree per layer (periods empty, everything in "rest") — the
+    serving/dry-run layout: per-layer buffers avoid whole-stack slice
+    fusions that both inflate HloCostAnalysis bytes and cost real copies
+    at scan boundaries."""
+    n_per, n_rest = _layer_counts(cfg)
+    if layout == "layers":
+        n_per, n_rest = 0, cfg.n_layers
+    period = _period(cfg)
+    cross = cfg.is_encoder_decoder
+    keys = jax.random.split(rng, n_per + n_rest + 8)
+    ki = iter(range(len(keys)))
+
+    def one_period(k):
+        ks = jax.random.split(k, period)
+        return tuple(
+            blocks.block_init(ks[i], cfg, cfg.block_pattern[i], cross=cross,
+                              dtype=dtype)
+            for i in range(period)
+        )
+
+    params: Dict = {
+        "embed": embed_init(keys[next(ki)], cfg.vocab_size, cfg.d_model, dtype),
+        "periods": _stack([one_period(keys[next(ki)]) for _ in range(n_per)])
+        if n_per else (),
+        "rest": [
+            blocks.block_init(
+                keys[next(ki)], cfg, cfg.block_kind(n_per * period + i),
+                cross=cross, dtype=dtype)
+            for i in range(n_rest)
+        ],
+        "final_ln": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.pos == "learned":
+        assert max_seq > 0, "learned positions need max_seq at init"
+        params["pos_embed"] = (
+            jax.random.normal(keys[next(ki)], (max_seq, cfg.d_model), dtype)
+            * 0.01
+        )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(
+            keys[next(ki)], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.is_encoder_decoder:
+        ks = jax.random.split(keys[next(ki)], cfg.n_encoder_layers + 2)
+        enc_blocks = [blocks.block_init(ks[i], cfg, "attn", dtype=dtype)
+                      for i in range(cfg.n_encoder_layers)]
+        params["encoder"] = {
+            "layers": (enc_blocks if layout == "layers"
+                       else _stack(enc_blocks)),
+            "final_ln": norm_init(cfg.d_model, cfg.norm, dtype),
+            "pos_embed": jax.random.normal(
+                ks[-1], (cfg.encoder_seq, cfg.d_model), dtype) * 0.01,
+        }
+    return params
+
+
+def init_abstract(cfg: ModelConfig, *, max_seq: int = 0,
+                  layout: str = "stacked", dtype=jnp.float32):
+    """ShapeDtypeStruct pytree — dry-run params without any allocation."""
+    return jax.eval_shape(
+        lambda: init(cfg, jax.random.PRNGKey(0), max_seq=max_seq,
+                     layout=layout, dtype=dtype)
+    )
+
+
+def _n_per_from(params_or_cache) -> int:
+    """Infer the stacked-period count from the pytree structure (0 for
+    the per-layer "layers" layout where "periods" is empty)."""
+    leaves = jax.tree_util.tree_leaves(params_or_cache["periods"])
+    return leaves[0].shape[0] if leaves else 0
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jax.Array,
+           unroll: bool = False) -> jax.Array:
+    """frames: (B, Se, d) stub embeddings -> encoder output (B, Se, d)."""
+    enc = params["encoder"]
+    B, Se, _ = frames.shape
+    x = frames + enc["pos_embed"][None, :Se].astype(frames.dtype)
+    positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+
+    def body(x, layer_p):
+        x, _, _ = blocks.block_apply_seq(
+            layer_p, x, cfg, "attn", positions=positions, causal=False)
+        return x, None
+
+    if isinstance(enc["layers"], list):  # per-layer layout
+        for layer_p in enc["layers"]:
+            x, _ = body(x, layer_p)
+    elif unroll:
+        for li in range(cfg.n_encoder_layers):
+            x, _ = body(x, jax.tree_util.tree_map(
+                lambda t: t[li], enc["layers"]))
+    else:
+        x, _ = jax.lax.scan(body, x, enc["layers"])
+    return apply_norm(enc["final_ln"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill interior)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) int32
+    *,
+    frames: Optional[jax.Array] = None,  # whisper encoder stub input
+    patches: Optional[jax.Array] = None,  # vlm patch-embedding stub input
+    remat: bool = False,
+    capture_state: bool = False,
+    moe_cf: Optional[float] = 1.25,
+    unroll_periods: bool = False,  # python-loop periods (eager calibration)
+    dtype=jnp.bfloat16,
+):
+    """Returns (logits (B, S_total, V), aux_loss, states | None, enc_out).
+
+    ``capture_state`` additionally returns every layer's prefill->decode
+    handoff state ((k, v) for attention, recurrent state otherwise) as
+    {"periods": stacked-per-period, "rest": [..]} — used by batch_prefill.
+    """
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, dtype)
+    if patches is not None:  # vlm: prepend patch embeddings
+        x = jnp.concatenate([patches.astype(dtype), x], axis=1)
+    S_tot = x.shape[1]
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"][None, :S_tot].astype(dtype)
+    positions = jnp.broadcast_to(jnp.arange(S_tot)[None], (B, S_tot))
+    encoder_out = None
+    if cfg.is_encoder_decoder:
+        assert frames is not None
+        encoder_out = encode(params, cfg, frames.astype(dtype),
+                             unroll=unroll_periods)
+
+    period = _period(cfg)
+    n_per = _n_per_from(params)
+    n_rest = cfg.n_layers - n_per * period if n_per else len(params["rest"])
+
+    def period_body(carry, layer_p):
+        x, aux = carry
+        states = []
+        for i in range(period):
+            x, a, st = blocks.block_apply_seq(
+                layer_p[i], x, cfg, cfg.block_pattern[i],
+                positions=positions, encoder_out=encoder_out,
+                moe_cf=moe_cf, name=f"p{i}",
+            )
+            aux = aux + a
+            if capture_state:
+                states.append(st)
+        return (x, aux), (tuple(states) if capture_state else None)
+
+    if n_per == 0:
+        x, aux = x, jnp.zeros((), jnp.float32)
+        per_states = None
+    elif unroll_periods:
+        # python-loop path: eager SmoothQuant calibration + exact per-layer
+        # HLO for the dry-run cost/collective analysis
+        pbody = jax.checkpoint(period_body) if remat else period_body
+        carry = (x, jnp.zeros((), jnp.float32))
+        collected = []
+        for pi in range(n_per):
+            layer_p = jax.tree_util.tree_map(
+                lambda t: t[pi], params["periods"])
+            carry, st = pbody(carry, layer_p)
+            collected.append(st)
+        (x, aux) = carry
+        per_states = _stack(collected) if capture_state else None
+    else:
+        body = jax.checkpoint(period_body) if remat else period_body
+        (x, aux), per_states = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["periods"])
+
+    rest_states = []
+    for j, layer_p in enumerate(params["rest"]):
+        li = n_per * period + j
+        fn = functools.partial(
+            blocks.block_apply_seq, cfg=cfg, kind=cfg.block_kind(li),
+            positions=positions, encoder_out=encoder_out, moe_cf=moe_cf,
+            name=f"r{j}")
+        if remat and n_per == 0:
+            fn = jax.checkpoint(fn)
+        x, a, st = fn(layer_p, x)
+        aux = aux + a
+        if capture_state:
+            rest_states.append(st)
+
+    x = apply_norm(params["final_ln"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = linear(params["lm_head"], x, "lm_head")
+    states = (
+        {"periods": per_states, "rest": rest_states}
+        if capture_state else None
+    )
+    return logits, aux, states, encoder_out
+
+
+def loss_fn(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    remat: bool = False,
+    aux_weight: float = 0.01,
+    unroll_periods: bool = False,
+):
+    """Next-token cross-entropy. batch: tokens (B, S) [+ frames/patches]."""
+    tokens = batch["tokens"]
+    logits, aux, _, _ = forward(
+        params, cfg, tokens, frames=batch.get("frames"),
+        patches=batch.get("patches"), remat=remat,
+        unroll_periods=unroll_periods)
+    # predict token t+1 from position t (text region only)
+    n_prefix = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, n_prefix:]
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    # vocab-sharding-friendly CE: the gold logit is a one-hot *contraction*
+    # over the (sharded) vocab dim — a take_along_axis gather here forces
+    # GSPMD to all-gather the full (B, S, V) logits (measured 2.3e12 wire
+    # bytes/step on llama3 train_4k; EXPERIMENTS.md §Perf it4).
+    onehot = jax.nn.one_hot(tgt, lg.shape[-1], dtype=lg.dtype)
+    gold = jnp.einsum(
+        "bsv,bsv->bs", lg, onehot, preferred_element_type=jnp.float32)
+    # stable logsumexp: max in storage dtype, f32 accumulation
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1))
+    shifted = lg - m[..., None]
+    sumexp = jnp.sum(jnp.exp(shifted.astype(jnp.float32)), axis=-1)
+    lse = m.astype(jnp.float32) + jnp.log(sumexp)
+    ce = jnp.mean(lse - gold)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               layout: str = "stacked", dtype=jnp.bfloat16) -> Dict:
+    period = _period(cfg)
+    n_per, n_rest = _layer_counts(cfg)
+    if layout == "layers":
+        n_per, n_rest = 0, cfg.n_layers
+
+    def one_period():
+        return tuple(
+            blocks.block_init_cache(cfg, cfg.block_pattern[i], batch,
+                                    max_seq, dtype)
+            for i in range(period)
+        )
+
+    cache: Dict = {
+        "periods": _stack([one_period() for _ in range(n_per)])
+        if n_per else (),
+        "rest": [
+            blocks.block_init_cache(
+                cfg, cfg.block_kind(n_per * period + j), batch, max_seq, dtype)
+            for j in range(n_rest)
+        ],
+    }
+    if cfg.is_encoder_decoder:
+        shape = (batch, cfg.n_kv_heads, cfg.encoder_seq, cfg.head_dim)
+        cache["cross"] = {
+            "periods": _stack([
+                tuple({"k": jnp.zeros(shape, dtype),
+                       "v": jnp.zeros(shape, dtype)}
+                      for _ in range(period))
+                for _ in range(n_per)
+            ]) if n_per else (),
+            "rest": [
+                {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+                for _ in range(n_rest)
+            ],
+        }
+    return cache
+
+
+def init_cache_abstract(cfg, batch, max_seq, layout: str = "stacked",
+                        dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_seq, layout=layout, dtype=dtype))
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1) int32 — the newly generated token
+    cache: Dict,
+    lengths: jax.Array,  # (B,) i32 — positions already in cache
+    *,
+    enc_lengths: Optional[jax.Array] = None,
+    unroll_periods: bool = False,  # exact per-layer HLO for the dry-run
+    moe_cf: Optional[float] = None,
+    dtype=jnp.bfloat16,
+):
+    """One auto-regressive step. Returns (logits (B, V), new_cache)."""
+    B = token.shape[0]
+    x = embed(params["embed"], token, dtype)  # (B, 1, d)
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"].astype(dtype)[lengths][:, None]
+    period = _period(cfg)
+    n_per = _n_per_from(params)
+
+    has_cross = cfg.is_encoder_decoder
+
+    def period_body(x, scanned):
+        layer_p, layer_c = scanned[0], scanned[1]
+        cross_c = scanned[2] if has_cross else None
+        new_c = []
+        for i in range(period):
+            x, c = blocks.block_apply_step(
+                layer_p[i], x, layer_c[i], lengths, cfg,
+                cfg.block_pattern[i],
+                cross_cache=(cross_c[i] if has_cross else None),
+                enc_lengths=enc_lengths, moe_cf=moe_cf, name=f"p{i}")
+            new_c.append(c)
+        return x, tuple(new_c)
+
+    if n_per == 0:
+        new_periods = cache["periods"]
+    else:
+        scanned = (params["periods"], cache["periods"])
+        if has_cross:
+            scanned = scanned + (cache["cross"]["periods"],)
+        if unroll_periods:
+            outs = []
+            for pi in range(n_per):
+                sl = jax.tree_util.tree_map(lambda t: t[pi], scanned)
+                x, c = period_body(x, sl)
+                outs.append(c)
+            new_periods = _stack(outs)
+        else:
+            x, new_periods = jax.lax.scan(period_body, x, scanned)
+
+    new_rest = []
+    for j, layer_p in enumerate(params["rest"]):
+        li = n_per * period + j
+        x, c = blocks.block_apply_step(
+            layer_p, x, cache["rest"][j], lengths, cfg, cfg.block_kind(li),
+            cross_cache=(cache["cross"]["rest"][j] if has_cross else None),
+            enc_lengths=enc_lengths, moe_cf=moe_cf, name=f"r{j}")
+        new_rest.append(c)
+
+    x = apply_norm(params["final_ln"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = linear(params["lm_head"], x, "lm_head")
+    new_cache = dict(cache)
+    new_cache["periods"] = new_periods
+    new_cache["rest"] = new_rest
+    return logits[:, 0], new_cache
+
+
+def prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) right-padded prompt
+    prompt_lengths: jax.Array,  # (B,)
+    cache: Dict,
+    *,
+    frames: Optional[jax.Array] = None,
+    patches: Optional[jax.Array] = None,
+    dtype=jnp.bfloat16,
+):
+    """Sequential prefill: replays the prompt through ``decode_step``.
+
+    Simple and exactly consistent with decode (one code path); the batched
+    full-sequence prefill lives in ``serving/engine.py`` for the prefill_32k
+    shape where it matters.  Returns (last_logits, cache, lengths).
+    """
+    B, S = tokens.shape
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, frames.astype(dtype))
+        cache = _fill_cross_cache(params, cfg, cache, enc_out)
+        enc_lengths = jnp.full((B,), enc_out.shape[1], jnp.int32)
+    else:
+        enc_lengths = None
+
+    def body(carry, t):
+        cache, lengths, last = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        logits, cache = decode_step(
+            params, cfg, tok, cache, lengths, enc_lengths=enc_lengths,
+            dtype=dtype)
+        active = (t < prompt_lengths).astype(jnp.int32)
+        lengths = lengths + active
+        last = jnp.where((t == prompt_lengths - 1)[:, None], logits, last)
+        return (cache, lengths, last), None
+
+    V = cfg.vocab_size
+    init_carry = (
+        cache,
+        jnp.zeros((B,), jnp.int32),
+        jnp.zeros((B, V), jnp.float32),
+    )
+    (cache, lengths, last), _ = jax.lax.scan(
+        body, init_carry, jnp.arange(S))
+    return last, cache, lengths
+
+
+def batch_prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S) prompt, uniform length (padded)
+    cache: Dict,
+    *,
+    frames: Optional[jax.Array] = None,
+    patches: Optional[jax.Array] = None,
+    unroll_periods: bool = False,
+    moe_cf: Optional[float] = None,  # None = exact (small batches only!)
+    dtype=jnp.bfloat16,
+):
+    """Parallel prefill: one full-sequence forward captures every layer's
+    state and scatters it into the decode cache (paper Fig 1 prefill stage).
+
+    Prompts are uniform-length here (the engine left-packs ragged batches);
+    per-request raggedness is handled by the sequential :func:`prefill`.
+    Returns (last_logits (B, V), cache, lengths).
+    """
+    B, S = tokens.shape
+    logits, _, states, enc_out = forward(
+        params, cfg, tokens, frames=frames, patches=patches,
+        capture_state=True, moe_cf=moe_cf, unroll_periods=unroll_periods,
+        dtype=dtype)
+    n_prefix = logits.shape[1] - S  # vlm patch prefix length
+
+    period = _period(cfg)
+    n_per = _n_per_from(params)
+    n_rest = cfg.n_layers - n_per * period if n_per else len(params["rest"])
+
+    def to_cache(kind: str, state, entry):
+        if kind in ("attn", "local_attn"):
+            k, v = state  # (B, S_tot, Hkv, hd)
+            k = k.swapaxes(1, 2).astype(entry["k"].dtype)
+            v = v.swapaxes(1, 2).astype(entry["v"].dtype)
+            S_tot = k.shape[2]
+            W = entry["k"].shape[2]
+            if kind == "local_attn" and S_tot >= W:
+                pos = jnp.arange(S_tot - W, S_tot)
+                slots = pos % W
+                kw = jnp.zeros_like(entry["k"]).at[:, :, slots].set(
+                    k[:, :, S_tot - W :])
+                vw = jnp.zeros_like(entry["v"]).at[:, :, slots].set(
+                    v[:, :, S_tot - W :])
+                return {"k": kw, "v": vw}
+            pad = entry["k"].shape[2] - S_tot
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            return {"k": k, "v": v}
+        # recurrent kinds: state pytree is the cache entry (match dtypes)
+        return jax.tree_util.tree_map(
+            lambda s, e: s.astype(e.dtype), state, entry)
+
+    new_cache = dict(cache)
+    new_cache["periods"] = (
+        _prefill_periods(cfg, states, cache, period) if n_per
+        else cache["periods"])
+    new_cache["rest"] = [
+        to_cache(cfg.block_kind(n_per * period + j), states["rest"][j],
+                 cache["rest"][j])
+        for j in range(n_rest)
+    ]
+    if cfg.is_encoder_decoder:
+        new_cache = _fill_cross_cache(params, cfg, new_cache, enc_out,
+                                      unroll=unroll_periods)
+    lengths = jnp.full((B,), S + n_prefix, jnp.int32)
+    return logits[:, -1].astype(jnp.float32), new_cache, lengths
+
+
+def _prefill_periods(cfg, states, cache, period):
+    """vmap the state->cache conversion over the stacked period axis."""
+    out = []
+    for i in range(period):
+        kind = cfg.block_kind(i)
+        st = states["periods"][i]
+        entry = cache["periods"][i]
+        if kind in ("attn", "local_attn"):
+            k, v = st  # (n_per, B, S_tot, Hkv, hd)
+            k = k.swapaxes(2, 3).astype(entry["k"].dtype)
+            v = v.swapaxes(2, 3).astype(entry["v"].dtype)
+            S_tot = k.shape[3]
+            W = entry["k"].shape[3]
+            if kind == "local_attn" and S_tot >= W:
+                pos = jnp.arange(S_tot - W, S_tot)
+                slots = pos % W
+                kw = jnp.zeros_like(entry["k"]).at[:, :, :, slots].set(
+                    k[:, :, :, S_tot - W :])
+                vw = jnp.zeros_like(entry["v"]).at[:, :, :, slots].set(
+                    v[:, :, :, S_tot - W :])
+                out.append({"k": kw, "v": vw})
+                continue
+            pad = W - S_tot
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+            out.append({"k": k, "v": v})
+        else:
+            out.append(jax.tree_util.tree_map(
+                lambda s, e: s.astype(e.dtype), st, entry))
+    return tuple(out)
+
+
+def _fill_cross_cache(params, cfg, cache, enc_out, unroll: bool = False):
+    period = _period(cfg)
+    n_per = _n_per_from(params)
+
+    def fill(layer_p):
+        k, v = blocks.cross_kv(layer_p["cross_attn"], enc_out, cfg)
+        # cache layout (B, Hkv, Se, hd)
+        return {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+
+    def period_fill(layer_ps):
+        return tuple(fill(layer_ps[i]) for i in range(period))
+
+    cross = dict(cache["cross"])
+    if n_per == 0:
+        cross["periods"] = cache["cross"]["periods"]
+    elif unroll:
+        cross["periods"] = _stack([
+            period_fill(jax.tree_util.tree_map(
+                lambda t: t[pi], params["periods"]))
+            for pi in range(n_per)
+        ])
+    else:
+        cross["periods"] = jax.lax.map(period_fill, params["periods"])
+    cross["rest"] = [fill(p) for p in params["rest"]]
+    cache = dict(cache)
+    cache["cross"] = cross
+    return cache

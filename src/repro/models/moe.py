@@ -1,0 +1,110 @@
+"""Top-k MoE layer with capacity-based dispatch (expert-parallel friendly).
+
+Dispatch is scatter/gather based (no (T, E, C) one-hot einsums): token->slot
+ranks are computed with a sort, tokens are scattered into an (E, C, d)
+buffer, expert FFNs run as one batched einsum with E sharded over the
+``model`` mesh axis (expert parallelism), and results gather straight back.
+Tokens beyond an expert's capacity are dropped (standard capacity-factor
+semantics); gather of dropped slots fills zeros so gradients stay correct.
+
+The per-expert FFN matmuls ride the same Fused MP MDK economics as dense
+layers — in the scheduler's stage program they appear as ``moe_up`` /
+``moe_down`` activations of the MP kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import activation_fn, linear_init
+
+
+def moe_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    gated = cfg.activation in ("swiglu", "geglu")
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s_in = 1.0 / (d**0.5)
+    s_out = 1.0 / (f**0.5)
+    p = {
+        "router": linear_init(k1, d, E, jnp.float32),
+        "w_up": jax.random.normal(k2, (E, d, f), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (E, f, d), dtype) * s_out,
+    }
+    if gated:  # separate gate bank: TP-aligned (see layers.mlp_init)
+        p["w_gate"] = jax.random.normal(k4, (E, d, f), dtype) * s_in
+    return p
+
+
+def moe_apply(
+    p: Dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    capacity_factor: float | None = 1.25,
+    name: str = "",
+):
+    """Returns (out (B,S,d), aux_loss scalar).
+
+    ``capacity_factor=None`` selects *exact* capacity (C = T*k, nothing can
+    drop) — used on the serving path where decode(x) must equal forward(x).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    xt = x.reshape(T, d)
+
+    # --- router (fp32 for numerics) ---
+    logits = jnp.dot(xt.astype(jnp.float32), p["router"]["w"])  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # --- load-balancing aux loss (Switch-style) ---
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1),
+        axis=0,
+    )
+    aux = E * jnp.sum(me * ce)
+
+    # --- slot assignment: rank of each (token, choice) within its expert ---
+    if capacity_factor is None:
+        C = T * k  # exact: worst case all choices land on one expert
+    else:
+        C = max(1, int(capacity_factor * k * T / E))
+    flat_e = expert_idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    # position within the sorted run of each expert
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))  # (E,)
+    rank_sorted = jnp.arange(T * k) - seg_start[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)  # (T*k,)
+    slot = jnp.where(rank < C, rank, C)  # C == drop sentinel (out of range)
+
+    # --- scatter tokens into the (E, C, d) expert buffer ---
+    tok_of_choice = jnp.repeat(jnp.arange(T), k)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[flat_e, slot].set(xt[tok_of_choice], mode="drop")
+
+    # --- expert FFN: batched over E (EP over data axes, TP over model) ---
+    act = activation_fn(cfg.activation)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    # --- gather back and combine with gate weights ---
+    y = y_buf.at[flat_e, slot].get(
+        mode="fill", fill_value=0
+    )  # (T*k, d); dropped slots -> 0
+    y = y.reshape(T, k, d) * gate_vals[..., None].astype(x.dtype)
+    out = jnp.sum(y, axis=1).reshape(B, S, d)
+    return out, aux

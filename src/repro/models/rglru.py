@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(x_t W_r + b_r)           (recurrence gate)
+    i_t = sigmoid(x_t W_i + b_i)           (input gate)
+    a_t = exp(c * r_t * log(a))     with a = sigmoid(Lambda), c = -8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill run the recurrence as a ``jax.lax.associative_scan`` over
+the sequence (h_t = a_t h_{t-1} + b_t is associative) — the sub-quadratic
+property that makes the long_500k shape runnable.  Decode is a single
+constant-memory step.  A width-4 causal conv precedes the gating, with its
+3-sample tail kept in the decode state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import linear, linear_init
+
+_C = 8.0
+_CONV_W = 4
+
+
+def rglru_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(rng, 6)
+    return {
+        "in_proj": linear_init(ks[0], d, 2 * w, dtype),  # [x | gate] branch
+        "conv": jax.random.normal(ks[1], (_CONV_W, w), dtype) * 0.3,
+        "w_r": linear_init(ks[2], w, w, dtype, bias=True),
+        "w_i": linear_init(ks[3], w, w, dtype, bias=True),
+        # Lambda init so a = sigmoid(L) in (0.9, 0.999) — Griffin appx
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[4], (w,), jnp.float32, 2.2, 6.9)
+        ),
+        "out_proj": linear_init(ks[5], w, d, dtype),
+    }
+
+
+def _gates(p, xw):
+    r = jax.nn.sigmoid(linear(p["w_r"], xw.astype(jnp.float32)))
+    i = jax.nn.sigmoid(linear(p["w_i"], xw.astype(jnp.float32)))
+    log_a_base = jax.nn.log_sigmoid(p["lam"])  # log a  (a in (0,1))
+    log_a = _C * r * log_a_base  # (..., w)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-9)) * (
+        i * xw.astype(jnp.float32)
+    )
+    return a, b
+
+
+def rglru_seq(p: Dict, x: jax.Array, cfg: ModelConfig, name: str = ""):
+    """Full-sequence path. x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    h = linear(p["in_proj"], x, name + ".in")  # (B, S, 2w)
+    xw, gate = jnp.split(h, 2, axis=-1)
+    # causal conv width 4 (f32 accumulation — matches the decode step)
+    xp = jnp.pad(xw.astype(jnp.float32), ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+    conv = sum(
+        xp[:, i : i + S] * p["conv"][i].astype(jnp.float32)[None, None]
+        for i in range(_CONV_W)
+    )
+    a, b = _gates(p, conv)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = hseq.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(
+        x.dtype
+    )
+    # final recurrent state for prefill->decode handoff
+    tail = jnp.pad(xw, ((0, 0), (max(0, _CONV_W - 1 - S), 0), (0, 0)))[
+        :, -(_CONV_W - 1) :
+    ]
+    state = {"h": hseq[:, -1], "conv_tail": tail}
+    return linear(p["out_proj"], y, name + ".out"), state
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv_tail": jnp.zeros((batch, _CONV_W - 1, w), dtype),
+    }
+
+
+def rglru_step(
+    p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, name: str = ""
+) -> Tuple[jax.Array, Dict]:
+    """Decode step. x: (B, 1, d) -> (B, 1, d), new state."""
+    B = x.shape[0]
+    h = linear(p["in_proj"], x[:, 0], name + ".in")  # (B, 2w)
+    xw, gate = jnp.split(h, 2, axis=-1)
+    hist = jnp.concatenate(
+        [state["conv_tail"], xw[:, None].astype(state["conv_tail"].dtype)],
+        axis=1,
+    )  # (B, 4, w)
+    conv = jnp.einsum("btw,tw->bw", hist.astype(jnp.float32), p["conv"].astype(jnp.float32))
+    a, b = _gates(p, conv)
+    h_new = a * state["h"] + b
+    y = h_new.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(
+        x.dtype
+    )
+    out = linear(p["out_proj"], y, name + ".out")[:, None]
+    return out, {"h": h_new, "conv_tail": hist[:, 1:]}

@@ -1,0 +1,176 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+exponential gating), per arXiv:2405.04517.
+
+Both are attention-free, constant-state recurrences => sub-quadratic, so
+xlstm-350m runs the long_500k shape.  Sequence paths use ``jax.lax.scan``
+with the paper's max-stabilizer for the exponential gates; decode paths are
+single steps over the same cell functions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import linear, linear_init
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    return {
+        "qkv": linear_init(ks[0], d, cfg.q_dim + 2 * cfg.kv_dim, dtype),
+        # per-head scalar input/forget gates + output gate over features
+        "gates": linear_init(ks[1], d, 2 * cfg.n_heads, jnp.float32, bias=True),
+        "o_gate": linear_init(ks[2], d, cfg.q_dim, dtype),
+        "out": linear_init(ks[3], cfg.q_dim, d, dtype),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_cell(state, inputs):
+    """One stabilized mLSTM step. q/k/v: (B, H, hd); li/lf: (B, H) logs."""
+    q, k, v, li, lf = inputs
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)[..., None]  # (B, H, 1)
+    f_p = jnp.exp(lf + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (
+        v[..., :, None] * k[..., None, :]
+    )  # (B, H, hd, hd)  outer(v, k)
+    n = f_p * n + i_p * k
+    h_num = jnp.einsum("bhij,bhj->bhi", C, q)  # C q
+    h_den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0
+    )[..., None]
+    h = h_num / h_den
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def _mlstm_prep(p, x, cfg):
+    """Project x (B, S, d) -> per-step cell inputs."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    qkv = linear(p["qkv"], x, "mlstm.qkv")
+    q, k, v = jnp.split(qkv, [cfg.q_dim, cfg.q_dim + cfg.kv_dim], axis=-1)
+    q = q.reshape(B, S, H, hd).astype(jnp.float32) / (hd**0.5)
+    k = k.reshape(B, S, H, hd).astype(jnp.float32)
+    v = v.reshape(B, S, H, hd).astype(jnp.float32)
+    g = linear(p["gates"], x.astype(jnp.float32), "mlstm.gates")  # (B,S,2H)
+    li = g[..., : H]  # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(g[..., H :])  # log forget gate
+    return q, k, v, li, lf
+
+
+def mlstm_seq(p: Dict, x: jax.Array, cfg: ModelConfig, name: str = ""):
+    B, S, d = x.shape
+    q, k, v, li, lf = _mlstm_prep(p, x, cfg)
+    state = mlstm_init_state(cfg, B)
+
+    def step(st, inp):
+        return _mlstm_cell(st, inp)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, li, lf))
+    state, hs = jax.lax.scan(step, state, xs)  # (S, B, H, hd)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, cfg.q_dim).astype(x.dtype)
+    o = jax.nn.sigmoid(
+        linear(p["o_gate"], x, name + ".o").astype(jnp.float32)
+    ).astype(x.dtype)
+    return linear(p["out"], h * o, name + ".out"), state
+
+
+def mlstm_step(
+    p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, name: str = ""
+) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d) decode step."""
+    B = x.shape[0]
+    q, k, v, li, lf = _mlstm_prep(p, x, cfg)
+    st, h = _mlstm_cell(state, (q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0]))
+    h = h.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    o = jax.nn.sigmoid(
+        linear(p["o_gate"], x, name + ".o").astype(jnp.float32)
+    ).astype(x.dtype)
+    return linear(p["out"], h * o, name + ".out"), st
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(rng, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads  # sLSTM heads tile d
+    k1, k2 = jax.random.split(rng)
+    return {
+        # z, i, f, o pre-activations from x (the "gates" MP stage)
+        "gates": linear_init(k1, d, 4 * d, dtype, bias=True),
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "rec": jax.random.normal(k2, (H, hd, 4 * hd), jnp.float32)
+        * (1.0 / hd**0.5),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, state, gx, cfg):
+    """gx: (B, 4d) pre-activations from x."""
+    B = gx.shape[0]
+    H, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    d = cfg.d_model
+    hprev = state["h"].reshape(B, H, hd)
+    rec = jnp.einsum("bhi,hij->bhj", hprev, p["rec"]).reshape(B, 4 * d)
+    za, ia, fa, oa = jnp.split(gx.astype(jnp.float32) + rec, 4, axis=-1)
+    z = jnp.tanh(za)
+    o = jax.nn.sigmoid(oa)
+    li = ia  # log-space input gate
+    lf = jax.nn.log_sigmoid(fa)
+    m_new = jnp.maximum(lf + state["m"], li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + state["m"] - m_new)
+    c = f_p * state["c"] + i_p * z
+    n = f_p * state["n"] + i_p
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"h": h, "c": c, "n": n, "m": m_new}, h
+
+
+def slstm_seq(p: Dict, x: jax.Array, cfg: ModelConfig, name: str = ""):
+    B, S, d = x.shape
+    gx = linear(p["gates"], x, name + ".gates")  # (B, S, 4d)
+    state = slstm_init_state(cfg, B)
+
+    def step(st, g):
+        return _slstm_cell(p, st, g, cfg)
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), state  # (B, S, d)
+
+
+def slstm_step(
+    p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, name: str = ""
+) -> Tuple[jax.Array, Dict]:
+    gx = linear(p["gates"], x[:, 0], name + ".gates")
+    st, h = _slstm_cell(p, state, gx, cfg)
+    return h[:, None].astype(x.dtype), st

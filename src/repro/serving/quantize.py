@@ -1,0 +1,97 @@
+"""Model-level SmoothQuant W8A8 conversion (paper §III-E serving path).
+
+``calibrate`` runs eager forward passes over sample prompts while the
+calibration context records per-linear activation absmax;
+``quantize_model_params`` then rewrites every linear param group
+``{"w": (.., K, N)}`` into the Fused-MP form ``{"w_q", "w_scale",
+"smooth"}``, vmapping over stacked period axes.  Norms (1-D "w"), embedding
+tables, convs and the MoE router stay in floating point — matching the
+paper, which quantizes the matrix-processing path only.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.models import lm
+
+
+def calibrate(
+    params,
+    cfg: ModelConfig,
+    sample_batches,
+    *,
+    extras: Optional[Dict] = None,
+) -> Dict[str, jax.Array]:
+    """Run eager forwards; returns {linear-name: per-channel act absmax}."""
+    with quant.calibration() as stats:
+        for tokens in sample_batches:
+            lm.forward(
+                params, cfg, tokens, unroll_periods=True, moe_cf=None,
+                **(extras or {}))
+    return {k: jax.device_get(v) for k, v in stats.items()}
+
+
+def _suffix_stats(act_stats: Optional[Dict]) -> Dict[str, jnp.ndarray]:
+    """Collapse stats to path suffixes like 'attn.qkv' (max over layers)."""
+    if not act_stats:
+        return {}
+    out: Dict[str, jnp.ndarray] = {}
+    for name, amax in act_stats.items():
+        suffix = ".".join(name.split(".")[-2:])
+        prev = out.get(suffix)
+        out[suffix] = amax if prev is None else jnp.maximum(prev, amax)
+    return out
+
+
+# Only matrix-processing linears are quantized (paper quantizes the MP
+# path).  Norm scales, embeddings, convs, MoE router, and the exp-gate
+# projections of mLSTM/sLSTM/RG-LRU stay floating point.
+_LINEAR_KEYS = (
+    "q", "k", "v", "qkv", "out", "up", "gate", "down", "in_proj",
+    "out_proj", "o_gate", "lm_head",
+)
+
+
+def quantize_model_params(
+    params,
+    cfg: ModelConfig,
+    act_stats: Optional[Dict] = None,
+    alpha: float = 0.5,
+):
+    """Rewrite linear groups to W8A8.  Returns a new param pytree that the
+    same model code executes through the Fused MP kernel (linear() keys on
+    the presence of 'w_q')."""
+    sstats = _suffix_stats(act_stats)
+
+    def q_one(w, b, amax):
+        return quant.quantize_linear_params(w, b, amax, alpha)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            leaf_key = path.rsplit("/", 1)[-1]
+            if "w" in node and leaf_key in _LINEAR_KEYS:
+                suffix = ".".join(path.split("/")[-2:]) or path
+                amax = sstats.get(suffix)
+                w, b = node["w"], node.get("b")
+                if w.ndim == 2:
+                    return q_one(w, b, amax)
+                # stacked periods: vmap over leading axes
+                fn = q_one
+                for _ in range(w.ndim - 2):
+                    fn = jax.vmap(
+                        fn,
+                        in_axes=(0, 0 if b is not None else None, None),
+                    )
+                return fn(w, b, amax)
+            return {k: walk(v, f"{path}/{k}") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            items = [walk(v, f"{path}/{i}") for i, v in enumerate(node)]
+            return type(node)(items)
+        return node
+
+    return walk(params, "")

@@ -1,0 +1,234 @@
+"""Training loop: jitted train_step, microbatch accumulation with int8
+error-feedback gradient compression, remat, fault tolerance and straggler
+accounting.
+
+``make_train_step`` builds the pure step function used both for real CPU
+training (tests/examples) and for the multi-pod dry-run lowering (the
+launch layer jits it with FSDP x TP shardings).  ``Trainer`` adds the
+operational shell: checkpoint/restart, failure injection, SIGTERM-safe
+snapshots, and per-step deadline tracking (straggler mitigation: on a real
+fleet the hook triggers re-dispatch; here it records the event and keeps
+the trajectory deterministic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.models import lm
+from repro.training import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt.AdamWState
+    ef: Any  # error-feedback residual (None unless grad compression on)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt.AdamWConfig = opt.AdamWConfig()
+    remat: bool = False
+    microbatches: int = 1  # gradient accumulation steps
+    compress_grads: bool = False  # int8 accumulation w/ error feedback
+    aux_weight: float = 0.01
+    unroll_periods: bool = False  # dry-run: exact per-layer HLO
+    layout: str = "stacked"  # "layers": per-layer param buffers (dry-run)
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, rng,
+                     max_seq: int = 0) -> TrainState:
+    params = lm.init(cfg, rng, max_seq=max_seq, layout=tcfg.layout)
+    ef = None
+    if tcfg.compress_grads:
+        ef = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt.init_state(params, tcfg.opt),
+                      ef=ef)
+
+
+def init_train_state_abstract(cfg, tcfg, max_seq: int = 0):
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, tcfg, jax.random.PRNGKey(0),
+                                 max_seq=max_seq))
+
+
+def _compress_decompress(g, ef):
+    """int8 quantize (g + ef) per-leaf; return (decompressed, new_ef).
+
+    This is the error-feedback compressor applied at the accumulation /
+    reduction boundary: what survives is the int8-representable part, the
+    residual re-enters next step — unbiased in the long run."""
+    def one(gl, el):
+        tot = gl.astype(jnp.float32) + el
+        amax = jnp.max(jnp.abs(tot))
+        scale = jnp.maximum(amax, 1e-20) / 127.0
+        q = jnp.clip(jnp.round(tot / scale), -127, 127)
+        deq = q * scale
+        return {"__g": deq.astype(gl.dtype), "__e": tot - deq}
+
+    pairs = jax.tree_util.tree_map(one, g, ef)
+    is_p = lambda t: isinstance(t, dict) and "__g" in t
+    g2 = jax.tree_util.tree_map(lambda t: t["__g"], pairs, is_leaf=is_p)
+    e2 = jax.tree_util.tree_map(lambda t: t["__e"], pairs, is_leaf=is_p)
+    return g2, e2
+
+
+def make_train_step(
+    cfg: ModelConfig, tcfg: TrainConfig
+) -> Callable[[TrainState, Dict[str, jax.Array]], Any]:
+    """Returns step(state, batch) -> (state, metrics). Pure; jit outside."""
+
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch, remat=tcfg.remat,
+                          aux_weight=tcfg.aux_weight,
+                          unroll_periods=tcfg.unroll_periods)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        mb = tcfg.microbatches
+        if mb == 1:
+            (l, metrics), grads = grad_fn(state.params, batch)
+        else:
+            # microbatch accumulation over the leading batch dim
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(mb, B // mb, *x.shape[1:])
+
+            mbatch = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb_batch):
+                acc, lsum = carry
+                (l, m), g = grad_fn(state.params, mb_batch)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (acc, lsum + l), m
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, lsum), ms = jax.lax.scan(
+                acc_body, (zero, jnp.zeros(())), mbatch)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            l = lsum / mb
+            metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x), ms)
+
+        ef = state.ef
+        if tcfg.compress_grads:
+            grads, ef = _compress_decompress(grads, ef)
+
+        params, ostate, om = opt.apply_updates(
+            state.params, grads, state.opt, tcfg.opt)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = l
+        return TrainState(params=params, opt=ostate, ef=ef), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Operational shell
+# ---------------------------------------------------------------------------
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        data,  # iterable of batches (np arrays)
+        ckpt_dir: str,
+        *,
+        max_seq: int = 0,
+        ckpt_every: int = 50,
+        straggler_factor: float = 3.0,
+        failure_hook: Optional[Callable[[int], bool]] = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data = data
+        self.max_seq = max_seq
+        self.ckpt = CheckpointManager(ckpt_dir)
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.failure_hook = failure_hook
+        self.seed = seed
+        self.step_fn = jax.jit(make_train_step(cfg, tcfg))
+        self.state: Optional[TrainState] = None
+        self.start_step = 0
+        self.events: list = []
+        self._ema_dt: Optional[float] = None
+        self._sigterm = False
+
+    # -- lifecycle ------------------------------------------------------
+    def init_or_restore(self) -> int:
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            like = init_train_state_abstract(
+                self.cfg, self.tcfg, max_seq=self.max_seq)
+            self.state = self.ckpt.restore(latest, like)
+            self.start_step = latest
+            self.events.append(("restore", latest))
+        else:
+            self.state = init_train_state(
+                self.cfg, self.tcfg, jax.random.PRNGKey(self.seed),
+                max_seq=self.max_seq)
+            self.start_step = 0
+        return self.start_step
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._sigterm = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # not in main thread (tests)
+
+    # -- loop -----------------------------------------------------------
+    def run(self, num_steps: int) -> Dict[str, float]:
+        assert self.state is not None, "call init_or_restore() first"
+        self._install_sigterm()
+        metrics: Dict[str, float] = {}
+        step = self.start_step
+        data_it = iter(self.data)
+        # fast-forward the deterministic stream to the resume point
+        for _ in range(self.start_step):
+            next(data_it)
+        while step < num_steps:
+            if self.failure_hook is not None and self.failure_hook(step):
+                # simulated node failure: abandon in-memory state
+                self.events.append(("failure", step))
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = {
+                k: jnp.asarray(v) for k, v in next(data_it).items()
+            }
+            t0 = time.monotonic()
+            self.state, m = self.step_fn(self.state, batch)
+            jax.block_until_ready(m["loss"])
+            dt = time.monotonic() - t0
+            if self._ema_dt is None:
+                self._ema_dt = dt
+            elif dt > self.straggler_factor * self._ema_dt:
+                self.events.append(("straggler", step, dt))
+            self._ema_dt = 0.9 * (self._ema_dt or dt) + 0.1 * dt
+            step += 1
+            metrics = {k: float(v) for k, v in m.items()}
+            if step % self.ckpt_every == 0 or self._sigterm:
+                self.ckpt.save(step, self.state, blocking=False)
+                self.events.append(("checkpoint", step))
+                if self._sigterm:
+                    self.ckpt.wait()
+                    self.events.append(("sigterm_exit", step))
+                    break
+        self.ckpt.wait()
+        return metrics

@@ -1,0 +1,48 @@
+"""Collective-bytes HLO parser unit tests on synthetic HLO lines."""
+from repro.core.hloparse import collective_bytes, op_histogram
+
+HLO = """
+HloModule jit_step
+%x1 = f32[128,64]{1,0} all-gather(%p0), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+%x2 = bf16[256,256]{1,0} all-reduce(%p1), channel_id=2, replica_groups=[16,16]<=[256], to_apply=%add
+%x3 = f32[64]{0} reduce-scatter(%p2), channel_id=3, replica_groups=[4,64]<=[256], dimensions={0}
+%x4 = s8[1024]{0} collective-permute(%p3), channel_id=4, source_target_pairs={{0,1},{1,2}}
+%x5 = (f32[32]{0}, u32[]) all-gather-start(%p4), channel_id=5, replica_groups=[2,128]<=[256], dimensions={0}
+%x6 = f32[32]{0} all-gather-done(%x5)
+%inloop = f32[8,8]{1,0} all-reduce(%p5), channel_id=6, replica_groups=[16,16]<=[256], to_apply=%add, metadata={op_name="jit(f)/while/body/foo"}
+"""
+
+
+def test_collective_kinds_and_wire_model():
+    out = collective_bytes(HLO, scan_trips=10)
+    # all-gather: 128*64*4 bytes result * 15/16
+    assert abs(out["all-gather"] - (128 * 64 * 4 * 15 / 16
+                                    + 32 * 4 * 127 / 128)) < 1
+    # all-reduce: 2*|r|*(g-1)/g for the plain one + scan-scaled one
+    ar_plain = 2 * 256 * 256 * 2 * 15 / 16
+    ar_loop = 2 * 8 * 8 * 4 * 15 / 16 * 10
+    assert abs(out["all-reduce"] - (ar_plain + ar_loop)) < 1
+    # reduce-scatter: |r|*(g-1) with g=64
+    assert abs(out["reduce-scatter"] - 64 * 4 * 63) < 1
+    # collective-permute: one hop, |r|
+    assert out["collective-permute"] == 1024
+    assert out["total"] > 0
+
+
+def test_done_not_double_counted():
+    out = collective_bytes(HLO)
+    # only one all-gather-start contributes the 32-element AG
+    assert out["all-gather"] < 128 * 64 * 4  # no 2x counting
+
+
+def test_scan_trip_multiplier():
+    a = collective_bytes(HLO, scan_trips=1)
+    b = collective_bytes(HLO, scan_trips=5)
+    diff = b["all-reduce"] - a["all-reduce"]
+    assert abs(diff - 4 * (2 * 8 * 8 * 4 * 15 / 16)) < 1
+
+
+def test_op_histogram():
+    h = op_histogram("  %f = f32[2]{0} fusion(%a), kind=kLoop\n"
+                     "  %d = f32[2,2]{1,0} dot(%a, %b)\n")
+    assert h == {"fusion": 1, "dot": 1}

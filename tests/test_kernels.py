@@ -1,0 +1,188 @@
+"""Per-kernel allclose sweeps: every Pallas MDK vs its pure-jnp oracle,
+across shapes and dtypes, in interpret mode (kernel body executes on CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.ln_res_kernel import ln_res as ln_res_pallas
+from repro.kernels.mha_kernel import mha_decode as mha_pallas
+from repro.kernels.mp_kernel import mp_matmul as mp_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _i8(shape):
+    return jnp.asarray(RNG.integers(-127, 128, shape), jnp.int8)
+
+
+def _f32(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fused MP kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "M,K,N,bm,bn,bk",
+    [
+        (128, 128, 128, 128, 128, 128),
+        (256, 384, 128, 128, 128, 128),
+        (128, 256, 256, 64, 128, 64),
+        (8, 128, 128, 8, 128, 128),
+    ],
+)
+def test_mp_kernel_block_sweep(M, K, N, bm, bn, bk):
+    xq, wq = _i8((M, K)), _i8((K, N))
+    xs = jnp.abs(_f32((M, 1), 0.02)) + 1e-3
+    ws = jnp.abs(_f32((1, N), 0.02)) + 1e-3
+    b = _f32((N,))
+    out = mp_pallas(xq, wq, xs, ws, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.quant_matmul_ref(xq, wq, xs, ws, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.bfloat16, jnp.float32])
+def test_mp_kernel_out_dtypes(out_dtype):
+    xq, wq = _i8((128, 128)), _i8((128, 128))
+    xs = jnp.abs(_f32((128, 1), 0.02)) + 1e-3
+    ws = jnp.abs(_f32((1, 128), 0.02)) + 1e-3
+    b = _f32((128,))
+    out = mp_pallas(xq, wq, xs, ws, b, out_dtype=out_dtype, interpret=True)
+    assert out.dtype == out_dtype
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+)
+def test_mp_wrapper_ragged_property(m, k, n):
+    """ops.quant_matmul pads any shape and matches the oracle."""
+    rng = np.random.default_rng(m * 7919 + k * 31 + n)
+    xq = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    xs = jnp.asarray(rng.uniform(1e-3, 0.05, (m, 1)), jnp.float32)
+    ws = jnp.asarray(rng.uniform(1e-3, 0.05, (1, n)), jnp.float32)
+    out = ops.quant_matmul(xq, wq, xs, ws, backend="interpret")
+    want = ops.quant_matmul(xq, wq, xs, ws, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Fused MHA decode kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,S,D,window",
+    [
+        (2, 4, 4, 256, 64, 0),  # MHA
+        (2, 8, 2, 256, 64, 0),  # GQA
+        (1, 4, 1, 384, 128, 0),  # MQA
+        (2, 4, 2, 256, 64, 100),  # sliding window
+        (3, 2, 2, 128, 256, 0),  # gemma-wide head_dim
+    ],
+)
+def test_mha_kernel_shapes(B, H, Hkv, S, D, window):
+    q = _f32((B, H, D))
+    k = _f32((B, Hkv, S, D))
+    v = _f32((B, Hkv, S, D))
+    lengths = jnp.asarray(RNG.integers(1, S, (B,)), jnp.int32)
+    out = mha_pallas(q, k, v, lengths, bs=128, window=window, interpret=True)
+    want = ref.mha_decode_ref(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_mha_kernel_bf16():
+    q = _f32((2, 4, 64)).astype(jnp.bfloat16)
+    k = _f32((2, 2, 256, 64)).astype(jnp.bfloat16)
+    v = _f32((2, 2, 256, 64)).astype(jnp.bfloat16)
+    lengths = jnp.asarray([100, 256], jnp.int32)
+    out = mha_pallas(q, k, v, lengths, interpret=True)
+    want = ref.mha_decode_ref(q, k, v, lengths)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    group=st.integers(1, 4),
+    hkv=st.integers(1, 3),
+    s=st.integers(2, 300),
+    d=st.sampled_from([32, 64]),
+)
+def test_mha_wrapper_property(b, group, hkv, s, d):
+    """Padding wrapper matches oracle for arbitrary cache lengths."""
+    rng = np.random.default_rng(b * 31 + group * 7 + hkv * 3 + s)
+    q = jnp.asarray(rng.normal(size=(b, hkv * group, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, s + 1, (b,)), jnp.int32)
+    out = ops.mha_decode(q, k, v, lengths, backend="interpret")
+    want = ops.mha_decode(q, k, v, lengths, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=5e-5, atol=5e-5)
+
+
+def test_mha_softmax_invariance():
+    """Adding a constant to all scores (via scaled q) must not change the
+    attention weights' normalization: output stays a convex combo of V."""
+    B, H, S, D = 2, 2, 128, 64
+    q = _f32((B, H, D))
+    k = _f32((B, H, S, D))
+    v = jnp.ones((B, H, S, D), jnp.float32)
+    lengths = jnp.asarray([S, S // 2], jnp.int32)
+    out = mha_pallas(q, k, v, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused LN&Res kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["layernorm", "rmsnorm"])
+@pytest.mark.parametrize("B,D", [(128, 128), (256, 512), (64, 96)])
+def test_ln_res_kernel(kind, B, D):
+    x, r = _f32((B, D)), _f32((B, D))
+    w = jnp.abs(_f32((D,))) + 0.5
+    b = _f32((D,), 0.1)
+    outs = ln_res_pallas(x, r, w, b, kind=kind, bb=64, interpret=True)
+    wants = ref.ln_res_ref(x, r, w, b, kind=kind)
+    for o, want in zip(outs, wants):
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(want, np.float32),
+            rtol=1.5e-2, atol=1.5e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 50), d=st.integers(2, 200))
+def test_ln_res_property(b, d):
+    """Property: residual output equals x+res exactly; int8 roundtrip of the
+    normed output stays within one quant step."""
+    rng = np.random.default_rng(b * 131 + d)
+    x = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    w = jnp.ones((d,), jnp.float32)
+    y, new_r, y_q, scale = ops.ln_res(x, r, w, kind="rmsnorm",
+                                      backend="interpret")
+    np.testing.assert_allclose(
+        np.asarray(new_r), np.asarray(x + r), rtol=1e-6, atol=1e-6)
+    deq = np.asarray(y_q, np.float32) * np.asarray(scale)
+    np.testing.assert_allclose(
+        deq, np.asarray(y, np.float32), atol=2.1 * float(np.max(scale)))

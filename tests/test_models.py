@@ -1,0 +1,196 @@
+"""Per-architecture smoke + consistency tests on reduced configs.
+
+Every assigned arch: instantiate reduced config, one forward + one train
+step on CPU, assert output shapes and no NaNs; then the serving-path
+consistency triangle: forward == batch_prefill == decode_step (bf16
+tolerance; exact in f32 for gpt2).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_archs
+from repro.models import lm
+from repro.training import optimizer as opt
+from repro.training.trainer import TrainConfig, init_train_state, \
+    make_train_step
+
+ALL_ARCHS = tuple(sorted(set(ASSIGNED_ARCHS + ("gpt2-345m",))))
+
+
+def _extras(cfg, B, rng=2):
+    out = {}
+    if cfg.frontend == "vision_patches":
+        out["patches"] = jax.random.normal(
+            jax.random.PRNGKey(rng), (B, cfg.frontend_tokens, cfg.d_model),
+            jnp.float32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.random.normal(
+            jax.random.PRNGKey(rng), (B, cfg.encoder_seq, cfg.d_model),
+            jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=64)
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    logits, aux, _, _ = lm.forward(params, cfg, tokens, **_extras(cfg, B))
+    S_tot = S + (cfg.frontend_tokens or 0)
+    assert logits.shape == (B, S_tot, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    if cfg.n_experts:
+        assert float(aux) > 0.0  # load-balance loss present
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    tcfg = TrainConfig(opt=opt.AdamWConfig(lr=1e-3, warmup_steps=2,
+                                           total_steps=10))
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0), max_seq=32)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    B, S = 2, 12
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    batch.update(_extras(cfg, B))
+    batch = {k: jnp.asarray(np.asarray(v)) for k, v in batch.items()}
+    state2, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+    # params actually moved
+    d0 = jax.tree_util.tree_leaves(state.params)[3]
+    d1 = jax.tree_util.tree_leaves(state2.params)[3]
+    assert not np.allclose(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=64)
+    B, S, P = 2, 12, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    ex = _extras(cfg, B)
+    logits, _, _, _ = lm.forward(params, cfg, tokens, moe_cf=None, **ex)
+    cache = lm.init_cache(cfg, B, 32)
+    last, cache, lengths = lm.batch_prefill(params, cfg, tokens[:, :P],
+                                            cache, **ex)
+    pre = logits.shape[1] - S
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(logits[:, pre + P - 1], np.float32),
+        rtol=2e-2, atol=2e-2)
+    enc_len = (jnp.full((B,), cfg.encoder_seq, jnp.int32)
+               if cfg.is_encoder_decoder else None)
+    dl, cache = lm.decode_step(params, cfg, tokens[:, P:P + 1], cache,
+                               lengths, enc_lengths=enc_len)
+    np.testing.assert_allclose(
+        np.asarray(dl), np.asarray(logits[:, pre + P], np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_decode_matches_forward_exact_f32():
+    """In f32 the decode path is numerically identical to forward."""
+    cfg = get_config("gpt2-345m").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=64)
+    B, S, P = 2, 12, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    logits, _, _, _ = lm.forward(params, cfg, tokens, moe_cf=None,
+                                 dtype=jnp.float32)
+    cache = lm.init_cache(cfg, B, 32, dtype=jnp.float32)
+    last, cache, lengths = lm.batch_prefill(
+        params, cfg, tokens[:, :P], cache, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(logits[:, P - 1], np.float32),
+        rtol=3e-6, atol=3e-6)
+    dl, _ = lm.decode_step(params, cfg, tokens[:, P:P + 1], cache, lengths,
+                           dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(dl), np.asarray(logits[:, P], np.float32),
+        rtol=3e-6, atol=3e-6)
+
+
+def test_sequential_prefill_matches_batched():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    B, P = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                cfg.vocab_size)
+    cache_a = lm.init_cache(cfg, B, 32)
+    last_a, _, len_a = lm.batch_prefill(params, cfg, tokens, cache_a)
+    cache_b = lm.init_cache(cfg, B, 32)
+    last_b, _, len_b = lm.prefill(
+        params, cfg, tokens, jnp.full((B,), P, jnp.int32), cache_b)
+    np.testing.assert_array_equal(np.asarray(len_a), np.asarray(len_b))
+    np.testing.assert_allclose(np.asarray(last_a), np.asarray(last_b),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ragged_sequential_prefill():
+    """Per-request prompt lengths via the sequential path."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    B, P = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                cfg.vocab_size)
+    plens = jnp.asarray([5, 8], jnp.int32)
+    cache = lm.init_cache(cfg, B, 32)
+    last, cache, lengths = lm.prefill(params, cfg, tokens, plens, cache)
+    np.testing.assert_array_equal(np.asarray(lengths), np.asarray(plens))
+    # row 0's last logits must equal a batched prefill of its 5-token prompt
+    cache5 = lm.init_cache(cfg, B, 32)
+    last5, _, _ = lm.batch_prefill(params, cfg, tokens[:, :5], cache5)
+    np.testing.assert_allclose(np.asarray(last[0]), np.asarray(last5[0]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_unrolled_matches_scanned():
+    """The dry-run unrolled lowering computes the same function as scan
+    (f32: bit-comparable; bf16 differs in fusion rounding order)."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                cfg.vocab_size)
+    a, _, _, _ = lm.forward(params, cfg, tokens, dtype=jnp.float32)
+    b, _, _, _ = lm.forward(params, cfg, tokens, unroll_periods=True,
+                            dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_layers_layout_matches_stacked():
+    """layout="layers" computes the same function as layout="stacked"."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    ps = lm.init(cfg, jax.random.PRNGKey(0), layout="stacked")
+    pl = lm.init(cfg, jax.random.PRNGKey(0), layout="layers")
+    # same leaf count/param count even though structure differs
+    assert sum(x.size for x in jax.tree_util.tree_leaves(ps)) == \
+        sum(x.size for x in jax.tree_util.tree_leaves(pl))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    # re-init draws differ per-layout (different key trees), so compare
+    # via the stacked params re-packed into the layers structure
+    restacked = {k: v for k, v in ps.items()
+                 if k not in ("periods", "rest")}
+    restacked["periods"] = ()
+    restacked["rest"] = [
+        jax.tree_util.tree_map(lambda t: t[i], ps["periods"][0])
+        for i in range(cfg.n_layers)
+    ]
+    a, _, _, _ = lm.forward(ps, cfg, tokens, dtype=jnp.float32)
+    b, _, _, _ = lm.forward(restacked, cfg, tokens, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_long500k_applicability():
+    from repro.configs import applicable_shapes
+
+    subq = {a for a in ALL_ARCHS
+            if "long_500k" in applicable_shapes(get_config(a))}
+    assert subq == {"recurrentgemma-9b", "xlstm-350m"}

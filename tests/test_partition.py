@@ -1,0 +1,127 @@
+"""Sharding rules: divisibility safety, Megatron orientation, KV fallback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import partition
+from repro.models import lm
+
+# a fake 16x16 AbstractMesh is enough for spec computation — no devices.
+from jax.sharding import AbstractMesh
+
+
+def _mesh(shape=(16, 16), axes=("data", "model")):
+    return AbstractMesh(shape, axes)
+
+
+def test_megatron_orientation():
+    mesh = _mesh()
+    cfg = get_config("llama3-8b")
+    # column-parallel q
+    spec = partition.param_pspec("/periods/0/attn/q/w", (32, 4096, 4096),
+                                 cfg, mesh, fsdp=True)
+    assert spec == P(None, ("data",), "model")
+    # row-parallel out
+    spec = partition.param_pspec("/periods/0/attn/out/w", (32, 4096, 4096),
+                                 cfg, mesh, fsdp=True)
+    assert spec == P(None, "model", ("data",))
+
+
+def test_kv_replication_when_heads_dont_divide():
+    mesh = _mesh()
+    cfg = get_config("llama3-8b")  # kv=8 < 16
+    spec = partition.param_pspec("/periods/0/attn/k/w", (32, 4096, 1024),
+                                 cfg, mesh, fsdp=True)
+    assert spec[-1] is None  # kv columns replicated
+    cfg2 = get_config("gemma-7b")  # kv=16 == model axis
+    spec2 = partition.param_pspec("/periods/0/attn/k/w", (28, 3072, 4096),
+                                  cfg2, mesh, fsdp=True)
+    assert spec2[-1] == "model"  # paper head-wise partitioning
+
+
+def test_vocab_sharding_fallback():
+    mesh = _mesh()
+    gpt2 = get_config("gpt2-345m")  # 50257 % 16 != 0
+    spec = partition.param_pspec("/embed/table", (50257, 1024), gpt2, mesh,
+                                 fsdp=False)
+    assert spec[0] is None
+    llama = get_config("llama3-8b")  # 128256 % 16 == 0
+    spec = partition.param_pspec("/embed/table", (128256, 4096), llama,
+                                 mesh, fsdp=False)
+    assert spec[0] == "model"
+
+
+def test_cache_headwise_vs_seq_sharding():
+    mesh = _mesh()
+    gemma = get_config("gemma-7b")
+    spec = partition.cache_pspec("/periods/0/k", (28, 128, 16, 32768, 256),
+                                 gemma, mesh, batch=128)
+    assert spec == P(None, ("data",), "model", None, None)  # head-wise
+    llama = get_config("llama3-8b")  # kv=8: falls back to sequence sharding
+    spec = partition.cache_pspec("/periods/0/k", (32, 128, 8, 32768, 128),
+                                 llama, mesh, batch=128)
+    assert spec == P(None, ("data",), None, "model", None)
+
+
+def test_moe_expert_parallel_spec():
+    """EP x TP (EXPERIMENTS.md §Perf it3): experts over the data axes
+    (tokens travel, weights stay), each expert Megatron-split over model."""
+    mesh = _mesh()
+    kimi = get_config("kimi-k2-1t-a32b")
+    spec = partition.param_pspec("/periods/0/moe/w_up",
+                                 (61, 384, 7168, 2048), kimi, mesh,
+                                 fsdp=True)
+    assert spec == P(None, ("data",), None, "model")
+    spec = partition.param_pspec("/periods/0/moe/w_down",
+                                 (61, 384, 2048, 7168), kimi, mesh,
+                                 fsdp=True)
+    assert spec == P(None, ("data",), "model", None)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 4096),
+    cols=st.integers(1, 4096),
+)
+def test_specs_never_violate_divisibility(rows, cols):
+    """Property: any produced spec evenly divides the dims it shards."""
+    mesh = _mesh()
+    cfg = get_config("llama3-8b")
+    for path in ("/x/q/w", "/x/out/w", "/x/up/w", "/embed/table",
+                 "/x/lm_head/w"):
+        spec = partition.param_pspec(path, (rows, cols), cfg, mesh,
+                                     fsdp=True)
+        for dim, ax in zip((rows, cols), spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0
+
+
+def test_param_shardings_cover_whole_tree():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    mesh = _mesh((2, 2))
+    abs_params = lm.init_abstract(cfg)
+    sh = partition.param_shardings(abs_params, cfg, mesh, fsdp=True)
+    n_leaves = len(jax.tree_util.tree_leaves(abs_params))
+    n_specs = len(jax.tree_util.tree_leaves(
+        sh, is_leaf=lambda x: hasattr(x, "spec")))
+    assert n_leaves == n_specs
+
+
+def test_batch_shardings():
+    mesh = _mesh()
+    abs_batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    sh = partition.batch_shardings(abs_batch, mesh, 256)
+    assert sh["tokens"].spec == P(("data",), None)
+    # batch=1 (long_500k): replicated
+    sh1 = partition.batch_shardings(
+        {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32)}, mesh, 1)
+    assert sh1["tokens"].spec == P(None, None)

@@ -1,0 +1,104 @@
+"""SmoothQuant W8A8 invariants and end-to-end quantized-model accuracy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import quant
+from repro.models import lm
+from repro.serving.quantize import calibrate, quantize_model_params
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 100), n=st.integers(2, 100))
+def test_smooth_migration_exact(k, n):
+    """(X diag(1/s)) @ (diag(s) W) == X @ W up to float assoc error."""
+    rng = np.random.default_rng(k * 101 + n)
+    x = jnp.asarray(rng.normal(size=(8, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=0)
+    s = quant.smooth_factors(amax, w, alpha=0.5)
+    y0 = x @ w
+    y1 = (x / s[None, :]) @ (w * s[:, None])
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 40), k=st.integers(2, 128))
+def test_act_quant_error_bound(m, k):
+    """Dynamic per-token int8 roundtrip error <= scale/2 per element."""
+    rng = np.random.default_rng(m * 13 + k)
+    x = jnp.asarray(rng.normal(size=(m, k)) * 3, jnp.float32)
+    xq, scale = quant.quantize_act(x)
+    deq = np.asarray(xq, np.float32) * np.asarray(scale)
+    err = np.abs(deq - np.asarray(x))
+    assert (err <= np.asarray(scale) * 0.5 + 1e-6).all()
+
+
+def test_weight_quant_per_channel():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 32)) * np.logspace(
+        -2, 1, 32)[None, :], jnp.float32)
+    wq, scale = quant.quantize_weight(w)
+    deq = np.asarray(wq, np.float32) * np.asarray(scale)
+    # per-channel scaling keeps relative error uniform despite 3-decade range
+    rel = np.abs(deq - np.asarray(w)).max(0) / np.abs(np.asarray(w)).max(0)
+    assert rel.max() < 0.01
+
+
+def test_smoothquant_helps_outliers():
+    """With an activation-outlier channel, alpha=0.5 smoothing must reduce
+    quantized-matmul error vs plain W8A8 (the SmoothQuant claim)."""
+    rng = np.random.default_rng(1)
+    K, N, M = 128, 64, 32
+    x = rng.normal(size=(M, K)).astype(np.float32)
+    x[:, 7] *= 80.0  # outlier channel
+    w = rng.normal(size=(K, N)).astype(np.float32) * 0.05
+    xj, wj = jnp.asarray(x), jnp.asarray(w)
+    gold = np.asarray(xj @ wj)
+
+    def quant_err(alpha):
+        amax = jnp.max(jnp.abs(xj), axis=0)
+        p = quant.quantize_linear_params(
+            wj, None, amax if alpha is not None else None,
+            alpha if alpha is not None else 0.5)
+        xs = xj * (1.0 / p["smooth"])[None, :]
+        xq, xscale = quant.quantize_act(xs)
+        y = np.asarray(
+            jax.lax.dot_general(xq, p["w_q"], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+        ).astype(np.float32) * np.asarray(xscale) * np.asarray(p["w_scale"])
+        return np.abs(y - gold).mean()
+
+    assert quant_err(0.5) < 0.5 * quant_err(None)
+
+
+def test_quantized_model_close_to_fp():
+    """End-to-end: quantized gpt2-reduced logits land near fp logits."""
+    cfg = get_config("gpt2-345m").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=64)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                cfg.vocab_size)
+    stats = calibrate(params, cfg, [tokens])
+    qparams = quantize_model_params(params, cfg, stats)
+    lg_fp, _, _, _ = lm.forward(params, cfg, tokens, moe_cf=None)
+    lg_q, _, _, _ = lm.forward(qparams, cfg, tokens, moe_cf=None)
+    fp = np.asarray(lg_fp[:, -1], np.float32)
+    qq = np.asarray(lg_q[:, -1], np.float32)
+    # cosine similarity of final logits
+    cos = (fp * qq).sum() / (np.linalg.norm(fp) * np.linalg.norm(qq))
+    assert cos > 0.999, cos
+    # greedy argmax agreement
+    assert (fp.argmax(-1) == qq.argmax(-1)).all()
+
+
+def test_calibration_records_linears():
+    cfg = get_config("llama3-8b").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    stats = calibrate(params, cfg, [tokens])
+    suffixes = {k.split(".")[-1] for k in stats}
+    assert {"q", "k", "v", "out", "up", "down"} <= suffixes

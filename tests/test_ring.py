@@ -1,0 +1,37 @@
+"""Multi-device ring-TP + compressed-collective tests.
+
+The main pytest process must keep exactly 1 device (dry-run rule), so all
+multi-device checks run in subprocesses with their own XLA_FLAGS.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_HERE = os.path.dirname(__file__)
+
+
+def _run(script: str) -> str:
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_HERE, "subscripts", script)],
+        capture_output=True, text=True, timeout=560,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+def test_ring_collective_matmuls_8dev():
+    out = _run("ring_check.py")
+    assert "RING_OK" in out
+
+
+def test_elastic_checkpoint_remesh_8dev():
+    out = _run("elastic_check.py")
+    assert "ELASTIC_OK" in out
+
+
+def test_main_process_single_device():
+    import jax
+
+    assert len(jax.devices()) == 1  # smoke tests must not see 512 devices

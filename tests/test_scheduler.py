@@ -1,0 +1,61 @@
+"""MDK temporal scheduler: stage programs, reuse accounting (Fig 3c)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import scheduler as sched
+from repro.core.mdk import MDK_KINDS, MDK_REGISTRY
+
+
+def test_registry_is_small():
+    # the whole point of the hybrid design: a tiny set of kernel instances
+    assert set(MDK_REGISTRY) == {"mp", "mha", "ln_res"}
+
+
+def test_gpt2_block_program_matches_paper_stages():
+    cfg = get_config("gpt2-345m")
+    prog = sched.block_program(cfg, 0)
+    kinds = [s.kernel for s in prog]
+    # LN -> MP(qkv) -> MHA -> MP(out) -> LN -> MP(up) -> act -> MP(down)
+    assert kinds == ["ln_res", "mp", "mha", "mp", "ln_res", "mp", "func",
+                     "mp"]
+
+
+def test_mp_reuse_counts():
+    cfg = get_config("gpt2-345m")
+    stats = sched.mdk_stats(cfg)
+    reuse = stats.reuse_factor()
+    # 4 MP stages/layer x 24 layers + lm_head
+    assert reuse["mp"] == 4 * 24 + 1
+    assert reuse["mha"] == 24
+    assert reuse["ln_res"] == 2 * 24 + 1
+
+
+def test_moe_program_uses_mp_for_experts():
+    cfg = get_config("olmoe-1b-7b")
+    prog = sched.block_program(cfg, 0)
+    names = [s.name for s in prog]
+    assert any("router" in n for n in names)
+    assert any("moe_up" in n for n in names)
+
+
+def test_hybrid_pattern_programs():
+    cfg = get_config("recurrentgemma-9b")
+    p0 = [s.name for s in sched.block_program(cfg, 0)]
+    p2 = [s.name for s in sched.block_program(cfg, 2)]
+    assert any("rglru" in n for n in p0)
+    assert any("local_attn" in n for n in p2)
+
+
+def test_attention_free_arch_has_no_mha_stage():
+    cfg = get_config("xlstm-350m")
+    stats = sched.mdk_stats(cfg)
+    assert stats.reuse_factor().get("mha", 0) == 0  # inapplicable (DESIGN §5)
+    assert stats.reuse_factor()["mp"] > 0  # MDK scheduling still applies
+
+
+def test_all_stage_kinds_valid():
+    for arch in ("gpt2-345m", "kimi-k2-1t-a32b", "whisper-large-v3",
+                 "xlstm-350m", "recurrentgemma-9b"):
+        for st in sched.model_program(get_config(arch)):
+            assert st.kernel in MDK_KINDS
+            assert st.k >= 0 and st.n >= 0
