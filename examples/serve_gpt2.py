@@ -5,9 +5,10 @@ auto-regressive generation through the MDK scheduler).
     PYTHONPATH=src python examples/serve_gpt2.py --full     # real 345M cfg
 
 Builds GPT-2, calibrates SmoothQuant on synthetic prompts, serves a batch
-of requests with continuous batching, and reports per-token latency plus
-the MDK temporal-reuse counters and the analytic FPGA model's prediction
-for the same workload (Table II linkage).
+of requests through the scheduler-driven engine (chunked prefill +
+continuous batching + per-request sampling), and reports TTFT / per-token
+latency plus the MDK temporal-reuse counters and the analytic FPGA model's
+prediction for the same workload (Table II linkage).
 """
 import argparse
 import sys
@@ -34,6 +35,11 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--prefill-mode", default="auto",
+                    choices=("auto", "chunked", "replay"))
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
     args = ap.parse_args()
 
     cfg = get_config("gpt2-345m")
@@ -50,20 +56,37 @@ def main():
     data = SyntheticLM(cfg.vocab_size, 16, 2, seed=7)
     cal = [jnp.asarray(data.batch_at(0)["tokens"])]
     eng = ServeEngine(cfg, params, batch_slots=args.slots, max_seq=max_seq,
-                      eos_id=-1, quantized=True, calibration_batches=cal)
+                      eos_id=-1, quantized=True, calibration_batches=cal,
+                      chunk_size=args.chunk_size,
+                      prefill_mode=args.prefill_mode)
+    print(f"engine: prefill_mode={eng.prefill_mode} "
+          f"chunk={eng.chunk_size} budget={eng.admission.budget_tokens} "
+          f"tok/tick")
 
+    from repro.serving.sampler import SamplingParams
+    sampling = SamplingParams(temperature=args.temperature)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
-        plen = int(rng.integers(3, 9))
+        # mixed lengths: odd requests bring chunk-sized+ prompts (clamped
+        # so prompt + generation always fit the cache)
+        cap = max_seq - args.max_new - 1
+        lo, hi = (3, 9) if i % 2 == 0 else (
+            min(args.chunk_size, cap // 2), min(2 * args.chunk_size, cap))
+        plen = int(rng.integers(lo, max(hi, lo + 1)))
         eng.submit(list(rng.integers(1, cfg.vocab_size, plen)),
-                   max_new=args.max_new)
+                   max_new=args.max_new, sampling=sampling)
     t0 = time.time()
     done = eng.run()
     wall = time.time() - t0
     toks = sum(len(r.out) for r in done)
+    s = eng.stats()
     print(f"served {len(done)} requests, {toks} new tokens in {wall:.2f}s "
           f"({toks/wall:.1f} tok/s on CPU)")
-    print("engine stats:", eng.stats())
+    print(f"TTFT {s['mean_ttft_s']*1e3:.1f} ms  "
+          f"TPOT {s['mean_tok_latency_s']*1e3:.2f} ms  "
+          f"{s['ticks']} ticks, {s['model_calls']} model calls "
+          f"({s['prefill_calls']} prefill chunks)")
+    print("engine stats:", s)
 
     stats = mdk_stats(cfg)
     print("\nMDK temporal reuse (one kernel instance serves all stages):")

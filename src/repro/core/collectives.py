@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
+
 
 def _quantize(x: jax.Array):
     amax = jnp.max(jnp.abs(x))
@@ -55,8 +57,7 @@ def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
 
     # --- ring all-gather (int8 wire) ---
     q, s = _quantize(acc)
-    out = jnp.zeros((L,), jnp.float32)
-    out = jax.lax.pcast(out, (axis_name,), to="varying")
+    out = compat.pcast_varying(jnp.zeros((L,), jnp.float32), axis_name)
 
     def ag_body(t, carry):
         out, q, s = carry

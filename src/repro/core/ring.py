@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 
 def _axis_size_index(axis_name):
     n = jax.lax.psum(1, axis_name)
@@ -61,9 +63,7 @@ def ring_ag_matmul(x_local: jax.Array, w_local: jax.Array, axis_name: str):
         )
         return acc, nxt
 
-    acc = jax.lax.pcast(
-        jnp.zeros((M, Nl), jnp.float32), (axis_name,), to="varying"
-    )
+    acc = compat.pcast_varying(jnp.zeros((M, Nl), jnp.float32), axis_name)
     acc, _ = jax.lax.fori_loop(0, n, body, (acc, x_local), unroll=True)
     return acc.astype(x_local.dtype)
 
@@ -160,6 +160,6 @@ def tp_matmul(
         in_specs = (P(None, axis), P(axis, None))
         body = lambda xl, wl: fn(xl, wl, axis)
     out_specs = P(None, axis)
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
     )(x, w)

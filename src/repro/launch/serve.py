@@ -32,6 +32,9 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--chunk-size", type=int, default=32)
+    ap.add_argument("--prefill-mode", default="auto",
+                    choices=("auto", "chunked", "replay"))
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from a launch/train.py checkpoint")
     args = ap.parse_args()
@@ -56,7 +59,8 @@ def main() -> None:
     eng = ServeEngine(
         cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
         eos_id=-1, quantized=not args.no_quant,
-        calibration_batches=[jnp.asarray(data.batch_at(0)["tokens"])])
+        calibration_batches=[jnp.asarray(data.batch_at(0)["tokens"])],
+        chunk_size=args.chunk_size, prefill_mode=args.prefill_mode)
 
     rng = np.random.default_rng(0)
     for _ in range(args.requests):

@@ -88,6 +88,58 @@ def full_attention(
     return linear(p["out"], out, name + ".out"), (k, v)
 
 
+def chunk_attention(
+    p: Dict,
+    x: jax.Array,  # (B, C, D) chunk of prompt tokens
+    cfg: ModelConfig,
+    k_cache: jax.Array,  # (B, Hkv, S, hd) slot-view KV cache
+    v_cache: jax.Array,
+    positions: jax.Array,  # (B, C) absolute positions of the chunk tokens
+    *,
+    name: str = "",
+):
+    """Multi-token cached attention for chunked prefill.
+
+    The chunk's K/V are written into the cache at their absolute
+    ``positions`` first, then the chunk queries attend over the *whole*
+    cache under the causal mask ``key_pos <= query_pos`` — earlier chunks
+    of the same prompt are live cache content below the chunk; stale
+    entries above it are masked out by causality.  Returns
+    (out (B,C,D), k_cache, v_cache).
+    """
+    B, C = x.shape[:2]
+    q, k, v = _project_qkv(p, cfg, x, name)  # (B,C,H,hd) / (B,C,Hkv,hd)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # per-position scatter with mode="drop": when the fixed-size chunk
+    # window of the *last* chunk hangs past max_seq, the padding positions
+    # are dropped instead of (as dynamic_update_slice would) clamping the
+    # start index backwards over already-written prompt K/V
+    idx = positions[0]  # (C,) — positions are broadcast across the batch
+    k_cache = k_cache.at[:, :, idx].set(
+        k.swapaxes(1, 2).astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[:, :, idx].set(
+        v.swapaxes(1, 2).astype(v_cache.dtype), mode="drop")
+    group = cfg.n_heads // cfg.n_kv_heads
+    S = k_cache.shape[2]
+    qg = q.reshape(B, C, cfg.n_kv_heads, group, cfg.head_dim)
+    scores = jnp.einsum(
+        "bqhgd,bhkd->bhgqk", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    ) / (cfg.head_dim**0.5)
+    key_pos = jnp.arange(S)[None, None, None, None, :]
+    mask = key_pos <= positions[:, None, None, :, None]
+    scores = jnp.where(mask, scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bhkd->bqhgd", probs.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.astype(x.dtype).reshape(B, C, cfg.q_dim)
+    return linear(p["out"], out, name + ".out"), k_cache, v_cache
+
+
 def decode_attention(
     p: Dict,
     x: jax.Array,  # (B, 1, D) current token

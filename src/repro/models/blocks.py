@@ -126,6 +126,54 @@ def cross_kv(p_attn, encoder_out, cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (multi-token step against a slot's cache)
+# ---------------------------------------------------------------------------
+
+
+def chunk_supported(cfg: ModelConfig) -> bool:
+    """Chunked prefill covers global-attention decoder-only stacks; rotating
+    window caches and recurrent states prefill via the sequential replay
+    path (their cache layout is position-rotated / carried, not addressed
+    by absolute offset)."""
+    return (not cfg.is_encoder_decoder) and all(
+        k == "attn" for k in cfg.block_pattern
+    )
+
+
+def block_apply_chunk(
+    p: Dict,
+    x: jax.Array,  # (B, C, d) chunk activations
+    cache: Dict,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    positions: jax.Array,  # (B, C) absolute positions
+    moe_cf: Optional[float] = None,
+    name: str = "",
+) -> Tuple[jax.Array, Dict]:
+    """Chunked-prefill block step: the multi-token analogue of
+    :func:`block_apply_step`.  Returns (x_out (B,C,d), new_cache)."""
+    if kind != "attn":
+        raise NotImplementedError(
+            f"chunked prefill not supported for block kind {kind!r}")
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    out, k_c, v_c = attention.chunk_attention(
+        p["attn"], h, cfg, cache["k"], cache["v"], positions,
+        name=name + ".attn")
+    x = x + out
+    cache = {"k": k_c, "v": v_c}
+    if "mlp" in p or "moe" in p:
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        if cfg.n_experts:
+            out, _ = moe.moe_apply(p["moe"], h, cfg, capacity_factor=moe_cf,
+                                   name=name + ".moe")
+        else:
+            out = mlp(p["mlp"], h, cfg.activation, name + ".mlp")
+        x = x + out
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
 # decode cache + step
 # ---------------------------------------------------------------------------
 

@@ -8,6 +8,8 @@ calibration context is active.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from typing import Dict, Optional
 
 import jax
@@ -15,6 +17,42 @@ import jax.numpy as jnp
 
 from repro.core import quant
 from repro.kernels import ops
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel routing context (LoopLynx ring matmul)
+# ---------------------------------------------------------------------------
+
+_tp_local = threading.local()
+
+
+@contextlib.contextmanager
+def tp_context(mesh, axis: str = "model", strategy: str = "ring_ag"):
+    """Route every dense ``linear`` traced under this context through the
+    ring collective matmul (:func:`repro.core.ring.tp_matmul`) — the
+    serving engine enters it while jitting its step functions so the dense
+    matmuls pick up the paper's transmission-hiding schedule.  Matmuls
+    whose dims don't divide the mesh axis fall back to the local dot."""
+    prev = getattr(_tp_local, "ctx", None)
+    _tp_local.ctx = (mesh, axis, strategy)
+    try:
+        yield
+    finally:
+        _tp_local.ctx = prev
+
+
+def _tp_matmul_or_none(x2: jax.Array, w: jax.Array):
+    ctx = getattr(_tp_local, "ctx", None)
+    if ctx is None or w.ndim != 2:
+        return None
+    mesh, axis, strategy = ctx
+    n = mesh.shape[axis]
+    K, N = w.shape
+    if K % n or N % n:
+        return None  # shard-misaligned: local dense fallback
+    from repro.core import ring
+
+    return ring.tp_matmul(x2, w.astype(x2.dtype), mesh, axis, strategy)
+
 
 # ---------------------------------------------------------------------------
 # Linear (dense or quantized)
@@ -44,7 +82,9 @@ def linear(p: Dict[str, jax.Array], x: jax.Array, name: str = "", *,
         )
     else:
         quant.record_act_stats(name, x2)
-        y = jnp.dot(x2, p["w"].astype(x.dtype))
+        y = _tp_matmul_or_none(x2, p["w"])
+        if y is None:
+            y = jnp.dot(x2, p["w"].astype(x.dtype))
         if "b" in p:
             y = y + p["b"].astype(x.dtype)
     return y.reshape(*lead, y.shape[-1])

@@ -409,6 +409,117 @@ def decode_step(
     return logits[:, 0], new_cache
 
 
+def _slot_view(cache: Dict, slot) -> Dict:
+    """Slice one batch slot out of the cache (periods stack batch on axis 1,
+    per-layer "rest" entries on axis 0)."""
+    return {
+        "periods": jax.tree_util.tree_map(
+            lambda t: jax.lax.dynamic_slice_in_dim(t, slot, 1, axis=1),
+            cache["periods"]),
+        "rest": jax.tree_util.tree_map(
+            lambda t: jax.lax.dynamic_slice_in_dim(t, slot, 1, axis=0),
+            cache["rest"]),
+    }
+
+
+def _slot_scatter(cache: Dict, view: Dict, slot) -> Dict:
+    new_cache = dict(cache)
+    new_cache["periods"] = jax.tree_util.tree_map(
+        lambda full, v: jax.lax.dynamic_update_slice_in_dim(
+            full, v.astype(full.dtype), slot, axis=1),
+        cache["periods"], view["periods"])
+    new_cache["rest"] = jax.tree_util.tree_map(
+        lambda full, v: jax.lax.dynamic_update_slice_in_dim(
+            full, v.astype(full.dtype), slot, axis=0),
+        cache["rest"], view["rest"])
+    return new_cache
+
+
+def prefill_into_slot(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (C,) i32 — one prompt chunk (may be right-padded)
+    cache: Dict,
+    slot,  # scalar i32 — which batch slot of the cache to fill
+    offset,  # scalar i32 — absolute position of tokens[0]
+    *,
+    valid=None,  # scalar i32 — real tokens in the chunk (defaults to C)
+    moe_cf: Optional[float] = None,
+    dtype=jnp.bfloat16,
+):
+    """Chunked prefill: write one prompt chunk into a single batch slot's
+    KV cache with ONE forward call (paper Fig 1 prefill stage, per slot).
+
+    The chunk attends causally over its own tokens *and* the slot's cache
+    below ``offset`` (earlier chunks of the same prompt), so a P-token
+    prompt costs ``ceil(P / C)`` forward calls instead of P decode ticks.
+    Tokens past ``valid`` are padding: their K/V writes land above the
+    prompt and are masked (and later overwritten) by decode's length
+    accounting.  Supported for global-attention stacks
+    (:func:`repro.models.blocks.chunk_supported`); recurrent / windowed
+    kinds replay through :func:`prefill`.
+
+    Returns (last_logits (V,) f32 — logits at chunk position valid-1,
+    new_cache).
+    """
+    assert blocks.chunk_supported(cfg), cfg.block_pattern
+    C = tokens.shape[-1]
+    tokens = tokens.reshape(1, C)
+    slot = jnp.asarray(slot, jnp.int32)
+    offset = jnp.asarray(offset, jnp.int32)
+    valid = C if valid is None else valid
+    valid = jnp.asarray(valid, jnp.int32)
+
+    view = _slot_view(cache, slot)
+    x = embed(params["embed"], tokens, dtype)  # (1, C, d)
+    positions = (offset + jnp.arange(C, dtype=jnp.int32))[None]  # (1, C)
+    if cfg.pos == "learned":
+        # clipped gather (not dynamic_slice, whose clamped start would
+        # mis-position every token when the last chunk window passes the
+        # table end); padding rows read a clamped embedding and are masked
+        P = params["pos_embed"].shape[0]
+        x = x + jnp.take(params["pos_embed"],
+                         jnp.clip(positions[0], 0, P - 1),
+                         axis=0).astype(dtype)[None]
+
+    period = _period(cfg)
+    n_per = _n_per_from(params)
+
+    def period_body(x, scanned):
+        layer_p, layer_c = scanned
+        new_c = []
+        for i in range(period):
+            x, c = blocks.block_apply_chunk(
+                layer_p[i], x, layer_c[i], cfg, cfg.block_pattern[i],
+                positions=positions, moe_cf=moe_cf, name=f"p{i}")
+            new_c.append(c)
+        return x, tuple(new_c)
+
+    if n_per == 0:
+        new_periods = view["periods"]
+    else:
+        x, new_periods = jax.lax.scan(
+            period_body, x, (params["periods"], view["periods"]))
+
+    new_rest = []
+    for j, layer_p in enumerate(params["rest"]):
+        li = n_per * period + j
+        x, c = blocks.block_apply_chunk(
+            layer_p, x, view["rest"][j], cfg, cfg.block_kind(li),
+            positions=positions, moe_cf=moe_cf, name=f"r{j}")
+        new_rest.append(c)
+
+    x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+    x_last = apply_norm(params["final_ln"], x_last, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x_last)
+    else:
+        logits = linear(params["lm_head"], x_last, "lm_head")
+    new_cache = _slot_scatter(
+        cache, {"periods": new_periods, "rest": new_rest}, slot)
+    return logits[0, 0].astype(jnp.float32), new_cache
+
+
 def prefill(
     params: Dict,
     cfg: ModelConfig,

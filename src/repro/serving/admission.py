@@ -1,0 +1,97 @@
+"""Admission & prefill scheduling policy for the serving engine.
+
+The policy decides, each engine tick, (a) which queued requests claim free
+cache slots (FIFO) and (b) how many prompt tokens may prefill this tick.
+The budget is the temporal-reuse analogue of the paper's hidden
+transmissions (Fig 4c): decode ticks stream every weight through the MDK
+pipeline anyway, so up to ``budget_tokens`` prompt tokens can ride along
+each tick without stalling running decodes — long prompts therefore chunk
+across ticks instead of monopolizing the engine.
+
+The default budget is *derived from the analytic stage program*: the FPGA
+perf model (``core/perfmodel.py``) walks ``core/scheduler.model_program``
+to price one decode tick and one pipelined prefill token, and the budget is
+however many prefill tokens fit in a fixed fraction of the decode tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.perfmodel import FPGAPerfModel
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillChunk:
+    """One scheduled prompt chunk: ``n`` tokens starting at prompt offset
+    ``start``, destined for cache slot ``slot``."""
+
+    slot: int
+    start: int
+    n: int
+
+
+def derive_prefill_budget(
+    cfg: ModelConfig,
+    chunk_size: int,
+    *,
+    nodes: int = 2,
+    hide_frac: float = 0.5,
+) -> int:
+    """Prefill tokens that fit inside ``hide_frac`` of one decode tick.
+
+    Decode is memory-bound (weight streaming); pipelined prefill tokens are
+    compute-bound against the same stream, so their marginal cost is the
+    perf model's ``prefill_token_latency``.  Clamped to
+    [chunk_size, 8*chunk_size] so a P-token prompt always costs
+    ``ceil(P / chunk_size)`` forward calls and one tick never degenerates
+    into a full-prompt stall.
+    """
+    pm = FPGAPerfModel(cfg, nodes=nodes)
+    t_decode = pm.token_latency()["total"]
+    t_prefill = pm.prefill_token_latency()
+    fit = int(hide_frac * t_decode / max(t_prefill, 1e-12))
+    return max(chunk_size, min(fit, 8 * chunk_size))
+
+
+class FIFOAdmission:
+    """FIFO admission + per-tick prefill-chunk budget."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        chunk_size: int = 32,
+        budget_tokens: int | None = None,
+        nodes: int = 2,
+    ):
+        assert chunk_size > 0
+        self.chunk_size = chunk_size
+        if budget_tokens is None:
+            budget_tokens = derive_prefill_budget(cfg, chunk_size,
+                                                  nodes=nodes)
+        self.budget_tokens = max(budget_tokens, chunk_size)
+
+    def plan_chunks(
+        self, prefilling: Sequence[Tuple[int, int, int]]
+    ) -> List[PrefillChunk]:
+        """Schedule this tick's prompt chunks.
+
+        ``prefilling``: (slot, prompt_len, filled) triples in admission
+        (FIFO) order.  Each request gets at most one chunk per tick; the
+        total is capped by ``budget_tokens`` so running decodes are never
+        starved by a burst of long prompts.
+        """
+        budget = self.budget_tokens
+        out: List[PrefillChunk] = []
+        for slot, prompt_len, filled in prefilling:
+            n = min(self.chunk_size, prompt_len - filled)
+            if n <= 0:
+                continue
+            if n > budget:
+                break  # FIFO: wait for next tick rather than split the
+                # chunk (keeps the ceil(P/chunk) forward-call guarantee)
+            out.append(PrefillChunk(slot=slot, start=filled, n=n))
+            budget -= n
+        return out

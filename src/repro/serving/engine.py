@@ -1,23 +1,49 @@
-"""Batched auto-regressive serving engine with continuous batching.
+"""Scheduler-driven continuous-batching serving core.
 
-The engine keeps a fixed pool of B cache slots and one jitted
-``decode_step``; every engine tick advances *all* active slots by one token
-(paper Fig 1 decode stage).  New requests join a free slot immediately —
-their prompt replays through the same decode path (slot-local prefill), so
-admission never stalls running generations and the cache needs no surgery:
-resetting ``lengths[slot] = 0`` masks the stale entries, which are then
-progressively overwritten.
+The engine is organised the way the paper organises the accelerator
+(Fig 1 / Fig 4c): a fixed pool of cache slots executes batched decode
+every tick, and *admission work rides along without stalling it*.
 
-Per-request accounting (prefill/decode token counts, wall time) feeds the
-benchmark harness; ``mdk_stats`` exposes the temporal-reuse counters of the
-scheduler for the Fig 3(c) argument.
+  * **Chunked prefill** — an admitted prompt is written into its slot's KV
+    cache ``chunk_size`` tokens at a time through
+    :func:`repro.models.lm.prefill_into_slot` (one forward call per chunk),
+    so a P-token prompt costs ``ceil(P / chunk_size)`` model calls instead
+    of P decode ticks.  The per-tick prefill token budget comes from
+    :mod:`repro.serving.admission`, which prices one decode tick against
+    the analytic stage program (``core/scheduler.model_program`` via
+    ``core/perfmodel.py``) — the temporal-reuse analogue of the paper's
+    hidden ring transmissions.
+  * **Slot management** — allocation, free, and per-slot length accounting
+    live in :class:`repro.serving.kv_cache.SlotCacheManager`; freeing is
+    mask-only (lengths gate attention), so slot reuse needs no cache
+    surgery.
+  * **Per-request sampling** — every request carries a
+    :class:`repro.serving.sampler.SamplingParams`; the engine packs them
+    into per-slot arrays and one jitted ``sample_batch`` serves the whole
+    heterogeneous batch.
+  * **Ring-TP** — an optional ``mesh=`` routes the dense matmuls through
+    :func:`repro.core.ring.tp_matmul` (the collective-matmul schedule that
+    hides synchronisation inside block matmuls).
+  * **Quantized serving** — W8A8 via SmoothQuant; the quantized engine runs
+    its inter-kernel activation stream in f32, matching the paper's
+    shared-buffer precision (activations quantize at each MP kernel's
+    input, not between kernels).
+
+Block kinds without an absolute-offset cache (rotating local-attention
+windows, recurrent states) use the seed's sequential replay prefill
+(``prefill_mode="replay"``), which is also kept as the old-admission
+baseline for ``benchmarks/serving_bench.py``.
+
+Per-request accounting records TTFT (submit -> first token) and TPOT
+(steady-state decode latency); ``mdk_stats`` exposes the temporal-reuse
+counters for the Fig 3(c) argument.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +51,15 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import scheduler as sched
-from repro.models import lm
+from repro.models import blocks, lm
+from repro.models.layers import tp_context
 from repro.serving import sampler as samplers
+from repro.serving.admission import FIFOAdmission
+from repro.serving.kv_cache import SlotCacheManager
 from repro.serving.quantize import calibrate, quantize_model_params
+
+PREFILL = "prefill"
+DECODE = "decode"
 
 
 @dataclasses.dataclass
@@ -35,15 +67,22 @@ class Request:
     rid: int
     prompt: List[int]
     max_new: int
+    sampling: samplers.SamplingParams = samplers.GREEDY
     out: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     slot: Optional[int] = None
+    state: str = PREFILL
+    filled: int = 0  # prompt tokens already written to the slot's cache
 
     @property
     def done(self) -> bool:
         return self.t_done is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first is None else self.t_first - self.t_submit
 
 
 class ServeEngine:
@@ -57,94 +96,228 @@ class ServeEngine:
         eos_id: int = 0,
         quantized: bool = False,
         calibration_batches=None,
-        sampler: Callable = samplers.greedy,
         seed: int = 0,
+        chunk_size: int = 32,
+        prefill_mode: str = "auto",  # auto | chunked | replay
+        admission: Optional[FIFOAdmission] = None,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        act_dtype=None,
     ):
         self.cfg = cfg
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.B = batch_slots
-        self.sampler = sampler
+        self.chunk_size = min(chunk_size, max_seq)
         if quantized:
             stats = None
             if calibration_batches is not None:
                 stats = calibrate(params, cfg, calibration_batches)
             params = quantize_model_params(params, cfg, stats)
+        # shared-buffer precision: the W8A8 path re-quantizes activations at
+        # every MP kernel input, so the stream between kernels stays f32
+        # (bf16 there would stack a second rounding on top of int8 noise)
+        self.act_dtype = act_dtype or (jnp.float32 if quantized
+                                       else jnp.bfloat16)
         self.params = params
-        self.cache = lm.init_cache(cfg, self.B, max_seq)
-        self.lengths = jnp.zeros((self.B,), jnp.int32)
-        self.cur_tok = jnp.zeros((self.B, 1), jnp.int32)
+
+        if prefill_mode == "auto":
+            prefill_mode = ("chunked" if blocks.chunk_supported(cfg)
+                            else "replay")
+        if prefill_mode == "chunked":
+            assert blocks.chunk_supported(cfg), cfg.block_pattern
+        self.prefill_mode = prefill_mode
+        self.admission = admission or FIFOAdmission(
+            cfg, chunk_size=self.chunk_size)
+        assert self.admission.chunk_size <= self.chunk_size, (
+            "admission schedules chunks larger than the engine's "
+            f"prefill buffer ({self.admission.chunk_size} > "
+            f"{self.chunk_size})")
+
+        self.kv = SlotCacheManager(cfg, batch_slots, max_seq)
+        self.cur_tok = np.zeros((batch_slots, 1), np.int32)
+        self._temp = np.zeros((batch_slots,), np.float32)
+        self._topk = np.zeros((batch_slots,), np.int32)
+        self._topp = np.ones((batch_slots,), np.float32)
         self.rng = jax.random.PRNGKey(seed)
 
-        self._step = jax.jit(
-            lambda params, tok, cache, lengths: lm.decode_step(
-                params, cfg, tok, cache, lengths)
-        )
-        self.slots: List[Optional[Request]] = [None] * self.B
+        def _traced(fn):
+            if mesh is None:
+                return fn
+
+            def wrapped(*args):
+                with tp_context(mesh):
+                    return fn(*args)
+
+            return wrapped
+
+        self._step = jax.jit(_traced(
+            lambda p, tok, cache, lengths: lm.decode_step(
+                p, cfg, tok, cache, lengths, dtype=self.act_dtype)))
+        self._prefill = jax.jit(_traced(
+            lambda p, toks, cache, slot, offset, valid:
+            lm.prefill_into_slot(p, cfg, toks, cache, slot, offset,
+                                 valid=valid, dtype=self.act_dtype)))
+        self._sample = jax.jit(samplers.sample_batch)
+
+        self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: deque = deque()
         self.finished: List[Request] = []
         self._next_rid = 0
         self.ticks = 0
+        self.model_calls = 0  # decode steps + prefill chunks
+        self.prefill_calls = 0
         self.mdk_stats = sched.mdk_stats(cfg)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: List[int], max_new: int = 32) -> int:
+    def submit(
+        self,
+        prompt: List[int],
+        max_new: int = 32,
+        sampling: Optional[samplers.SamplingParams] = None,
+    ) -> int:
+        assert 0 < len(prompt) < self.max_seq, (
+            f"prompt ({len(prompt)} tokens) must fit the cache "
+            f"(max_seq={self.max_seq})")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(
             Request(rid=rid, prompt=list(prompt), max_new=max_new,
+                    sampling=sampling or samplers.GREEDY,
                     t_submit=time.monotonic()))
         return rid
 
     def _admit(self) -> None:
-        for b in range(self.B):
-            if self.slots[b] is None and self.queue:
-                req = self.queue.popleft()
-                req.slot = b
-                self.slots[b] = req
-                self.lengths = self.lengths.at[b].set(0)
-                self.cur_tok = self.cur_tok.at[b, 0].set(req.prompt[0])
+        while self.queue:
+            slot = self.kv.alloc()
+            if slot is None:
+                return
+            req = self.queue.popleft()
+            req.slot = slot
+            req.state = PREFILL
+            req.filled = 0
+            self.slots[slot] = req
+            self._temp[slot] = req.sampling.temperature
+            self._topk[slot] = req.sampling.top_k
+            self._topp[slot] = req.sampling.top_p
+            self.cur_tok[slot, 0] = req.prompt[0]  # replay-mode first token
+
+    # ------------------------------------------------------------------
+    def _emit(self, req: Request, tok: int, now: float) -> None:
+        """Record one generated token and retire the request if finished."""
+        if req.t_first is None:
+            req.t_first = now
+        req.out.append(tok)
+        if (
+            tok == self.eos_id
+            or len(req.out) >= req.max_new
+            or len(req.prompt) + len(req.out) >= self.max_seq
+        ):
+            req.t_done = now
+            self.finished.append(req)
+            self.slots[req.slot] = None
+            self.kv.free(req.slot)
+            self.cur_tok[req.slot, 0] = 0
+        else:
+            req.state = DECODE
+            self.cur_tok[req.slot, 0] = tok
+
+    def _sample_rows(self, logits: jax.Array) -> np.ndarray:
+        self.rng, sub = jax.random.split(self.rng)
+        return np.asarray(self._sample(
+            logits, sub, jnp.asarray(self._temp), jnp.asarray(self._topk),
+            jnp.asarray(self._topp)))
+
+    def _sample_one(self, logits: jax.Array, req: Request) -> int:
+        self.rng, sub = jax.random.split(self.rng)
+        sp = req.sampling
+        return int(self._sample(
+            logits[None], sub,
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32))[0])
 
     # ------------------------------------------------------------------
     def tick(self) -> None:
-        """Advance every active slot by one token."""
+        """One engine tick: a prefill-chunk budget, then one decode step."""
+        if self.prefill_mode == "replay":
+            return self._tick_replay()
+        self._admit()
+        did = False
+
+        # -- chunked prefill within this tick's token budget (FIFO) --
+        prefilling = sorted(
+            (r for r in self.slots if r is not None and r.state == PREFILL),
+            key=lambda r: r.rid)
+        plan = self.admission.plan_chunks(
+            [(r.slot, len(r.prompt), r.filled) for r in prefilling])
+        for ch in plan:
+            req = self.slots[ch.slot]
+            chunk = np.zeros((self.chunk_size,), np.int32)
+            chunk[:ch.n] = req.prompt[ch.start:ch.start + ch.n]
+            logits, self.kv.cache = self._prefill(
+                self.params, jnp.asarray(chunk), self.kv.cache,
+                ch.slot, ch.start, ch.n)
+            self.model_calls += 1
+            self.prefill_calls += 1
+            req.filled += ch.n
+            self.kv.advance(ch.slot, ch.n)
+            if req.filled == len(req.prompt):
+                # first generated token comes straight off the prefill
+                # logits — this is the TTFT the chunked path buys
+                self._emit(req, self._sample_one(logits, req),
+                           time.monotonic())
+            did = True
+
+        # -- one batched decode step over all decoding slots --
+        decoding = [r is not None and r.state == DECODE for r in self.slots]
+        if any(decoding):
+            logits, self.kv.cache = self._step(
+                self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                self.kv.lengths)
+            self.model_calls += 1
+            sampled = self._sample_rows(logits)
+            self.kv.advance_mask(np.asarray(decoding))
+            now = time.monotonic()
+            for b, req in enumerate(self.slots):
+                if req is not None and req.state == DECODE and decoding[b]:
+                    self._emit(req, int(sampled[b]), now)
+            did = True
+
+        if did:
+            self.ticks += 1
+
+    # ------------------------------------------------------------------
+    def _tick_replay(self) -> None:
+        """Seed-engine admission: replay the prompt one token per tick
+        through the decode path (kept for rotating-window/recurrent kinds
+        and as the benchmark baseline)."""
         self._admit()
         if all(s is None for s in self.slots):
             return
-        logits, self.cache = self._step(
-            self.params, self.cur_tok, self.cache, self.lengths)
-        self.rng, sub = jax.random.split(self.rng)
-        sampled = self.sampler(logits, sub)  # (B,)
-        sampled_h = np.asarray(sampled)
-        lengths_h = np.asarray(self.lengths)
+        logits, self.kv.cache = self._step(
+            self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+            self.kv.lengths)
+        self.model_calls += 1
+        sampled = self._sample_rows(logits)
+        lengths_h = np.asarray(self.kv.lengths)
         now = time.monotonic()
+        occupied = [s is not None for s in self.slots]
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
             pos = int(lengths_h[b]) + 1  # tokens in cache after this tick
             if pos < len(req.prompt):  # still prefilling: teacher-force
-                nxt = req.prompt[pos]
+                req.filled = pos
+                self.cur_tok[b, 0] = req.prompt[pos]
             else:
-                if req.t_first is None:
-                    req.t_first = now
-                tok = int(sampled_h[b])
-                req.out.append(tok)
-                nxt = tok
-                if (
-                    tok == self.eos_id
-                    or len(req.out) >= req.max_new
-                    or pos + 1 >= self.max_seq
-                ):
-                    req.t_done = now
-                    self.finished.append(req)
-                    self.slots[b] = None
-                    continue
-            self.cur_tok = self.cur_tok.at[b, 0].set(nxt)
-        # every slot's cache advanced by one write; freed/empty slots get
-        # reset to 0 at admission, so a uniform +1 is safe.
-        self.lengths = self.lengths + 1
+                req.filled = len(req.prompt)
+                self._emit(req, int(sampled[b]), now)
+        # advance every slot that was occupied when the step ran (freed-
+        # this-tick slots get their stale +1 reset at the next alloc)
+        self.kv.advance_mask(np.asarray(occupied))
         self.ticks += 1
 
+    # ------------------------------------------------------------------
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         while (self.queue or any(s is not None for s in self.slots)) and (
             self.ticks < max_ticks
@@ -154,7 +327,8 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        lat = [
+        ttft = [r.ttft for r in self.finished if r.ttft is not None]
+        tpot = [
             (r.t_done - r.t_first) / max(1, len(r.out) - 1)
             for r in self.finished
             if r.t_done and r.t_first and len(r.out) > 1
@@ -162,6 +336,9 @@ class ServeEngine:
         return {
             "requests": len(self.finished),
             "ticks": self.ticks,
-            "mean_tok_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "model_calls": self.model_calls,
+            "prefill_calls": self.prefill_calls,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "mean_tok_latency_s": float(np.mean(tpot)) if tpot else 0.0,
             "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
         }

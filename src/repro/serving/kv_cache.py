@@ -1,0 +1,93 @@
+"""Slot-granular KV-cache manager for the serving engine.
+
+``SlotCacheManager`` owns the batched decode cache: a fixed pool of
+``batch_slots`` cache slots, per-slot fill lengths, and slot
+allocation/free.  It is deliberately engine-agnostic — the same manager
+backs the single-device engine and the ring-TP path (the cache pytree it
+holds is whatever :func:`repro.models.lm.init_cache` produced, sharded or
+not), and is the piece a future paged-KV allocator replaces.
+
+Correctness model: a slot's *length* is the single source of truth for
+what the model may attend to.  Freeing a slot only resets its length —
+stale K/V entries above the length are masked by the attention kernels and
+progressively overwritten by the next occupant (chunked prefill writes
+from offset 0 up; decode writes at the length cursor).  No cache surgery
+is ever required.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+class SlotCacheManager:
+    """Owns the slot pool, per-slot lengths, and the cache pytree."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        batch_slots: int,
+        max_seq: int,
+        *,
+        layout: str = "stacked",
+        dtype=jnp.bfloat16,
+    ):
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.cache: Dict = lm.init_cache(
+            cfg, batch_slots, max_seq, layout=layout, dtype=dtype)
+        self.lengths = jnp.zeros((batch_slots,), jnp.int32)
+        self._free: List[int] = list(range(batch_slots))
+        self._used: set = set()
+
+    # -- slot lifecycle -------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """Claim a free slot (length reset to 0), or None if pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop(0)
+        self._used.add(slot)
+        self.lengths = self.lengths.at[slot].set(0)
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Return a slot to the pool; stale cache content stays masked."""
+        assert slot in self._used, slot
+        self._used.discard(slot)
+        self._free.append(slot)
+        self._free.sort()  # deterministic reuse order
+        self.lengths = self.lengths.at[slot].set(0)
+
+    def reset(self, slot: int) -> None:
+        """Restart a held slot from position 0 (masks its old content)."""
+        assert slot in self._used, slot
+        self.lengths = self.lengths.at[slot].set(0)
+
+    # -- length accounting ---------------------------------------------
+    def advance(self, slot: int, n: int) -> None:
+        """Record n tokens written to a slot (chunked-prefill bookkeeping)."""
+        self.lengths = self.lengths.at[slot].add(n)
+
+    def advance_mask(self, mask) -> None:
+        """Advance every masked slot by one token (one decode tick)."""
+        self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
+
+    def length_of(self, slot: int) -> int:
+        return int(self.lengths[slot])
+
+    # -- introspection --------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def has_room(self, slot: int, n: int = 1) -> bool:
+        return self.length_of(slot) + n <= self.max_seq

@@ -7,6 +7,15 @@ calibration context records per-linear activation absmax;
 "smooth"}``, vmapping over stacked period axes.  Norms (1-D "w"), embedding
 tables, convs and the MoE router stay in floating point — matching the
 paper, which quantizes the matrix-processing path only.
+
+Scale granularity (audited against the engine's greedy-agreement test):
+weights are per-*output*-channel symmetric int8 (``w_scale`` (1, N) — this
+holds for the q/k/v projections and the untied lm_head alike; the tied
+unembedding stays fp), activations are dynamic per-token.  The remaining
+serving-side precision lever is the *inter-kernel stream*: the engine runs
+the quantized path's shared activation buffer in f32 (see
+``serving/engine.py``), since a bf16 buffer stacks a second rounding on
+top of the int8 noise between every pair of MDKs.
 """
 from __future__ import annotations
 

@@ -1,8 +1,25 @@
-"""Token samplers for the serving engine (pure functions of logits + rng)."""
+"""Token samplers for the serving engine.
+
+Two layers:
+
+  * pure single-policy functions (:func:`greedy`, :func:`temperature`,
+    :func:`top_k`) — kept for tests and offline use;
+  * :class:`SamplingParams` + :func:`sample_batch` — the engine path.  Each
+    request carries its own (temperature, top_k, top_p); the engine packs
+    them into per-slot arrays and one jitted ``sample_batch`` call samples
+    the whole batch, so heterogeneous requests share a single decode tick.
+
+Convention: ``temperature <= 0`` means greedy (argmax); ``top_k <= 0``
+disables the top-k filter; ``top_p >= 1`` disables the nucleus filter.
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+_NEG_INF = -1e30
 
 
 def greedy(logits: jax.Array, rng=None) -> jax.Array:
@@ -21,3 +38,57 @@ def top_k(logits: jax.Array, rng: jax.Array, k: int = 40, temp: float = 0.8):
     return jnp.take_along_axis(idx, choice[..., None], axis=-1)[..., 0].astype(
         jnp.int32
     )
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling (engine path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding policy. Defaults reproduce greedy decoding."""
+
+    temperature: float = 0.0  # <= 0 -> greedy
+    top_k: int = 0  # <= 0 -> no top-k filter
+    top_p: float = 1.0  # >= 1 -> no nucleus filter
+
+
+GREEDY = SamplingParams()
+
+
+def sample_batch(
+    logits: jax.Array,  # (B, V)
+    rng: jax.Array,
+    temp: jax.Array,  # (B,) f32
+    topk: jax.Array,  # (B,) i32
+    topp: jax.Array,  # (B,) f32
+) -> jax.Array:
+    """Sample one token per row under that row's sampling params.
+
+    Fully vectorized: rows with temp<=0 take the argmax; the rest apply
+    temperature, then a per-row top-k cut (mask below the k-th largest
+    logit), then a per-row nucleus (top-p) cut, then categorical sampling.
+    Returns (B,) i32.
+    """
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(lg, axis=-1)
+
+    x = lg / jnp.maximum(temp, 1e-4)[:, None]
+    # per-row top-k: threshold at the k-th largest value (k<=0 -> keep all)
+    sorted_desc = -jnp.sort(-x, axis=-1)  # (B, V) descending
+    k = jnp.clip(jnp.where(topk <= 0, V, topk), 1, V)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    x = jnp.where(x >= kth, x, _NEG_INF)
+    # per-row top-p on the filtered distribution: keep the smallest prefix
+    # of descending probs whose cumulative mass reaches p
+    probs = jax.nn.softmax(x, axis=-1)
+    sp = -jnp.sort(-probs, axis=-1)
+    keep = (jnp.cumsum(sp, axis=-1) - sp) < topp[:, None]
+    keep = keep.at[:, 0].set(True)  # top_p <= 0 still keeps the top token
+    cutoff = jnp.min(jnp.where(keep, sp, jnp.inf), axis=-1, keepdims=True)
+    x = jnp.where(probs >= cutoff, x, _NEG_INF)
+
+    tok = jax.random.categorical(rng, x, axis=-1)
+    return jnp.where(temp <= 0.0, greedy_tok, tok).astype(jnp.int32)

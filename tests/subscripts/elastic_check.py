@@ -16,14 +16,12 @@ import numpy as np  # noqa: E402
 
 from repro.checkpoint.manager import CheckpointManager  # noqa: E402
 from repro.configs import get_config  # noqa: E402
-from repro.core import partition  # noqa: E402
+from repro.core import compat, partition  # noqa: E402
 from repro.models import lm  # noqa: E402
 
 
 def mesh_of(shape):
-    return jax.make_mesh(
-        shape, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh(shape, ("data", "model"))
 
 
 def main():

@@ -13,13 +13,12 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import ring  # noqa: E402
+from repro.core import compat, ring  # noqa: E402
 from repro.core.collectives import compressed_psum  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("model",))
     rng = np.random.default_rng(0)
 
     # --- ring / naive collective matmuls == dense matmul ---
@@ -43,9 +42,9 @@ def main():
 
     # --- compressed int8 ring all-reduce ~= exact psum ---
     xs = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
-    f = jax.shard_map(lambda x: compressed_psum(x[0], "model")[None],
-                      mesh=mesh, in_specs=P("model", None),
-                      out_specs=P("model", None))
+    f = compat.shard_map(lambda x: compressed_psum(x[0], "model")[None],
+                         mesh=mesh, in_specs=P("model", None),
+                         out_specs=P("model", None))
     got = np.asarray(f(xs))
     want = np.asarray(jnp.sum(xs, axis=0))
     rel = np.abs(got - want[None]).max() / np.abs(want).max()
@@ -64,6 +63,21 @@ def main():
         .lower(xl, wl).compile().as_text()
     )
     assert "all-gather" in txt2
+
+    # --- serving engine routed through ring-TP == plain engine ---
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serving.engine import ServeEngine
+
+    cfg = get_config("gpt2-345m").reduced()  # d=64, ff=128, V=512: all %8==0
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=32)
+    outs = {}
+    for label, m in (("plain", None), ("ring", mesh)):
+        eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, eos_id=-1,
+                          chunk_size=8, mesh=m)
+        eng.submit([5, 6, 7, 8], max_new=3)
+        outs[label] = eng.run()[0].out
+    assert outs["plain"] == outs["ring"], outs
 
     print("RING_OK")
 

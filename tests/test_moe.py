@@ -3,6 +3,9 @@ load-balance loss."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip module if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -3,6 +3,9 @@ decode == seq, sliding-window cache == windowed reference."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; skip module if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
