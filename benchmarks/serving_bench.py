@@ -1,21 +1,33 @@
-"""Serving benchmark: chunked-prefill admission vs the seed replay path.
+"""Serving benchmark: chunked-prefill admission vs the seed replay path,
+and the paged KV cache's prefix sharing on a shared-system-prompt fleet.
 
     PYTHONPATH=src python benchmarks/serving_bench.py [--requests 8]
         [--chunk 16] [--slots 3] [--max-new 8] [--seed 0]
+        [--sys-len 96] [--page-size 16]
 
-Drives the same mixed-prompt-length request stream (short interactive
-prompts interleaved with long ones) through both admission modes of
-``ServeEngine`` and reports per-mode TTFT, TPOT, ticks, model calls, and
-throughput.  Also verifies the tentpole acceptance criteria directly:
+Part 1 drives the same mixed-prompt-length request stream (short
+interactive prompts interleaved with long ones) through both admission
+modes of ``ServeEngine`` and reports per-mode TTFT, TPOT, ticks, model
+calls, and throughput.  Also verifies the tentpole acceptance criteria
+directly:
 
   * chunked prefill generates exactly the replay path's tokens on the same
     greedy stream (logit-level equivalence is asserted in
     ``tests/test_serving.py``), and
   * a P-token prompt costs ``ceil(P / chunk)`` prefill forward calls.
 
+Part 2 is the paged-KV workload every production fleet runs: one shared
+system prompt ahead of short per-user tails.  The same greedy stream goes
+through the contiguous layout, the paged layout with sharing disabled,
+and the paged layout with prefix sharing, and the table reports pages
+allocated, prefix-share hit rate, and TTFT.  All three streams must be
+token-identical (pages are a layout, not a model change), and sharing
+must allocate >=30% fewer pages than no-sharing paged mode (PR-2
+acceptance criterion; shared full prompt pages are linked, not copied).
+
 On CPU the wall-clock gap understates the paper's pipeline argument (no
 weight-streaming overlap here), so the headline columns are the *schedule*
-quantities — ticks and model calls — which are hardware-independent.
+quantities — ticks, model calls, pages — which are hardware-independent.
 """
 from __future__ import annotations
 
@@ -44,9 +56,22 @@ def build_workload(rng: np.random.Generator, n_requests: int, vocab: int):
     return prompts
 
 
-def run_mode(cfg, params, prompts, *, mode, chunk, slots, max_new, max_seq):
+def build_shared_workload(rng, n_requests, vocab, sys_len, tail=(4, 16)):
+    """One shared system prompt + short unique per-user tails."""
+    sys_prompt = list(rng.integers(1, vocab, sys_len))
+    return [
+        sys_prompt + list(rng.integers(1, vocab,
+                                       int(rng.integers(*tail))))
+        for _ in range(n_requests)
+    ]
+
+
+def run_mode(cfg, params, prompts, *, mode, chunk, slots, max_new, max_seq,
+             kv_layout="auto", page_size=16, prefix_sharing=True):
     eng = ServeEngine(cfg, params, batch_slots=slots, max_seq=max_seq,
-                      eos_id=-1, prefill_mode=mode, chunk_size=chunk)
+                      eos_id=-1, prefill_mode=mode, chunk_size=chunk,
+                      kv_layout=kv_layout, page_size=page_size,
+                      prefix_sharing=prefix_sharing)
     # warm the jit caches (prefill-chunk + decode-step compiles) so TTFT
     # measures the schedule, not XLA compilation
     eng.submit(list(range(1, chunk + 2)), max_new=2)
@@ -54,6 +79,8 @@ def run_mode(cfg, params, prompts, *, mode, chunk, slots, max_new, max_seq):
     warm = len(eng.finished)
     t_ticks, t_calls, t_pcalls = eng.ticks, eng.model_calls, \
         eng.prefill_calls
+    t_pages = eng.kv.pages_allocated_total if eng.paged else 0
+    t_hits = eng.kv.prefix_hit_pages if eng.paged else 0
 
     for p in prompts:
         eng.submit(p, max_new=max_new)
@@ -73,6 +100,10 @@ def run_mode(cfg, params, prompts, *, mode, chunk, slots, max_new, max_seq):
         "prefill_calls": eng.prefill_calls - t_pcalls,
         "tok_per_s": toks / max(wall, 1e-9),
         "wall_s": wall,
+        "pages": (eng.kv.pages_allocated_total - t_pages
+                  if eng.paged else 0),
+        "hit_pages": (eng.kv.prefix_hit_pages - t_hits
+                      if eng.paged else 0),
     }
 
 
@@ -84,6 +115,8 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sys-len", type=int, default=96)
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config("gpt2-345m").reduced()
@@ -123,6 +156,43 @@ def main() -> None:
     assert rows["chunked"]["prefill_calls"] == expected_prefill
     assert rows["chunked"]["ticks"] < rows["replay"]["ticks"]
     assert rows["chunked"]["ttft_s"] < rows["replay"]["ttft_s"]
+
+    # -- part 2: shared-system-prompt fleet through the paged KV cache --
+    shared = build_shared_workload(rng, args.requests, cfg.vocab_size,
+                                   args.sys_len)
+    print(f"\nshared-prefix workload: {args.requests} requests, "
+          f"{args.sys_len}-token system prompt, tails "
+          f"{sorted(len(p) - args.sys_len for p in shared)}, "
+          f"page_size={args.page_size}")
+    variants = {
+        "stacked": dict(kv_layout="stacked"),
+        "paged": dict(kv_layout="paged", prefix_sharing=False),
+        "paged+share": dict(kv_layout="paged", prefix_sharing=True),
+    }
+    srows = {
+        name: run_mode(cfg, params, shared, mode="chunked",
+                       chunk=args.chunk, slots=args.slots,
+                       max_new=args.max_new, max_seq=args.max_seq,
+                       page_size=args.page_size, **kw)
+        for name, kw in variants.items()
+    }
+    print(f"\n{'layout':12s} {'ttft_ms':>9s} {'pages':>6s} {'hits':>6s} "
+          f"{'hit_rate':>9s}")
+    for name, r in srows.items():
+        linked = r["pages"] + r["hit_pages"]
+        rate = r["hit_pages"] / linked if linked else 0.0
+        print(f"{name:12s} {r['ttft_s']*1e3:9.2f} {r['pages']:6d} "
+              f"{r['hit_pages']:6d} {rate:9.1%}")
+
+    outs = [r["outs"] for r in srows.values()]
+    assert outs[0] == outs[1] == outs[2], (
+        "KV layout changed the generated stream")
+    saved = 1 - srows["paged+share"]["pages"] / max(srows["paged"]["pages"],
+                                                    1)
+    print(f"\nshared-prefix pages saved vs no-sharing paged: {saved:.1%}")
+    assert saved >= 0.30, (
+        "prefix sharing must allocate >=30% fewer pages on the "
+        f"shared-system-prompt workload (got {saved:.1%})")
     print("SERVING_BENCH_OK")
 
 

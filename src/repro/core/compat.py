@@ -12,13 +12,23 @@ appeared between those versions:
   * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)`` —
     explicit axis typing is newer-jax only; plain ``Mesh`` behaves the same
     for our shard_map-driven collectives.
+  * ``pltpu.CompilerParams`` — renamed from ``TPUCompilerParams``; the
+    Pallas kernels build theirs through :func:`tpu_compiler_params`.
 
-Everything else in ``core/`` should import these wrappers instead of
-feature-detecting locally.
+Everything else in ``core/`` (and ``kernels/``) should import these
+wrappers instead of feature-detecting locally.
 """
 from __future__ import annotations
 
 import jax
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` on new jax, ``TPUCompilerParams`` on 0.4.x."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
 
 
 def shard_map(f, mesh, in_specs, out_specs):

@@ -21,6 +21,8 @@ from repro.kernels import ref
 from repro.kernels.ln_res_kernel import ln_res as _ln_res_pallas
 from repro.kernels.mha_kernel import mha_decode as _mha_pallas
 from repro.kernels.mp_kernel import mp_matmul as _mp_pallas
+from repro.kernels.paged_mha_kernel import \
+    paged_mha_decode as _paged_mha_pallas
 
 
 def _on_tpu() -> bool:
@@ -111,6 +113,39 @@ def mha_decode(
         vp,
         lengths,
         bs=bs,
+        window=window,
+        interpret=(backend == "interpret"),
+    )
+
+
+def paged_mha_decode(
+    q,
+    k_pages,
+    v_pages,
+    lengths,
+    block_table,
+    *,
+    window: int = 0,
+    backend: str = "auto",
+):
+    """Fused decode attention over a paged KV cache (block-table gather).
+
+    ``k_pages``/``v_pages`` are the global page pool ``(P, Hkv, ps, D)``;
+    ``block_table`` ``(B, n_pg)`` names each sequence's pages.  The jnp
+    path gathers the pool into a contiguous view and reuses the contiguous
+    oracle, so it is bit-exact against :func:`mha_decode` on the same
+    logical cache content; the Pallas path streams pages directly through
+    the BlockSpec index map (no materialized gather).
+    """
+    if not _use_pallas(backend):
+        return ref.paged_mha_decode_ref(
+            q, k_pages, v_pages, lengths, block_table, window=window)
+    return _paged_mha_pallas(
+        q,
+        k_pages,
+        v_pages,
+        lengths,
+        block_table,
         window=window,
         interpret=(backend == "interpret"),
     )

@@ -1,0 +1,143 @@
+"""Paged MHA decode Pallas kernel — the Fused MHA MDK over a paged cache.
+
+Same head-wise online-softmax pipeline as ``mha_kernel.py`` (the paper's
+Fig 6b task-level pipeline adapted to TPU single-pass form), but the KV
+cache lives in a global *page pool* ``(P, Hkv, page_size, D)`` and each
+sequence names its pages through a block table ``(B, n_pg)``.  The block
+table is a **scalar-prefetch** operand (``PrefetchScalarGridSpec``): the
+K/V BlockSpec index maps read ``bt[b, s]`` *before* the kernel body runs,
+so the page DMA for grid step ``(b, h, s)`` fetches exactly the page that
+sequence ``b`` owns at logical block ``s`` — the gather costs no extra HBM
+traffic over the contiguous kernel, it just redirects the existing block
+stream through the table.
+
+GQA stays in the index map (query head ``h`` reads KV head ``h // group``),
+and the length mask works on *logical* positions ``s * page_size + i``, so
+null pages (block-table entries 0 for unallocated blocks) are masked the
+same way stale contiguous cache content is.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import compat
+
+_NEG_INF = -1e30
+
+
+def _paged_mha_kernel(
+    bt_ref,  # (B, n_pg) i32 scalar-prefetch (consumed by index maps)
+    len_ref,  # (B, 1) i32 scalar-prefetch
+    q_ref,  # (1, 1, D)
+    k_ref,  # (1, 1, ps, D) — the page named by bt[b, s]
+    v_ref,  # (1, 1, ps, D)
+    o_ref,  # (1, 1, D)
+    acc_ref,  # (1, D) f32 scratch
+    m_ref,  # (1, 1) f32 scratch
+    l_ref,  # (1, 1) f32 scratch
+    *,
+    n_pg: int,
+    ps: int,
+    window: int,
+):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    d = q_ref.shape[-1]
+    q = q_ref[0].astype(jnp.float32)  # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (ps, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (ps, D)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (1.0 / (d**0.5))  # (1, ps)
+
+    length = len_ref[b, 0]
+    pos = s * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    valid = pos < length
+    if window:
+        valid = jnp.logical_and(valid, pos >= length - window)
+    scores = jnp.where(valid, scores, _NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(scores))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (1, ps)
+
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p)
+    m_ref[0, 0] = m_new
+
+    @pl.when(s == n_pg - 1)
+    def _final():
+        l = l_ref[0, 0]
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_mha_decode(
+    q: jax.Array,  # (B, H, D)
+    k_pages: jax.Array,  # (P, Hkv, ps, D) page pool
+    v_pages: jax.Array,  # (P, Hkv, ps, D)
+    lengths: jax.Array,  # (B,) i32
+    block_table: jax.Array,  # (B, n_pg) i32 page ids
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    _, Hkv, ps, _ = k_pages.shape
+    n_pg = block_table.shape[1]
+    assert H % Hkv == 0, (q.shape, k_pages.shape)
+    group = H // Hkv
+    grid = (B, H, n_pg)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block table + lengths feed the index maps
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, s, bt, ln: (b, h, 0)),
+            pl.BlockSpec(
+                (1, 1, ps, D),
+                lambda b, h, s, bt, ln: (bt[b, s], h // group, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, ps, D),
+                lambda b, h, s, bt, ln: (bt[b, s], h // group, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, s, bt, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_mha_kernel, n_pg=n_pg, ps=ps, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        block_table.astype(jnp.int32),
+        lengths.reshape(B, 1).astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )

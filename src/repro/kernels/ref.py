@@ -80,6 +80,47 @@ def mha_decode_ref(
 
 
 # ---------------------------------------------------------------------------
+# Paged MHA decode oracle: block-table gather + single-token attention
+# ---------------------------------------------------------------------------
+
+
+def paged_gather_ref(
+    pages: jax.Array,  # (P, Hkv, ps, D) global page pool
+    block_table: jax.Array,  # (B, n_pg) i32 page ids per sequence
+) -> jax.Array:
+    """Gather each sequence's pages into a contiguous (B, Hkv, n_pg*ps, D)
+    view.  Unallocated block-table entries point at the reserved null page
+    (id 0); its contents land above every sequence's length and are masked
+    by the attention length/causality accounting, exactly like stale slot
+    content in the contiguous layout."""
+    g = pages[block_table]  # (B, n_pg, Hkv, ps, D)
+    B, n_pg, Hkv, ps, D = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, n_pg * ps, D)
+
+
+def paged_mha_decode_ref(
+    q: jax.Array,  # (B, H, D)
+    k_pages: jax.Array,  # (P, Hkv, ps, D)
+    v_pages: jax.Array,  # (P, Hkv, ps, D)
+    lengths: jax.Array,  # (B,) i32 valid tokens per sequence
+    block_table: jax.Array,  # (B, n_pg) i32
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention over a paged KV cache.
+
+    Semantically the contiguous :func:`mha_decode_ref` applied to the
+    block-table gather of the page pool — the gathered view is bit-identical
+    to the contiguous cache at every position below ``lengths`` (pages hold
+    the same K/V values, written at the same rope'd positions), and masked
+    positions contribute exactly zero either way, so paged decode is
+    bit-exact against the contiguous layout.
+    """
+    k = paged_gather_ref(k_pages, block_table)
+    v = paged_gather_ref(v_pages, block_table)
+    return mha_decode_ref(q, k, v, lengths, window=window)
+
+
+# ---------------------------------------------------------------------------
 # Fused LN&Res oracle: residual add + norm (+ per-token int8 quant epilogue)
 # ---------------------------------------------------------------------------
 

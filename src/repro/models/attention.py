@@ -181,3 +181,45 @@ def _write_cache(cache: jax.Array, new: jax.Array, lengths: jax.Array):
     """cache (B, Hkv, S, hd); new (B, Hkv, hd) written at slot lengths[b]."""
     B = cache.shape[0]
     return cache.at[jnp.arange(B), :, lengths].set(new.astype(cache.dtype))
+
+
+def paged_decode_attention(
+    p: Dict,
+    x: jax.Array,  # (B, 1, D) current token
+    cfg: ModelConfig,
+    k_pages: jax.Array,  # (P, Hkv, ps, hd) global page pool
+    v_pages: jax.Array,
+    lengths: jax.Array,  # (B,) tokens already cached (position of new one)
+    block_table: jax.Array,  # (B, n_pg) i32 page ids per sequence
+    *,
+    name: str = "",
+):
+    """One-token cached attention against a paged KV cache.
+
+    The new token's K/V are written into the page the block table names for
+    logical position ``lengths[b]`` (decode tail pages are uniquely owned —
+    prefix sharing only ever shares *full, immutable* prompt pages — so the
+    batched scatter cannot collide between live requests; idle rows all
+    target the reserved null page 0, where any write order is acceptable
+    because its content is never unmasked).  Attention then runs through
+    the paged Fused-MHA MDK (``ops.paged_mha_decode``), which is bit-exact
+    against :func:`decode_attention` on the same logical cache content.
+
+    Returns (out (B,1,D), new_k_pages, new_v_pages).
+    """
+    B = x.shape[0]
+    ps = k_pages.shape[2]
+    q, k, v = _project_qkv(p, cfg, x, name)  # (B,1,H,hd) / (B,1,Hkv,hd)
+    if cfg.pos == "rope":
+        pos = lengths[:, None]  # (B, 1) — position of the new token
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    page = block_table[jnp.arange(B), lengths // ps]  # (B,)
+    off = lengths % ps
+    k_pages = k_pages.at[page, :, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page, :, off].set(v[:, 0].astype(v_pages.dtype))
+    out = ops.paged_mha_decode(
+        q[:, 0], k_pages, v_pages, lengths + 1, block_table
+    )  # (B, H, hd)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return linear(p["out"], out, name + ".out"), k_pages, v_pages

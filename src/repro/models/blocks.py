@@ -209,13 +209,23 @@ def block_apply_step(
     *,
     cross_cache: Optional[Dict] = None,
     enc_lengths: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,  # (B, n_pg) => paged cache
     moe_cf: Optional[float] = None,  # None = exact capacity (tiny batches)
     name: str = "",
 ) -> Tuple[jax.Array, Dict]:
     """Returns (x_out (B,1,d), new_cache)."""
     h = apply_norm(p["ln1"], x, cfg.norm)
     if kind in ("attn", "local_attn"):
-        if kind == "local_attn":
+        if block_table is not None:
+            if kind != "attn":
+                raise NotImplementedError(
+                    "paged KV cache covers global-attention stacks only "
+                    f"(got block kind {kind!r})")
+            out, k_c, v_c = attention.paged_decode_attention(
+                p["attn"], h, cfg, cache["k"], cache["v"], lengths,
+                block_table, name=name + ".attn",
+            )
+        elif kind == "local_attn":
             W = cache["k"].shape[2]
             slots = lengths % W
             eff_len = jnp.minimum(lengths, W)  # valid entries before write

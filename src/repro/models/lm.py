@@ -294,6 +294,18 @@ def loss_fn(
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                layout: str = "stacked", dtype=jnp.bfloat16) -> Dict:
+    """``layout="stacked"`` / ``"layers"``: contiguous per-slot regions —
+    ``batch`` cache slots of ``max_seq`` positions each.  ``layout="paged"``:
+    the leading axis is a global *page pool* instead of the slot batch —
+    ``batch`` pages of ``max_seq``(= page_size) tokens each, addressed
+    through per-request block tables (see ``serving/kv_cache.py``).  The
+    paged layout is only defined for global-attention stacks (the kinds
+    :func:`repro.models.blocks.chunk_supported` admits); rotating-window
+    and recurrent caches are not page-addressable."""
+    if layout == "paged":
+        assert blocks.chunk_supported(cfg), (
+            "paged KV cache requires a global-attention stack",
+            cfg.block_pattern)
     period = _period(cfg)
     n_per, n_rest = _layer_counts(cfg)
     if layout == "layers":
@@ -346,11 +358,16 @@ def decode_step(
     lengths: jax.Array,  # (B,) i32 — positions already in cache
     *,
     enc_lengths: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,  # (B, n_pg) => paged cache
     unroll_periods: bool = False,  # exact per-layer HLO for the dry-run
     moe_cf: Optional[float] = None,
     dtype=jnp.bfloat16,
 ):
-    """One auto-regressive step. Returns (logits (B, V), new_cache)."""
+    """One auto-regressive step. Returns (logits (B, V), new_cache).
+
+    With ``block_table`` the cache is the paged layout
+    (``init_cache(..., layout="paged")``): attention K/V are read and
+    written through the table instead of a per-slot batch axis."""
     B = token.shape[0]
     x = embed(params["embed"], token, dtype)  # (B, 1, d)
     if cfg.pos == "learned":
@@ -369,7 +386,8 @@ def decode_step(
                 layer_p[i], x, layer_c[i], lengths, cfg,
                 cfg.block_pattern[i],
                 cross_cache=(cross_c[i] if has_cross else None),
-                enc_lengths=enc_lengths, moe_cf=moe_cf, name=f"p{i}")
+                enc_lengths=enc_lengths, block_table=block_table,
+                moe_cf=moe_cf, name=f"p{i}")
             new_c.append(c)
         return x, tuple(new_c)
 
@@ -395,7 +413,8 @@ def decode_step(
         x, c = blocks.block_apply_step(
             layer_p, x, cache["rest"][j], lengths, cfg, cfg.block_kind(li),
             cross_cache=(cache["cross"]["rest"][j] if has_cross else None),
-            enc_lengths=enc_lengths, moe_cf=moe_cf, name=f"r{j}")
+            enc_lengths=enc_lengths, block_table=block_table,
+            moe_cf=moe_cf, name=f"r{j}")
         new_rest.append(c)
 
     x = apply_norm(params["final_ln"], x, cfg.norm)
@@ -435,6 +454,58 @@ def _slot_scatter(cache: Dict, view: Dict, slot) -> Dict:
     return new_cache
 
 
+def _paged_view(cache: Dict, bt_row: jax.Array) -> Dict:
+    """Gather one request's pages into the contiguous slot-view shape the
+    chunk path expects: ``(1, Hkv, n_pg*ps, hd)`` per layer (with the
+    period stack keeping pages on axis 1, where the batch axis sits in the
+    contiguous layout).  The gathered view is value-identical to a
+    contiguous slot at every logical position, so the chunk attention math
+    is shared verbatim between layouts."""
+    n_pg = bt_row.shape[0]
+
+    def g_rest(t):  # (P, Hkv, ps, hd) -> (1, Hkv, n_pg*ps, hd)
+        g = t[bt_row].transpose(1, 0, 2, 3)  # (Hkv, n_pg, ps, hd)
+        return g.reshape(t.shape[1], n_pg * t.shape[2], t.shape[3])[None]
+
+    def g_per(t):  # (n_per, P, Hkv, ps, hd) -> (n_per, 1, Hkv, n_pg*ps, hd)
+        g = t[:, bt_row].transpose(0, 2, 1, 3, 4)
+        return g.reshape(
+            t.shape[0], t.shape[2], n_pg * t.shape[3], t.shape[4])[:, None]
+
+    return {
+        "periods": jax.tree_util.tree_map(g_per, cache["periods"]),
+        "rest": jax.tree_util.tree_map(g_rest, cache["rest"]),
+    }
+
+
+def _paged_scatter(cache: Dict, view: Dict, bt_row: jax.Array) -> Dict:
+    """Scatter a request's updated contiguous view back onto its pages.
+    Pages the chunk did not write (including refcount-shared prefix pages)
+    get back their exact gathered bits, so shared pages are never mutated;
+    duplicate null-page entries in an unfilled block-table row all write
+    the null page, whose content is never unmasked."""
+    n_pg = bt_row.shape[0]
+
+    def s_rest(full, v):  # v (1, Hkv, n_pg*ps, hd)
+        Hkv, ps, hd = full.shape[1], full.shape[2], full.shape[3]
+        pages = v[0].reshape(Hkv, n_pg, ps, hd).transpose(1, 0, 2, 3)
+        return full.at[bt_row].set(pages.astype(full.dtype))
+
+    def s_per(full, v):  # v (n_per, 1, Hkv, n_pg*ps, hd)
+        n_per, Hkv, ps, hd = (full.shape[0], full.shape[2], full.shape[3],
+                              full.shape[4])
+        pages = v[:, 0].reshape(n_per, Hkv, n_pg, ps, hd).transpose(
+            0, 2, 1, 3, 4)
+        return full.at[:, bt_row].set(pages.astype(full.dtype))
+
+    new_cache = dict(cache)
+    new_cache["periods"] = jax.tree_util.tree_map(
+        s_per, cache["periods"], view["periods"])
+    new_cache["rest"] = jax.tree_util.tree_map(
+        s_rest, cache["rest"], view["rest"])
+    return new_cache
+
+
 def prefill_into_slot(
     params: Dict,
     cfg: ModelConfig,
@@ -444,6 +515,7 @@ def prefill_into_slot(
     offset,  # scalar i32 — absolute position of tokens[0]
     *,
     valid=None,  # scalar i32 — real tokens in the chunk (defaults to C)
+    block_table: Optional[jax.Array] = None,  # (n_pg,) row => paged cache
     moe_cf: Optional[float] = None,
     dtype=jnp.bfloat16,
 ):
@@ -459,6 +531,11 @@ def prefill_into_slot(
     (:func:`repro.models.blocks.chunk_supported`); recurrent / windowed
     kinds replay through :func:`prefill`.
 
+    With ``block_table`` (one request's ``(n_pg,)`` block-table row) the
+    cache is the paged layout: the row's pages are gathered into a
+    contiguous view, the chunk runs the *same* attention math, and the
+    updated view scatters back onto the pages — ``slot`` is ignored.
+
     Returns (last_logits (V,) f32 — logits at chunk position valid-1,
     new_cache).
     """
@@ -470,7 +547,10 @@ def prefill_into_slot(
     valid = C if valid is None else valid
     valid = jnp.asarray(valid, jnp.int32)
 
-    view = _slot_view(cache, slot)
+    if block_table is not None:
+        view = _paged_view(cache, block_table)
+    else:
+        view = _slot_view(cache, slot)
     x = embed(params["embed"], tokens, dtype)  # (1, C, d)
     positions = (offset + jnp.arange(C, dtype=jnp.int32))[None]  # (1, C)
     if cfg.pos == "learned":
@@ -515,8 +595,11 @@ def prefill_into_slot(
         logits = unembed(params["embed"], x_last)
     else:
         logits = linear(params["lm_head"], x_last, "lm_head")
-    new_cache = _slot_scatter(
-        cache, {"periods": new_periods, "rest": new_rest}, slot)
+    new_view = {"periods": new_periods, "rest": new_rest}
+    if block_table is not None:
+        new_cache = _paged_scatter(cache, new_view, block_table)
+    else:
+        new_cache = _slot_scatter(cache, new_view, slot)
     return logits[0, 0].astype(jnp.float32), new_cache
 
 

@@ -1,7 +1,11 @@
 """Admission & prefill scheduling policy for the serving engine.
 
-The policy decides, each engine tick, (a) which queued requests claim free
-cache slots (FIFO) and (b) how many prompt tokens may prefill this tick.
+The policy decides, each engine tick, (a) which queued requests may be
+admitted — priced in KV-cache *pages* against the paged pool's available
+budget (a request is admissible when its worst-case lifetime page count,
+net of prefix-shared pages, fits; with the contiguous layout every request
+prices at one whole slot) — and (b) how many prompt tokens may prefill
+this tick.
 The budget is the temporal-reuse analogue of the paper's hidden
 transmissions (Fig 4c): decode ticks stream every weight through the MDK
 pipeline anyway, so up to ``budget_tokens`` prompt tokens can ride along
@@ -72,6 +76,35 @@ class FIFOAdmission:
             budget_tokens = derive_prefill_budget(cfg, chunk_size,
                                                   nodes=nodes)
         self.budget_tokens = max(budget_tokens, chunk_size)
+
+    def page_price(
+        self,
+        prompt_len: int,
+        max_new: int,
+        *,
+        page_size: int,
+        max_seq: int,
+        shared_tokens: int = 0,
+    ) -> int:
+        """Admission price of one request in KV-cache pages.
+
+        The worst-case lifetime footprint — prompt plus every token the
+        request may generate, capped at the cache ceiling — minus the full
+        pages a prefix-sharing hit already covers.  Pricing the whole
+        lifetime up front (rather than just the prompt, vLLM-style with
+        preemption) keeps the engine preemption-free: a reservation for
+        the unallocated remainder guarantees decode-time page growth can
+        always be satisfied.
+
+        This is the formula ``PagedCacheManager.alloc`` enforces against
+        ``available_pages`` at admission (plus a correction for shared
+        pages it must resurrect from the cached-free pool); it is exposed
+        here so alternative admission policies can price differently
+        (e.g. over-commit with preemption) without touching the manager.
+        """
+        toks = min(prompt_len + max_new, max_seq)
+        total = -(-toks // page_size)
+        return max(0, total - shared_tokens // page_size)
 
     def plan_chunks(
         self, prefilling: Sequence[Tuple[int, int, int]]

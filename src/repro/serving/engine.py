@@ -13,10 +13,18 @@ every tick, and *admission work rides along without stalling it*.
     the analytic stage program (``core/scheduler.model_program`` via
     ``core/perfmodel.py``) — the temporal-reuse analogue of the paper's
     hidden ring transmissions.
+  * **Paged KV cache** — by default (``kv_layout="auto"``) global-attention
+    stacks store K/V in :class:`repro.serving.kv_cache.PagedCacheManager`'s
+    page pool: page-granular alloc/free through per-request block tables,
+    admission priced in pages (``FIFOAdmission.page_price``) instead of
+    whole slots, and copy-free prefix sharing of full prompt pages between
+    requests with a common prompt prefix.  ``kv_layout="stacked"`` keeps
+    the contiguous per-slot layout; both produce bit-exact identical
+    tokens (asserted in ``tests/test_paged_kv.py``).
   * **Slot management** — allocation, free, and per-slot length accounting
-    live in :class:`repro.serving.kv_cache.SlotCacheManager`; freeing is
-    mask-only (lengths gate attention), so slot reuse needs no cache
-    surgery.
+    live behind the manager seam (alloc/free/advance/lengths); freeing is
+    mask-only (lengths gate attention; pages additionally refcounted), so
+    slot reuse needs no cache surgery.
   * **Per-request sampling** — every request carries a
     :class:`repro.serving.sampler.SamplingParams`; the engine packs them
     into per-slot arrays and one jitted ``sample_batch`` serves the whole
@@ -55,7 +63,7 @@ from repro.models import blocks, lm
 from repro.models.layers import tp_context
 from repro.serving import sampler as samplers
 from repro.serving.admission import FIFOAdmission
-from repro.serving.kv_cache import SlotCacheManager
+from repro.serving.kv_cache import PagedCacheManager, SlotCacheManager
 from repro.serving.quantize import calibrate, quantize_model_params
 
 PREFILL = "prefill"
@@ -99,6 +107,10 @@ class ServeEngine:
         seed: int = 0,
         chunk_size: int = 32,
         prefill_mode: str = "auto",  # auto | chunked | replay
+        kv_layout: str = "auto",  # auto | paged | stacked
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        prefix_sharing: bool = True,
         admission: Optional[FIFOAdmission] = None,
         mesh: Optional[jax.sharding.Mesh] = None,
         act_dtype=None,
@@ -133,7 +145,36 @@ class ServeEngine:
             f"prefill buffer ({self.admission.chunk_size} > "
             f"{self.chunk_size})")
 
-        self.kv = SlotCacheManager(cfg, batch_slots, max_seq)
+        if kv_layout == "auto":
+            # paged needs a global-attention stack AND a page size that
+            # divides max_seq (bit-exactness invariant); auto picks the
+            # contiguous layout otherwise rather than degrade page_size
+            kv_layout = (
+                "paged"
+                if blocks.chunk_supported(cfg) and max_seq % page_size == 0
+                else "stacked")
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
+        if self.paged:
+            # a page size that divides max_seq keeps the gathered paged
+            # view exactly the contiguous width (bit-exactness invariant);
+            # reject a non-divisor (including page_size > max_seq) loudly
+            # rather than substitute one
+            if max_seq % page_size:
+                raise ValueError(
+                    f"page_size={page_size} must divide max_seq={max_seq} "
+                    "(pass page_size explicitly or pick a page-multiple "
+                    "max_seq)")
+            self.kv = PagedCacheManager(
+                cfg, batch_slots, max_seq, page_size=page_size,
+                n_pages=n_pages, prefix_sharing=prefix_sharing)
+        else:
+            assert kv_layout == "stacked", kv_layout
+            self.kv = SlotCacheManager(cfg, batch_slots, max_seq)
+        # sharing needs the chunked path: replay teacher-forces every prompt
+        # token through decode, which cannot skip a shared prefix
+        self._share = (self.paged and prefix_sharing
+                       and self.prefill_mode == "chunked")
         self.cur_tok = np.zeros((batch_slots, 1), np.int32)
         self._temp = np.zeros((batch_slots,), np.float32)
         self._topk = np.zeros((batch_slots,), np.int32)
@@ -150,13 +191,24 @@ class ServeEngine:
 
             return wrapped
 
-        self._step = jax.jit(_traced(
-            lambda p, tok, cache, lengths: lm.decode_step(
-                p, cfg, tok, cache, lengths, dtype=self.act_dtype)))
-        self._prefill = jax.jit(_traced(
-            lambda p, toks, cache, slot, offset, valid:
-            lm.prefill_into_slot(p, cfg, toks, cache, slot, offset,
-                                 valid=valid, dtype=self.act_dtype)))
+        if self.paged:
+            self._step = jax.jit(_traced(
+                lambda p, tok, cache, lengths, bt: lm.decode_step(
+                    p, cfg, tok, cache, lengths, block_table=bt,
+                    dtype=self.act_dtype)))
+            self._prefill = jax.jit(_traced(
+                lambda p, toks, cache, bt_row, offset, valid:
+                lm.prefill_into_slot(p, cfg, toks, cache, 0, offset,
+                                     valid=valid, block_table=bt_row,
+                                     dtype=self.act_dtype)))
+        else:
+            self._step = jax.jit(_traced(
+                lambda p, tok, cache, lengths: lm.decode_step(
+                    p, cfg, tok, cache, lengths, dtype=self.act_dtype)))
+            self._prefill = jax.jit(_traced(
+                lambda p, toks, cache, slot, offset, valid:
+                lm.prefill_into_slot(p, cfg, toks, cache, slot, offset,
+                                     valid=valid, dtype=self.act_dtype)))
         self._sample = jax.jit(samplers.sample_batch)
 
         self.slots: List[Optional[Request]] = [None] * batch_slots
@@ -188,13 +240,34 @@ class ServeEngine:
 
     def _admit(self) -> None:
         while self.queue:
-            slot = self.kv.alloc()
-            if slot is None:
-                return
-            req = self.queue.popleft()
+            req = self.queue[0]
+            if self.paged:
+                # a live request is prefilling this very prefix: wait one
+                # tick and link its pages instead of re-prefilling them
+                # (same-wave fleet admissions would otherwise never share)
+                if self._share and self.kv.probe_pending(req.prompt):
+                    return
+                # admission prices pages, not whole slots: alloc admits the
+                # request iff its worst-case lifetime pages (net of
+                # prefix-shared ones — FIFOAdmission.page_price is the
+                # formula) fit the unreserved pool, and raises if the
+                # request could never fit so the FIFO head cannot spin
+                res = self.kv.alloc(req.prompt, req.max_new,
+                                    share=self._share)
+                if res is None:
+                    return
+                slot, shared_tokens = res
+            else:
+                slot = self.kv.alloc()
+                if slot is None:
+                    return
+                shared_tokens = 0
+            self.queue.popleft()
             req.slot = slot
             req.state = PREFILL
-            req.filled = 0
+            # a prefix-sharing hit starts prefill past the shared pages —
+            # their K/V are already in the pool, rope'd at these positions
+            req.filled = shared_tokens
             self.slots[slot] = req
             self._temp[slot] = req.sampling.temperature
             self._topk[slot] = req.sampling.top_k
@@ -252,11 +325,27 @@ class ServeEngine:
             [(r.slot, len(r.prompt), r.filled) for r in prefilling])
         for ch in plan:
             req = self.slots[ch.slot]
+            if not self.kv.has_room(ch.slot, ch.n):
+                # a buggy admission plan (or a prompt that slipped past
+                # submit) would silently corrupt the slot's mask: the
+                # chunk writes past max_seq get dropped while the length
+                # accounting still advances.  Fail loudly instead.
+                raise ValueError(
+                    f"prefill chunk ({ch.n} tokens at offset {ch.start}) "
+                    f"overruns slot {ch.slot}'s cache "
+                    f"(len={self.kv.length_of(ch.slot)}, "
+                    f"max_seq={self.max_seq})")
             chunk = np.zeros((self.chunk_size,), np.int32)
             chunk[:ch.n] = req.prompt[ch.start:ch.start + ch.n]
-            logits, self.kv.cache = self._prefill(
-                self.params, jnp.asarray(chunk), self.kv.cache,
-                ch.slot, ch.start, ch.n)
+            if self.paged:
+                logits, self.kv.cache = self._prefill(
+                    self.params, jnp.asarray(chunk), self.kv.cache,
+                    jnp.asarray(self.kv.block_tables[ch.slot]),
+                    ch.start, ch.n)
+            else:
+                logits, self.kv.cache = self._prefill(
+                    self.params, jnp.asarray(chunk), self.kv.cache,
+                    ch.slot, ch.start, ch.n)
             self.model_calls += 1
             self.prefill_calls += 1
             req.filled += ch.n
@@ -271,9 +360,15 @@ class ServeEngine:
         # -- one batched decode step over all decoding slots --
         decoding = [r is not None and r.state == DECODE for r in self.slots]
         if any(decoding):
-            logits, self.kv.cache = self._step(
-                self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                self.kv.lengths)
+            if self.paged:
+                self.kv.ensure_decode_room(decoding)
+                logits, self.kv.cache = self._step(
+                    self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                    self.kv.lengths, jnp.asarray(self.kv.block_tables))
+            else:
+                logits, self.kv.cache = self._step(
+                    self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                    self.kv.lengths)
             self.model_calls += 1
             sampled = self._sample_rows(logits)
             self.kv.advance_mask(np.asarray(decoding))
@@ -294,14 +389,20 @@ class ServeEngine:
         self._admit()
         if all(s is None for s in self.slots):
             return
-        logits, self.kv.cache = self._step(
-            self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-            self.kv.lengths)
+        occupied = [s is not None for s in self.slots]
+        if self.paged:
+            self.kv.ensure_decode_room(occupied)
+            logits, self.kv.cache = self._step(
+                self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                self.kv.lengths, jnp.asarray(self.kv.block_tables))
+        else:
+            logits, self.kv.cache = self._step(
+                self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                self.kv.lengths)
         self.model_calls += 1
         sampled = self._sample_rows(logits)
         lengths_h = np.asarray(self.kv.lengths)
         now = time.monotonic()
-        occupied = [s is not None for s in self.slots]
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -333,7 +434,7 @@ class ServeEngine:
             for r in self.finished
             if r.t_done and r.t_first and len(r.out) > 1
         ]
-        return {
+        out = {
             "requests": len(self.finished),
             "ticks": self.ticks,
             "model_calls": self.model_calls,
@@ -342,3 +443,6 @@ class ServeEngine:
             "mean_tok_latency_s": float(np.mean(tpot)) if tpot else 0.0,
             "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
         }
+        if self.paged:
+            out.update(self.kv.stats())
+        return out

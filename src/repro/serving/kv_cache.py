@@ -1,27 +1,61 @@
-"""Slot-granular KV-cache manager for the serving engine.
+"""KV-cache managers for the serving engine: contiguous slots and pages.
 
-``SlotCacheManager`` owns the batched decode cache: a fixed pool of
-``batch_slots`` cache slots, per-slot fill lengths, and slot
-allocation/free.  It is deliberately engine-agnostic — the same manager
-backs the single-device engine and the ring-TP path (the cache pytree it
-holds is whatever :func:`repro.models.lm.init_cache` produced, sharded or
-not), and is the piece a future paged-KV allocator replaces.
+Two managers share the engine-facing seam (alloc / free / advance /
+lengths / has_room), so the rest of the serving stack is layout-agnostic:
 
-Correctness model: a slot's *length* is the single source of truth for
-what the model may attend to.  Freeing a slot only resets its length —
-stale K/V entries above the length are masked by the attention kernels and
-progressively overwritten by the next occupant (chunked prefill writes
-from offset 0 up; decode writes at the length cursor).  No cache surgery
-is ever required.
+  * :class:`SlotCacheManager` — the contiguous baseline: ``batch_slots``
+    fixed ``max_seq`` regions, one per request.  Kept as
+    ``layout="stacked"`` so every paged result can be asserted bit-exact
+    against it.
+  * :class:`PagedCacheManager` — a global pool of ``page_size``-token
+    pages plus a per-slot *block table* naming which pages hold each
+    request's K/V.  Pages are allocated on demand (prompt pages at
+    admission, decode pages as generation crosses page boundaries), are
+    refcounted, and full prompt pages are shared copy-free between
+    requests with a common token prefix (keyed by a chained
+    token-prefix hash, the vLLM prefix-caching scheme).
+
+Correctness model for pages: a slot's *length* remains the single source
+of truth for what the model may attend to, exactly as in the contiguous
+layout — but validity is now two-level.  (1) Position-to-page mapping:
+logical position ``p`` of a slot lives in page ``block_table[slot, p //
+page_size]`` at offset ``p % page_size``; block-table entries beyond a
+slot's allocated pages point at the reserved **null page** (id 0), whose
+content is arbitrary.  (2) Masking: attention only unmasks positions
+below the slot's length, and the engine only grows a length after the
+pages covering it exist, so null-page and stale-page content is never
+unmasked — freeing is still mask-plus-refcount-only, no cache surgery.
+Shared pages are immutable by construction: only *full* prompt pages
+(content fixed by prefill, positions strictly below every sharer's
+write cursor) ever enter the prefix map, so a decode write can never
+land in a page with refcount > 1.
+
+Freed prefix pages are *cached*, not erased: when a ready, hash-mapped
+page's refcount drains to 0 it moves to a cached free pool that keeps
+its content and prefix-map entry — a later request with the same prefix
+resurrects it (refcount 0 -> 1) with zero fresh allocations, which is
+what makes sharing work across slot churn (the shared-system-prompt
+fleet admits sharers long after the first request finished).  Cached
+pages still count as free: claiming a fresh page prefers never-mapped
+pages and only then evicts a cached page (dropping its map entry before
+its content can be overwritten), so caching never shrinks the usable
+pool.
+
+Reservation invariant: at admission every request reserves its worst-case
+page count (``ceil(min(prompt+max_new, max_seq)/page_size)`` minus shared
+pages); ``available_pages`` nets reservations out of the free pool, so
+mid-decode page growth (``ensure_decode_room``) cannot fail.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import lm
+from repro.models import blocks, lm
 
 
 class SlotCacheManager:
@@ -41,8 +75,13 @@ class SlotCacheManager:
         self.max_seq = max_seq
         self.cache: Dict = lm.init_cache(
             cfg, batch_slots, max_seq, layout=layout, dtype=dtype)
-        self.lengths = jnp.zeros((batch_slots,), jnp.int32)
+        # host-side: read/updated every tick (the engine converts to a
+        # device array once per decode/prefill call)
+        self.lengths = np.zeros((batch_slots,), np.int32)
+        # heap-backed free list: O(log n) claim/release with the same
+        # deterministic lowest-slot-first reuse order the engine tests pin
         self._free: List[int] = list(range(batch_slots))
+        heapq.heapify(self._free)
         self._used: set = set()
 
     # -- slot lifecycle -------------------------------------------------
@@ -50,32 +89,31 @@ class SlotCacheManager:
         """Claim a free slot (length reset to 0), or None if pool is full."""
         if not self._free:
             return None
-        slot = self._free.pop(0)
+        slot = heapq.heappop(self._free)
         self._used.add(slot)
-        self.lengths = self.lengths.at[slot].set(0)
+        self.lengths[slot] = 0
         return slot
 
     def free(self, slot: int) -> None:
         """Return a slot to the pool; stale cache content stays masked."""
         assert slot in self._used, slot
         self._used.discard(slot)
-        self._free.append(slot)
-        self._free.sort()  # deterministic reuse order
-        self.lengths = self.lengths.at[slot].set(0)
+        heapq.heappush(self._free, slot)
+        self.lengths[slot] = 0
 
     def reset(self, slot: int) -> None:
         """Restart a held slot from position 0 (masks its old content)."""
         assert slot in self._used, slot
-        self.lengths = self.lengths.at[slot].set(0)
+        self.lengths[slot] = 0
 
     # -- length accounting ---------------------------------------------
     def advance(self, slot: int, n: int) -> None:
         """Record n tokens written to a slot (chunked-prefill bookkeeping)."""
-        self.lengths = self.lengths.at[slot].add(n)
+        self.lengths[slot] += n
 
     def advance_mask(self, mask) -> None:
         """Advance every masked slot by one token (one decode tick)."""
-        self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
+        self.lengths += np.asarray(mask, np.int32)
 
     def length_of(self, slot: int) -> int:
         return int(self.lengths[slot])
@@ -91,3 +129,352 @@ class SlotCacheManager:
 
     def has_room(self, slot: int, n: int = 1) -> bool:
         return self.length_of(slot) + n <= self.max_seq
+
+
+class PagedCacheManager:
+    """Page-pool KV cache: block tables, refcounts, and prefix sharing.
+
+    The cache pytree holds ``n_pages`` pages of ``page_size`` tokens on the
+    leading (pool) axis; ``block_tables[slot]`` names the pages backing
+    each of the ``batch_slots`` concurrent requests.  Page id 0 is the
+    reserved null page — block tables are 0-initialized, so unallocated
+    logical blocks resolve there and stay masked (see module docstring).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        batch_slots: int,
+        max_seq: int,
+        *,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        prefix_sharing: bool = True,
+        dtype=jnp.bfloat16,
+    ):
+        assert blocks.chunk_supported(cfg), (
+            "paged KV cache requires a global-attention stack",
+            cfg.block_pattern)
+        assert max_seq % page_size == 0, (
+            "max_seq must be a page multiple so the gathered paged view has "
+            f"exactly the contiguous layout's width ({max_seq} % {page_size})"
+            " — bit-exactness depends on identical reduction shapes")
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_seq = max_seq // page_size
+        if n_pages is None:
+            # worst case every slot holds a full sequence, +1 null page
+            n_pages = 1 + batch_slots * self.pages_per_seq
+        assert n_pages >= 2, "need at least the null page and one real page"
+        self.n_pages = n_pages
+        self.prefix_sharing = prefix_sharing
+        # pool axis = pages, "seq" axis = one page's tokens
+        self.cache: Dict = lm.init_cache(
+            cfg, n_pages, page_size, layout="paged", dtype=dtype)
+        # host-side, like block_tables (see SlotCacheManager.__init__)
+        self.lengths = np.zeros((batch_slots,), np.int32)
+        self.block_tables = np.zeros(
+            (batch_slots, self.pages_per_seq), np.int32)
+
+        self._free_slots: List[int] = list(range(batch_slots))
+        heapq.heapify(self._free_slots)
+        self._used_slots: set = set()
+        # free pages in two tiers: never-mapped ("clean") pages are claimed
+        # first; cached pages (content + prefix-map entry intact, see module
+        # docstring) are evicted only when the clean tier runs dry.  The
+        # cached heap uses lazy deletion (membership set) so resurrecting a
+        # specific page is O(1).
+        self._free_clean: List[int] = list(range(1, n_pages))  # 0 = null
+        heapq.heapify(self._free_clean)
+        self._free_cached: List[int] = []
+        self._free_cached_set: set = set()
+        self._cached_heap_pids: set = set()  # pids with a live heap entry
+        self._refcount = np.zeros((n_pages,), np.int64)
+        self._slot_pages: Dict[int, List[int]] = {}
+        self._reserved: Dict[int, int] = {}  # slot -> pages still owed
+        # prefix sharing: chained hash of full prompt pages -> page id;
+        # a page is only handed out once its owner's prefill covered it.
+        # The hash is a lookup accelerator, not the identity: _page_meta
+        # records each registered page's (parent page, token tuple), and a
+        # match requires the exact tokens AND the exact predecessor page —
+        # a chained-hash collision can therefore never link a foreign
+        # request's K/V (cross-request leakage), it just misses sharing.
+        self._prefix_map: Dict[int, int] = {}
+        self._page_hash: Dict[int, int] = {}
+        self._page_meta: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        self._page_ready: set = set()
+        self._pending_ready: Dict[int, List[Tuple[int, int]]] = {}
+
+        # counters (benchmarks / stats)
+        self.pages_allocated_total = 0  # fresh pages ever claimed
+        self.prefix_hit_pages = 0  # pages served from the prefix map
+        self.pages_in_use_peak = 0
+
+    # -- page math ------------------------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_clean) + len(self._free_cached_set)
+
+    @property
+    def available_pages(self) -> int:
+        """Free pages net of outstanding decode-growth reservations."""
+        return self.n_free_pages - sum(self._reserved.values())
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.n_pages - 1) - self.n_free_pages
+
+    # -- prefix sharing -------------------------------------------------
+    @staticmethod
+    def _chain(h: int, page_tokens: Tuple[int, ...]) -> int:
+        return hash((h, page_tokens))
+
+    def _match_prefix(
+        self, prompt: Sequence[int]
+    ) -> Tuple[List[int], int]:
+        """Resolve the prompt's ready-to-share full prefix pages.
+
+        Returns (matched page ids, chained hash after them).  The match is
+        capped so at least one prompt token is left to prefill (its logits
+        seed the first generated token), and each step verifies the
+        registered page's token content and predecessor page — see the
+        ``_prefix_map`` comment in ``__init__``.
+        """
+        ps = self.page_size
+        pids: List[int] = []
+        h, parent = 0, 0
+        if not self.prefix_sharing:
+            return pids, h
+        for i in range((len(prompt) - 1) // ps):
+            toks = tuple(prompt[i * ps:(i + 1) * ps])
+            nh = self._chain(h, toks)
+            pid = self._prefix_map.get(nh)
+            if (pid is None or pid not in self._page_ready
+                    or self._page_meta.get(pid) != (parent, toks)):
+                break
+            h = nh
+            pids.append(pid)
+            parent = pid
+        return pids, h
+
+    def probe_pending(self, prompt: Sequence[int]) -> bool:
+        """True if this prompt's next unshared full prefix page is
+        registered by a live request whose prefill has not covered it yet.
+        Admission can defer one tick and *link* the page instead of
+        copying the prefix — the wait is bounded because the provider
+        either advances its prefill every tick (page turns ready) or is
+        freed (registration evicted, probe turns False)."""
+        if not self.prefix_sharing:
+            return False
+        ps = self.page_size
+        h, parent = 0, 0
+        for i in range((len(prompt) - 1) // ps):
+            toks = tuple(prompt[i * ps:(i + 1) * ps])
+            h = self._chain(h, toks)
+            pid = self._prefix_map.get(h)
+            if pid is None or self._page_meta.get(pid) != (parent, toks):
+                return False
+            if pid not in self._page_ready:
+                return True
+            parent = pid
+        return False
+
+    def _claim_page(self) -> int:
+        if self._free_clean:
+            pid = heapq.heappop(self._free_clean)
+        else:
+            pid = self._pop_cached()
+        self._refcount[pid] = 1
+        self.pages_allocated_total += 1
+        self.pages_in_use_peak = max(self.pages_in_use_peak,
+                                     self.pages_in_use)
+        return pid
+
+    def _pop_cached(self) -> int:
+        """Evict the lowest-id cached free page for fresh use (its content
+        is about to be overwritten, so its prefix-map entry goes first)."""
+        while self._free_cached:
+            pid = heapq.heappop(self._free_cached)
+            self._cached_heap_pids.discard(pid)
+            if pid in self._free_cached_set:  # lazy deletion
+                self._free_cached_set.discard(pid)
+                self._evict(pid)
+                return pid
+        raise AssertionError("page claim past the free pool")
+
+    def _evict(self, pid: int) -> None:
+        """Drop a page's prefix-map registration."""
+        h = self._page_hash.pop(pid, None)
+        if h is not None and self._prefix_map.get(h) == pid:
+            del self._prefix_map[h]
+        self._page_meta.pop(pid, None)
+        self._page_ready.discard(pid)
+
+    def _release_page(self, pid: int) -> None:
+        self._refcount[pid] -= 1
+        assert self._refcount[pid] >= 0, pid
+        if self._refcount[pid] == 0:
+            if pid in self._page_ready and self._page_hash.get(pid) \
+                    is not None:
+                # ready prefix page: cache it (content + map entry live on
+                # until eviction) so later same-prefix requests resurrect
+                # it; a resurrected page's stale heap entry is reused
+                # instead of duplicated, bounding the heap at n_pages
+                if pid not in self._cached_heap_pids:
+                    heapq.heappush(self._free_cached, pid)
+                    self._cached_heap_pids.add(pid)
+                self._free_cached_set.add(pid)
+            else:
+                self._evict(pid)  # e.g. registered but freed mid-prefill
+                heapq.heappush(self._free_clean, pid)
+
+    # -- slot lifecycle -------------------------------------------------
+    def alloc(
+        self,
+        prompt: Sequence[int],
+        max_new: int = 1,
+        *,
+        share: bool = True,
+    ) -> Optional[Tuple[int, int]]:
+        """Admit one request: claim a slot, link shared prefix pages, claim
+        fresh pages for the rest of the prompt, and reserve decode-growth
+        pages.  Returns ``(slot, shared_tokens)`` — the engine starts
+        prefill at ``shared_tokens`` — or None when slots or pages are
+        short (the caller retries next tick)."""
+        plen = len(prompt)
+        if plen > self.max_seq:
+            raise ValueError(
+                f"prompt ({plen} tokens) exceeds the cache (max_seq="
+                f"{self.max_seq}); admitting it would corrupt the mask")
+        total_pages = self.pages_for(min(plen + max_new, self.max_seq))
+        if total_pages > self.n_pages - 1:
+            raise ValueError(
+                f"request needs {total_pages} pages but the pool only has "
+                f"{self.n_pages - 1}; it can never be admitted (raise "
+                "n_pages or lower max_new)")
+        if not self._free_slots:
+            return None
+        ps = self.page_size
+        if share:
+            shared_pids, h = self._match_prefix(prompt)
+        else:
+            shared_pids, h = [], 0
+        n_shared = len(shared_pids)
+        # resurrecting a cached (refcount-0) shared page consumes a free
+        # page just like a fresh claim, so it counts against the pool
+        n_cached = sum(1 for pid in shared_pids if self._refcount[pid] == 0)
+        if (total_pages - n_shared) + n_cached > self.available_pages:
+            return None
+
+        slot = heapq.heappop(self._free_slots)
+        self._used_slots.add(slot)
+        pages: List[int] = []
+        for pid in shared_pids:  # link shared full prompt pages
+            if self._refcount[pid] == 0:  # resurrect from the cached pool
+                self._free_cached_set.discard(pid)
+            self._refcount[pid] += 1
+            pages.append(pid)
+        self.prefix_hit_pages += n_shared
+        prompt_pages = self.pages_for(plen)
+        pending: List[Tuple[int, int]] = []
+        register = share and self.prefix_sharing
+        for i in range(n_shared, prompt_pages):  # fresh prompt pages
+            pid = self._claim_page()
+            pages.append(pid)
+            if register and (i + 1) * ps <= plen:  # full page -> shareable
+                toks = tuple(prompt[i * ps:(i + 1) * ps])
+                h = self._chain(h, toks)
+                if h not in self._prefix_map:
+                    self._prefix_map[h] = pid
+                    self._page_hash[pid] = h
+                    self._page_meta[pid] = (pages[i - 1] if i else 0, toks)
+                    pending.append((pid, (i + 1) * ps))
+        self._slot_pages[slot] = pages
+        self._reserved[slot] = total_pages - prompt_pages
+        self._pending_ready[slot] = pending
+        row = np.zeros((self.pages_per_seq,), np.int32)
+        row[:len(pages)] = pages
+        self.block_tables[slot] = row
+        self.lengths[slot] = n_shared * ps
+        return slot, n_shared * ps
+
+    def free(self, slot: int) -> None:
+        """Release a slot: decref every page in its table (shared pages
+        survive until their last sharer leaves) and drop reservations."""
+        assert slot in self._used_slots, slot
+        self._used_slots.discard(slot)
+        for pid in self._slot_pages.pop(slot):
+            self._release_page(pid)
+        self._reserved.pop(slot, None)
+        self._pending_ready.pop(slot, None)
+        self.block_tables[slot] = 0
+        self.lengths[slot] = 0
+        heapq.heappush(self._free_slots, slot)
+
+    # -- length accounting ---------------------------------------------
+    def advance(self, slot: int, n: int) -> None:
+        """Record n tokens written (chunked prefill); full prompt pages the
+        new fill level covers become shareable."""
+        self.lengths[slot] += n
+        filled = int(self.lengths[slot])
+        pending = self._pending_ready.get(slot)
+        if pending:
+            still = []
+            for pid, end in pending:
+                if end <= filled:
+                    self._page_ready.add(pid)
+                else:
+                    still.append((pid, end))
+            self._pending_ready[slot] = still
+
+    def advance_mask(self, mask) -> None:
+        """Advance every masked slot by one token (one decode tick)."""
+        self.lengths += np.asarray(mask, np.int32)
+
+    def length_of(self, slot: int) -> int:
+        return int(self.lengths[slot])
+
+    def ensure_decode_room(self, mask) -> None:
+        """Grow block tables so every masked slot can take one more token.
+        Backed by the admission-time reservation, so the pop cannot fail."""
+        for slot, active in enumerate(mask):
+            if not active:
+                continue
+            pages = self._slot_pages[slot]
+            while len(pages) * self.page_size < int(self.lengths[slot]) + 1:
+                assert self._reserved.get(slot, 0) > 0, (
+                    "page growth past the admission reservation", slot)
+                pid = self._claim_page()
+                self._reserved[slot] -= 1
+                self.block_tables[slot, len(pages)] = pid
+                pages.append(pid)
+
+    # -- introspection --------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used_slots)
+
+    def has_room(self, slot: int, n: int = 1) -> bool:
+        return self.length_of(slot) + n <= self.max_seq
+
+    def refcount(self, pid: int) -> int:
+        return int(self._refcount[pid])
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "pages_allocated_total": self.pages_allocated_total,
+            "prefix_hit_pages": self.prefix_hit_pages,
+            "pages_in_use": self.pages_in_use,
+            "pages_in_use_peak": self.pages_in_use_peak,
+            "n_free_pages": self.n_free_pages,
+            "cached_free_pages": len(self._free_cached_set),
+        }

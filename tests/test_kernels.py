@@ -140,6 +140,32 @@ def test_mha_wrapper_property(b, group, hkv, s, d):
         np.asarray(out), np.asarray(want), rtol=5e-5, atol=5e-5)
 
 
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    group=st.integers(1, 3),
+    hkv=st.integers(1, 2),
+    ps=st.sampled_from([8, 16]),
+    n_pg=st.integers(1, 5),
+    d=st.sampled_from([32, 64]),
+)
+def test_paged_mha_wrapper_property(b, group, hkv, ps, n_pg, d):
+    """Paged kernel matches the block-table-gather oracle for arbitrary
+    page permutations and cache lengths."""
+    rng = np.random.default_rng(b * 41 + group * 7 + hkv * 3 + ps + n_pg)
+    P = 1 + b * n_pg
+    q = jnp.asarray(rng.normal(size=(b, hkv * group, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, hkv, ps, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, hkv, ps, d)), jnp.float32)
+    bt = jnp.asarray(1 + rng.permutation(b * n_pg).reshape(b, n_pg),
+                     jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, n_pg * ps + 1, (b,)), jnp.int32)
+    out = ops.paged_mha_decode(q, kp, vp, lengths, bt, backend="interpret")
+    want = ops.paged_mha_decode(q, kp, vp, lengths, bt, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=5e-5, atol=5e-5)
+
+
 def test_mha_softmax_invariance():
     """Adding a constant to all scores (via scaled q) must not change the
     attention weights' normalization: output stays a convex combo of V."""
