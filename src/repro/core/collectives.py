@@ -1,4 +1,5 @@
-"""Distributed-optimization collectives: compressed ring all-reduce.
+"""Distributed collectives: compressed ring all-reduce and the
+double-buffered ring all-gather used by the distributed serving engine.
 
 ``compressed_psum`` is a ring reduce-scatter + all-gather all-reduce whose
 wire format is int8 (per-chunk symmetric scales), cutting gradient
@@ -7,6 +8,14 @@ is the standard trade (error feedback at the accumulation level compensates,
 see training/trainer.py).  Built on the same ``ppermute`` ring machinery as
 the LoopLynx collective matmul (core/ring.py), so on TPU the hops overlap
 the optimizer's elementwise work.
+
+``ring_all_gather`` is the activation collective of the distributed
+serving tick (serving/distributed): each device contributes its shard's
+decode logits and every hop's ``ppermute`` is issued *before* the block it
+carried is copied into the output, so the wire transfer of hop t+1
+overlaps the copy-in of hop t — the same double-buffer discipline as the
+paper's inter-FPGA activation ring (and the send/recv-slot pattern of the
+Pallas ring-collective kernels).
 """
 from __future__ import annotations
 
@@ -25,6 +34,41 @@ def _quantize(x: jax.Array):
 
 def _dequantize(q: jax.Array, scale: jax.Array):
     return q.astype(jnp.float32) * scale
+
+
+def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
+    """Double-buffered ring all-gather of per-device blocks (per-device body).
+
+    x: (m, ...) — this device's block.  Returns (n*m, ...) with block ``i``
+    (the one contributed by device ``i``) at rows ``[i*m, (i+1)*m)`` on
+    every device.
+
+    Step t issues the ``ppermute`` forwarding the block it currently holds
+    *before* copying that block into the output, so the hop t+1 wire
+    transfer overlaps the hop t copy-in — the serving tick's activation
+    collective rides the same schedule as the collective matmul
+    (core/ring.py).
+    """
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    m = x.shape[0]
+    perm = [(i, (i + 1) % n) for i in range(n)]  # send forward
+
+    out = compat.pcast_varying(
+        jnp.zeros((n * m,) + x.shape[1:], x.dtype), axis_name)
+
+    def body(t, carry):
+        out, blk = carry
+        src = (idx - t) % n  # whose block we currently hold
+        nxt = jax.lax.ppermute(blk, axis_name, perm)  # overlaps the copy
+        out = jax.lax.dynamic_update_slice_in_dim(out, blk, src * m, 0)
+        return out, nxt
+
+    # n-1 hops suffice: the block held after the last hop is copied in
+    # without a trailing (dead) ppermute
+    out, blk = jax.lax.fori_loop(0, n - 1, body, (out, x), unroll=True)
+    return jax.lax.dynamic_update_slice_in_dim(
+        out, blk, ((idx - (n - 1)) % n) * m, 0)
 
 
 def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:

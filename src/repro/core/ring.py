@@ -163,3 +163,43 @@ def tp_matmul(
     return compat.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
     )(x, w)
+
+
+def tp_quant_matmul(
+    x_q: jax.Array,  # int8 (M, K) quantized activations (replicated)
+    w_q: jax.Array,  # int8 (K, N) quantized weights (sharded on N)
+    x_scale: jax.Array,  # f32 (M, 1) per-token scales (replicated)
+    w_scale: jax.Array,  # f32 (1, N) per-channel scales (sharded on N)
+    bias=None,  # f32 (N,) or None
+    *,
+    mesh: jax.sharding.Mesh,
+    axis: str = "model",
+    out_dtype=jnp.bfloat16,
+    backend: str = "auto",
+) -> jax.Array:
+    """W8A8 matmul sharded over output columns (Megatron column-parallel).
+
+    Each device runs the Fused MP kernel (:func:`repro.kernels.ops.
+    quant_matmul`) on its (K, N/n) weight shard with the full activations;
+    outputs concatenate on N.  Because weight scales are per-output-channel
+    and activation scales per-token, every output column is computed by
+    exactly the math the unsharded kernel uses — the sharded result is
+    *bit-identical*, so routing the quantized engine through ``mesh=`` can
+    never change the served stream (asserted in
+    ``tests/subscripts/ring_check.py``).
+    """
+    from repro.kernels import ops
+
+    N = w_q.shape[1]
+    if bias is None:
+        bias = jnp.zeros((N,), jnp.float32)
+
+    def body(xq, wq, xs, ws, b):
+        return ops.quant_matmul(
+            xq, wq, xs, ws, b, out_dtype=out_dtype, backend=backend)
+
+    return compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(None, axis), P(), P(None, axis), P(axis)),
+        out_specs=P(None, axis),
+    )(x_q, w_q, x_scale, w_scale, bias)

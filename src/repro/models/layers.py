@@ -54,6 +54,24 @@ def _tp_matmul_or_none(x2: jax.Array, w: jax.Array):
     return ring.tp_matmul(x2, w.astype(x2.dtype), mesh, axis, strategy)
 
 
+def _tp_quant_matmul_or_none(x_q, x_scale, p, out_dtype, backend):
+    """Route a W8A8 matmul through the column-sharded ring wrapper when a
+    tp_context is active (bit-identical to the local kernel, so ``mesh=``
+    on the quantized engine no longer silently falls back to dense)."""
+    ctx = getattr(_tp_local, "ctx", None)
+    if ctx is None or p["w_q"].ndim != 2:
+        return None
+    mesh, axis, _ = ctx
+    n = mesh.shape[axis]
+    if p["w_q"].shape[1] % n:
+        return None  # output columns don't shard: local kernel fallback
+    from repro.core import ring
+
+    return ring.tp_quant_matmul(
+        x_q, p["w_q"], x_scale, p["w_scale"], p.get("bias"),
+        mesh=mesh, axis=axis, out_dtype=out_dtype, backend=backend)
+
+
 # ---------------------------------------------------------------------------
 # Linear (dense or quantized)
 # ---------------------------------------------------------------------------
@@ -76,10 +94,12 @@ def linear(p: Dict[str, jax.Array], x: jax.Array, name: str = "", *,
     if "w_q" in p:  # quantized serving path -> Fused MP MDK
         xs = x2.astype(jnp.float32) * (1.0 / p["smooth"])[None, :]
         x_q, x_scale = quant.quantize_act(xs)
-        y = ops.quant_matmul(
-            x_q, p["w_q"], x_scale, p["w_scale"], p.get("bias"),
-            out_dtype=x.dtype, backend=backend,
-        )
+        y = _tp_quant_matmul_or_none(x_q, x_scale, p, x.dtype, backend)
+        if y is None:
+            y = ops.quant_matmul(
+                x_q, p["w_q"], x_scale, p["w_scale"], p.get("bias"),
+                out_dtype=x.dtype, backend=backend,
+            )
     else:
         quant.record_act_stats(name, x2)
         y = _tp_matmul_or_none(x2, p["w"])

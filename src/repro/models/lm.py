@@ -603,6 +603,135 @@ def prefill_into_slot(
     return logits[0, 0].astype(jnp.float32), new_cache
 
 
+# ---------------------------------------------------------------------------
+# serving: sharded (multi-device) decode / prefill
+# ---------------------------------------------------------------------------
+#
+# The distributed serving engine (serving/distributed) partitions request
+# slots over a mesh axis; every device owns one shard of the KV pool (the
+# leading axis of every cache leaf is the shard axis) and runs the SAME
+# per-slot decode/prefill math on its local shard under ``shard_map``.
+# Params are replicated, K/V never leave their shard — only i32 block
+# tables, tokens, and logits cross the shard boundary.
+
+
+def _shard_squeeze(tree):
+    """Drop the per-device leading shard axis (local size 1) of every leaf."""
+    return jax.tree_util.tree_map(lambda t: t[0], tree)
+
+
+def _shard_expand(tree):
+    """Re-add the leading shard axis so out_specs can name it."""
+    return jax.tree_util.tree_map(lambda t: t[None], tree)
+
+
+def sharded_decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    token: jax.Array,  # (D, Bs, 1) i32 — per-shard current tokens
+    cache: Dict,  # leaves (D, ...) — shard axis leading everywhere
+    lengths: jax.Array,  # (D, Bs) i32
+    *,
+    block_tables: Optional[jax.Array] = None,  # (D, Bs, n_pg) => paged
+    axis: str = "shard",
+    gather_logits: bool = True,
+    dtype=jnp.bfloat16,
+):
+    """One decode tick over every pool shard (per-device
+    :func:`decode_step` under ``shard_map``).
+
+    With ``gather_logits`` each device's (Bs, V) logits ride a
+    double-buffered ring all-gather (:func:`repro.core.collectives.
+    ring_all_gather`) — the tick's activation collective — and the result
+    is the replicated (D*Bs, V) batch; otherwise logits stay sharded as
+    (D, Bs, V).  Returns (logits, new_cache); cache shards never move.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import collectives, compat
+
+    paged = block_tables is not None
+
+    def body(p, tok, cache, lengths, bt):
+        logits, new_cache = decode_step(
+            p, cfg, tok[0], _shard_squeeze(cache), lengths[0],
+            block_table=(bt[0] if paged else None), dtype=dtype)
+        if gather_logits:
+            logits = collectives.ring_all_gather(logits, axis)  # (D*Bs, V)
+        else:
+            logits = logits[None]
+        return logits, _shard_expand(new_cache)
+
+    if paged:
+        fn = compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
+            out_specs=(P() if gather_logits else P(axis), P(axis)))
+        return fn(params, token, cache, lengths, block_tables)
+    fn = compat.shard_map(
+        lambda p, tok, c, ln: body(p, tok, c, ln, None), mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis)),
+        out_specs=(P() if gather_logits else P(axis), P(axis)))
+    return fn(params, token, cache, lengths)
+
+
+def sharded_prefill_into_slot(
+    params: Dict,
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    tokens: jax.Array,  # (D, C) i32 — one prompt chunk per shard
+    cache: Dict,  # leaves (D, ...) — shard axis leading everywhere
+    slots: jax.Array,  # (D,) i32 — target slot within each shard
+    offsets: jax.Array,  # (D,) i32 — absolute position of each chunk
+    valids: jax.Array,  # (D,) i32 — real tokens per chunk (0 when idle)
+    actives: jax.Array,  # (D,) bool — shards with a chunk this round
+    *,
+    block_tables: Optional[jax.Array] = None,  # (D, n_pg) rows => paged
+    axis: str = "shard",
+    dtype=jnp.bfloat16,
+):
+    """One prefill round: every shard runs :func:`prefill_into_slot` on its
+    own chunk; shards without work this round (``actives`` False) compute
+    a throwaway chunk and keep their cache bit-for-bit unchanged (per-leaf
+    select), so one fixed-shape ``shard_map`` call serves ragged per-shard
+    prefill schedules.  Returns (last_logits (D, V) f32, new_cache) —
+    inactive rows of the logits are garbage and must not be consumed.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import compat
+
+    paged = block_tables is not None
+
+    def body(p, toks, cache, slot, offset, valid, active, bt):
+        local = _shard_squeeze(cache)
+        logits, new_cache = prefill_into_slot(
+            p, cfg, toks[0], local, slot[0], offset[0],
+            valid=jnp.maximum(valid[0], 1),
+            block_table=(bt[0] if paged else None), dtype=dtype)
+        act = active[0]
+        merged = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(act, new, old), new_cache, local)
+        return logits[None], _shard_expand(merged)
+
+    if paged:
+        fn = compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis),
+                      P(axis), P(axis)),
+            out_specs=(P(axis), P(axis)))
+        return fn(params, tokens, cache, slots, offsets, valids, actives,
+                  block_tables)
+    fn = compat.shard_map(
+        lambda p, t, c, s, o, v, a: body(p, t, c, s, o, v, a, None),
+        mesh=mesh,
+        in_specs=(P(), P(axis), P(axis), P(axis), P(axis), P(axis),
+                  P(axis)),
+        out_specs=(P(axis), P(axis)))
+    return fn(params, tokens, cache, slots, offsets, valids, actives)
+
+
 def prefill(
     params: Dict,
     cfg: ModelConfig,

@@ -59,6 +59,52 @@ def derive_prefill_budget(
     return max(chunk_size, min(fit, 8 * chunk_size))
 
 
+class ShardPlacement:
+    """Deterministic shard choice for the distributed engine's admission.
+
+    A request is placed on exactly ONE pool shard (its K/V pages must never
+    straddle shard boundaries — only its i32 block-table row travels with
+    it).  Preference order:
+
+      1. **Prefix affinity** — the shard whose pool already holds the
+         longest ready shared prefix of the prompt (copy-free page links
+         only work within a shard's local page-id space).  When any shard
+         has a hit, placement *commits* to the deepest-hit shards: only
+         they are candidates, so a momentarily-full prefix shard makes the
+         request wait rather than land elsewhere and lose the link;
+      2. **Least loaded** — most available pages (paged) or free slots
+         (stacked), so the mixed-length workload spreads evenly;
+      3. Lowest shard id (stable tie-break; keeps placement reproducible).
+
+    The admission *pricing* stays per shard: each shard's manager enforces
+    ``FIFOAdmission.page_price`` against its own pool, and a request too
+    large for any single shard raises even when the aggregate free pages
+    across shards would cover it.
+    """
+
+    def order(self, shards, prompt=None, *, share: bool = True):
+        """Candidate shard ids, most preferred first (restricted to the
+        deepest-prefix shards whenever there is a prefix hit)."""
+        hits = [
+            (m.shared_prefix_pages(prompt)
+             if share and prompt is not None
+             and hasattr(m, "shared_prefix_pages") else 0)
+            for m in shards
+        ]
+
+        def key(i):
+            avail = getattr(shards[i], "available_pages", None)
+            if avail is None:
+                avail = shards[i].n_free
+            return (-hits[i], -avail, i)
+
+        order = sorted(range(len(shards)), key=key)
+        best = max(hits, default=0)
+        if best > 0:  # commit to the copy-free link
+            order = [i for i in order if hits[i] == best]
+        return order
+
+
 class FIFOAdmission:
     """FIFO admission + per-tick prefill-chunk budget."""
 

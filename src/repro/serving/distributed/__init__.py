@@ -1,0 +1,19 @@
+"""Distributed serving: sharded paged-KV engine with overlapped transfers.
+
+See README.md in this package for the page-shard / block-table protocol,
+and the module docstrings for the tick pipeline
+(:mod:`repro.serving.distributed.engine`), the shard-local pool invariants
+(:mod:`repro.serving.distributed.sharded_kv`), and the overlap metering
+(:mod:`repro.serving.distributed.transfer`).
+"""
+from repro.serving.distributed.engine import DistributedServeEngine
+from repro.serving.distributed.sharded_kv import (
+    ShardedPageAllocator, ShardedSlotAllocator)
+from repro.serving.distributed.transfer import TransferScheduler
+
+__all__ = [
+    "DistributedServeEngine",
+    "ShardedPageAllocator",
+    "ShardedSlotAllocator",
+    "TransferScheduler",
+]

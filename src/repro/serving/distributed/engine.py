@@ -1,0 +1,445 @@
+"""Distributed serving engine: the single-device tick over a device mesh.
+
+``DistributedServeEngine`` runs the scheduler-driven serving core
+(serving/engine.py) across every device of a ``("shard",)`` mesh — the
+multi-FPGA LoopLynx deployment at shard_map level:
+
+  * **Sharded paged KV pool** — each device owns one shard of the page
+    pool (:class:`~repro.serving.distributed.sharded_kv.
+    ShardedPageAllocator`); a request's pages live on exactly one shard,
+    chosen by prefix affinity then load, and only its i32 block-table row
+    ever travels with it.  ``kv_layout="stacked"`` shards contiguous slot
+    pools the same way.
+  * **Per-shard compute via shard_map** — one
+    :func:`repro.models.lm.sharded_decode_step` call advances every
+    shard's decoding slots per tick (logits return through the
+    double-buffered ring all-gather, the tick's activation collective);
+    one :func:`repro.models.lm.sharded_prefill_into_slot` call per round
+    prefills up to one chunk per shard.
+  * **Overlapped transfers** — the tick is software-pipelined so every
+    host<->device transfer is staged behind in-flight compute
+    (:class:`~repro.serving.distributed.transfer.TransferScheduler`
+    meters it as ``overlap_ratio``):
+
+        phase A  dispatch this tick's prefill rounds
+                 (chunk shipping hides behind last tick's decode),
+        phase B  consume last tick's decode logits
+                 (the collective's fetch hides behind phase A's prefill),
+        phase C  dispatch this tick's decode,
+        phase D  consume this tick's prompt-completing prefill logits
+                 (hides behind phase C's decode).
+
+    Decode results are therefore emitted one tick after they are
+    dispatched — a scheduling change only: greedy outputs are
+    token-for-token identical to the single-device ``ServeEngine`` (both
+    kv layouts; asserted in ``tests/subscripts/dist_serve_check.py``).
+    Non-greedy sampling draws from the same per-request distributions but
+    a differently-interleaved engine RNG stream.
+
+The admission policy remains host-local per shard (each pool shard prices
+requests in its own pages via ``FIFOAdmission.page_price``), exactly the
+multi-host seam PR 2's block table was shaped for.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import scheduler as sched
+from repro.models import blocks, lm
+from repro.serving import sampler as samplers
+from repro.serving.admission import FIFOAdmission, ShardPlacement
+from repro.serving.distributed.sharded_kv import (
+    ShardedPageAllocator, ShardedSlotAllocator)
+from repro.serving.distributed.transfer import TransferScheduler
+from repro.serving.engine import (
+    DECODE, PREFILL, Request, latency_stats, submit_request)
+from repro.serving.quantize import calibrate, quantize_model_params
+
+
+class DistributedServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        mesh: Optional[jax.sharding.Mesh] = None,
+        n_shards: Optional[int] = None,
+        slots_per_shard: int = 2,
+        max_seq: int = 256,
+        eos_id: int = 0,
+        quantized: bool = False,
+        calibration_batches=None,
+        seed: int = 0,
+        chunk_size: int = 32,
+        kv_layout: str = "auto",  # auto | paged | stacked
+        page_size: int = 16,
+        n_pages: Optional[int] = None,  # per shard
+        prefix_sharing: bool = True,
+        admission: Optional[FIFOAdmission] = None,
+        placement: Optional[ShardPlacement] = None,
+        act_dtype=None,
+    ):
+        assert blocks.chunk_supported(cfg), (
+            "the distributed engine drives chunked prefill only",
+            cfg.block_pattern)
+        if mesh is None:
+            from repro.launch.mesh import make_serving_mesh
+
+            mesh = make_serving_mesh(n_shards)
+        assert "shard" in mesh.axis_names, mesh.axis_names
+        self.mesh = mesh
+        self.D = mesh.shape["shard"]
+        self.Bs = slots_per_shard
+        self.B = self.D * self.Bs  # global slots
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.chunk_size = min(chunk_size, max_seq)
+        if quantized:
+            stats = None
+            if calibration_batches is not None:
+                stats = calibrate(params, cfg, calibration_batches)
+            params = quantize_model_params(params, cfg, stats)
+        self.act_dtype = act_dtype or (jnp.float32 if quantized
+                                       else jnp.bfloat16)
+        self.params = params
+        self.admission = admission or FIFOAdmission(
+            cfg, chunk_size=self.chunk_size)
+        assert self.admission.chunk_size <= self.chunk_size
+
+        if kv_layout == "auto":
+            kv_layout = "paged" if max_seq % page_size == 0 else "stacked"
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
+        if self.paged:
+            if max_seq % page_size:
+                raise ValueError(
+                    f"page_size={page_size} must divide max_seq={max_seq}")
+            self.kv = ShardedPageAllocator(
+                cfg, self.D, slots_per_shard, max_seq, page_size=page_size,
+                n_pages=n_pages, prefix_sharing=prefix_sharing,
+                placement=placement)
+        else:
+            assert kv_layout == "stacked", kv_layout
+            self.kv = ShardedSlotAllocator(
+                cfg, self.D, slots_per_shard, max_seq)
+        self._share = self.paged and prefix_sharing
+
+        # one device pytree for all shards: leading axis = shard axis,
+        # committed to the mesh so shard s's pages live on device s and
+        # stay there (in/out specs are P("shard") everywhere; nothing in
+        # the tick ever reshards K/V)
+        pool = self.kv.n_pages if self.paged else slots_per_shard
+        seq = page_size if self.paged else max_seq
+        abstract = lm.init_cache_abstract(
+            cfg, pool, seq, layout=("paged" if self.paged else "stacked"))
+        self.kv_sharding = NamedSharding(mesh, P("shard"))
+        self.cache = jax.tree_util.tree_map(
+            lambda leaf: jax.device_put(
+                jnp.zeros((self.D,) + leaf.shape, leaf.dtype),
+                self.kv_sharding),
+            abstract)
+
+        self.xfer = TransferScheduler()
+        self.cur_tok = np.zeros((self.D, self.Bs, 1), np.int32)
+        self._temp = np.zeros((self.B,), np.float32)
+        self._topk = np.zeros((self.B,), np.int32)
+        self._topp = np.ones((self.B,), np.float32)
+        self.rng = jax.random.PRNGKey(seed)
+
+        if self.paged:
+            self._step = jax.jit(
+                lambda p, tok, cache, lengths, bt: lm.sharded_decode_step(
+                    p, cfg, mesh, tok, cache, lengths, block_tables=bt,
+                    dtype=self.act_dtype))
+            self._prefill = jax.jit(
+                lambda p, toks, cache, slots, offs, valids, acts, bts:
+                lm.sharded_prefill_into_slot(
+                    p, cfg, mesh, toks, cache, slots, offs, valids, acts,
+                    block_tables=bts, dtype=self.act_dtype))
+        else:
+            self._step = jax.jit(
+                lambda p, tok, cache, lengths: lm.sharded_decode_step(
+                    p, cfg, mesh, tok, cache, lengths,
+                    dtype=self.act_dtype))
+            self._prefill = jax.jit(
+                lambda p, toks, cache, slots, offs, valids, acts:
+                lm.sharded_prefill_into_slot(
+                    p, cfg, mesh, toks, cache, slots, offs, valids, acts,
+                    dtype=self.act_dtype))
+        self._sample = jax.jit(samplers.sample_batch)
+
+        self.slots: List[Optional[Request]] = [None] * self.B
+        self.queue: deque = deque()
+        self.finished: List[Request] = []
+        self._next_rid = 0
+        self.ticks = 0
+        self.model_calls = 0
+        self.prefill_calls = 0
+        self._pending_decode = None  # (op, logits_dev, decoding mask)
+        self._busy_ticks = np.zeros((self.D,), np.int64)
+        self.mdk_stats = sched.mdk_stats(cfg)
+
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        prompt: List[int],
+        max_new: int = 32,
+        sampling: Optional[samplers.SamplingParams] = None,
+    ) -> int:
+        return submit_request(self, prompt, max_new, sampling)
+
+    def _admit(self) -> None:
+        while self.queue:
+            req = self.queue[0]
+            if self.paged:
+                if self._share and self.kv.probe_pending(req.prompt):
+                    return  # same-wave deferral, one tick (see ServeEngine)
+                res = self.kv.alloc(req.prompt, req.max_new,
+                                    share=self._share)
+                if res is None:
+                    return
+                slot, shared_tokens = res
+            else:
+                slot = self.kv.alloc()
+                if slot is None:
+                    return
+                shared_tokens = 0
+            self.queue.popleft()
+            req.slot = slot
+            req.state = PREFILL
+            req.filled = shared_tokens
+            self.slots[slot] = req
+            self._temp[slot] = req.sampling.temperature
+            self._topk[slot] = req.sampling.top_k
+            self._topp[slot] = req.sampling.top_p
+            s, ls = self.kv.shard_of(slot)
+            self.cur_tok[s, ls, 0] = req.prompt[0]
+
+    # ------------------------------------------------------------------
+    def _emit(self, req: Request, tok: int, now: float) -> None:
+        """Record one generated token and retire the request if finished."""
+        if req.t_first is None:
+            req.t_first = now
+        req.out.append(tok)
+        s, ls = self.kv.shard_of(req.slot)
+        if (
+            tok == self.eos_id
+            or len(req.out) >= req.max_new
+            or len(req.prompt) + len(req.out) >= self.max_seq
+        ):
+            req.t_done = now
+            self.finished.append(req)
+            self.slots[req.slot] = None
+            self.kv.free(req.slot)
+            self.cur_tok[s, ls, 0] = 0
+        else:
+            req.state = DECODE
+            self.cur_tok[s, ls, 0] = tok
+
+    def _sample_rows(self, logits: np.ndarray) -> np.ndarray:
+        self.rng, sub = jax.random.split(self.rng)
+        return np.asarray(self._sample(
+            jnp.asarray(logits), sub, jnp.asarray(self._temp),
+            jnp.asarray(self._topk), jnp.asarray(self._topp)))
+
+    def _sample_one(self, logits_row: np.ndarray, req: Request) -> int:
+        self.rng, sub = jax.random.split(self.rng)
+        sp = req.sampling
+        return int(self._sample(
+            jnp.asarray(logits_row)[None], sub,
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32))[0])
+
+    def _stage(self, name: str, value) -> jax.Array:
+        return self.xfer.stage(name, value, self.kv_sharding)
+
+    # ------------------------------------------------------------------
+    def _plan_prefill(self):
+        """Per-shard FIFO chunk plans (at most one chunk per request per
+        tick; each shard spends its own per-tick prefill-token budget)."""
+        plans = []
+        for s in range(self.D):
+            prefilling = sorted(
+                (r for r in self.slots[s * self.Bs:(s + 1) * self.Bs]
+                 if r is not None and r.state == PREFILL),
+                key=lambda r: r.rid)
+            triples = []
+            for r in prefilling:
+                _, ls = self.kv.shard_of(r.slot)
+                triples.append((ls, len(r.prompt), r.filled))
+            plans.append(deque(self.admission.plan_chunks(triples)))
+        return plans
+
+    def _dispatch_prefill_round(self, chunks):
+        """One fixed-shape sharded prefill call: ``chunks[s]`` is shard
+        s's PrefillChunk or None.  Returns (op, logits_dev, completions)."""
+        C = self.chunk_size
+        toks = np.zeros((self.D, C), np.int32)
+        slots = np.zeros((self.D,), np.int32)
+        offs = np.zeros((self.D,), np.int32)
+        valids = np.zeros((self.D,), np.int32)
+        acts = np.zeros((self.D,), bool)
+        bts = (np.zeros((self.D, self.kv.pages_per_seq), np.int32)
+               if self.paged else None)
+        live = []
+        for s, ch in enumerate(chunks):
+            if ch is None:
+                continue
+            gslot = s * self.Bs + ch.slot
+            req = self.slots[gslot]
+            if not self.kv.has_room(gslot, ch.n):
+                raise ValueError(
+                    f"prefill chunk ({ch.n} tokens at offset {ch.start}) "
+                    f"overruns slot {gslot}'s cache "
+                    f"(len={self.kv.length_of(gslot)}, "
+                    f"max_seq={self.max_seq})")
+            toks[s, :ch.n] = req.prompt[ch.start:ch.start + ch.n]
+            slots[s] = ch.slot
+            offs[s] = ch.start
+            valids[s] = ch.n
+            acts[s] = True
+            if self.paged:
+                bts[s] = self.kv.shards[s].block_tables[ch.slot]
+            live.append((s, req, ch))
+
+        args = [self.params,
+                self._stage("prefill.tokens", toks), self.cache,
+                self._stage("prefill.slots", slots),
+                self._stage("prefill.offsets", offs),
+                self._stage("prefill.valids", valids),
+                self._stage("prefill.actives", acts)]
+        if self.paged:
+            args.append(self._stage("prefill.block_tables", bts))
+        logits_d, self.cache = self._prefill(*args)
+        op = self.xfer.dispatch("prefill", logits_d)
+
+        completions = []
+        for s, req, ch in live:
+            self.model_calls += 1
+            self.prefill_calls += 1
+            req.filled += ch.n
+            self.kv.advance(req.slot, ch.n)
+            if req.filled == len(req.prompt):
+                completions.append((s, req))
+        return op, logits_d, completions
+
+    # ------------------------------------------------------------------
+    def tick(self) -> None:
+        """One pipelined engine tick (phases A-D, see module docstring)."""
+        did = False
+        tick_ops = []
+
+        # -- phase A: dispatch prefill rounds (hidden behind last decode)
+        self._admit()
+        plans = self._plan_prefill()
+        pending_first = []  # (op, logits_dev, [(shard, req)])
+        busy = np.zeros((self.D,), bool)
+        while any(plans):
+            chunks = [p.popleft() if p else None for p in plans]
+            op, logits_d, completions = self._dispatch_prefill_round(chunks)
+            tick_ops.append(op)
+            busy |= np.asarray([c is not None for c in chunks])
+            if completions:
+                pending_first.append((op, logits_d, completions))
+            did = True
+
+        # -- phase B: consume last tick's decode (hidden behind phase A) --
+        if self._pending_decode is not None:
+            op, logits_d, decoding = self._pending_decode
+            self._pending_decode = None
+            logits_h = self.xfer.fetch("decode.logits", logits_d, of=op)
+            sampled = self._sample_rows(logits_h)
+            now = time.monotonic()
+            for b, req in enumerate(self.slots):
+                if req is not None and req.state == DECODE and decoding[b]:
+                    self._emit(req, int(sampled[b]), now)
+            did = True
+
+        # -- phase C: dispatch this tick's decode step --------------------
+        decoding = [r is not None and r.state == DECODE for r in self.slots]
+        if any(decoding):
+            if self.paged:
+                self.kv.ensure_decode_room(decoding)
+                logits_d, self.cache = self._step(
+                    self.params,
+                    self._stage("decode.tokens", self.cur_tok), self.cache,
+                    self._stage("decode.lengths", self.kv.lengths_array()),
+                    self._stage("decode.block_tables",
+                                self.kv.block_tables_array()))
+            else:
+                logits_d, self.cache = self._step(
+                    self.params,
+                    self._stage("decode.tokens", self.cur_tok), self.cache,
+                    self._stage("decode.lengths", self.kv.lengths_array()))
+            self.model_calls += 1
+            self.kv.advance_mask(decoding)
+            op = self.xfer.dispatch("decode", logits_d)
+            self._pending_decode = (op, logits_d, decoding)
+            busy |= np.asarray(decoding).reshape(
+                self.D, self.Bs).any(axis=1)
+            did = True
+
+        # -- phase D: first tokens off completed prefills (hidden behind C)
+        for op, logits_d, completions in pending_first:
+            logits_h = self.xfer.fetch("prefill.logits", logits_d, of=op)
+            now = time.monotonic()
+            for s, req in completions:
+                self._emit(req, self._sample_one(logits_h[s], req), now)
+
+        for op in tick_ops:  # a prefill op cannot shadow beyond its tick
+            self.xfer.retire(op)
+        if did:
+            self._busy_ticks += busy
+            self.ticks += 1
+
+    # ------------------------------------------------------------------
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        while (
+            self.queue
+            or any(s is not None for s in self.slots)
+            or self._pending_decode is not None
+        ) and self.ticks < max_ticks:
+            self.tick()
+        self.xfer.sync()
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def utilization(self) -> np.ndarray:
+        """Per-device busy-tick fraction (a shard is busy in a tick when it
+        prefilled a chunk or decoded a slot)."""
+        return self._busy_ticks / max(self.ticks, 1)
+
+    def reset_counters(self) -> None:
+        """Zero the schedule counters and the transfer log (benchmarks:
+        call between a jit warm-up run and the measured workload so ticks,
+        model calls, utilization, and overlap cover the workload only).
+        Only valid while drained (no in-flight tick state)."""
+        assert self._pending_decode is None
+        self.ticks = self.model_calls = self.prefill_calls = 0
+        self._busy_ticks[:] = 0
+        self.xfer.reset()
+
+    def stats(self) -> Dict[str, float]:
+        out = latency_stats(self.finished)
+        out.update({
+            "ticks": self.ticks,
+            "model_calls": self.model_calls,
+            "prefill_calls": self.prefill_calls,
+            "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
+            "n_shards": self.D,
+            "mean_device_utilization": float(np.mean(self.utilization())),
+        })
+        out.update(self.xfer.stats())
+        if self.paged:
+            out.update(self.kv.stats())
+        return out

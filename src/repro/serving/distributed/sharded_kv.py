@@ -1,0 +1,244 @@
+"""Sharded KV allocators: one page pool (or slot pool) per device.
+
+The distributed engine's cache seam: a :class:`ShardedPageAllocator` owns
+``n_shards`` host-side :class:`~repro.serving.kv_cache.PagedCacheManager`
+instances (metadata only, ``with_cache=False``) while the actual K/V
+arrays live in ONE device pytree whose leading axis is the shard axis,
+committed to the mesh with ``PartitionSpec("shard")`` — so shard ``s``'s
+pages are physically resident on device ``s`` and nothing in the engine
+tick ever reshards them.
+
+Shard-locality invariants (the distributed analogue of PR 2's two-level
+validity rules):
+
+  * **Page ids are shard-local.**  Every shard's manager numbers its pages
+    ``0..n_pages-1`` independently; a block-table row is only ever handed
+    to the shard that allocated it, so an id can never dereference into a
+    foreign pool.
+  * **A request never straddles shards.**  ``alloc`` places the whole
+    request — prompt pages, decode-growth reservation, prefix links — on
+    one shard chosen by :class:`~repro.serving.admission.ShardPlacement`
+    (prefix affinity, then least loaded).  A request too large for any
+    single shard raises ``ValueError`` even when the *aggregate* free
+    pages across shards would cover it: pages cannot be split across
+    devices, so admitting it would deadlock the FIFO head.
+  * **Only metadata travels.**  What crosses the host/device boundary each
+    tick is block-table rows, token ids, lengths, and logits — all i32/f32
+    and orders of magnitude smaller than one page of K/V (asserted against
+    the transfer log in ``tests/``).
+
+Global slot ids are ``shard * slots_per_shard + local_slot``; the engine
+only ever sees globals, the managers only locals.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.admission import ShardPlacement
+from repro.serving.kv_cache import PagedCacheManager, SlotCacheManager
+
+
+class _ShardedBase:
+    """Global-slot-id delegation shared by the paged and stacked flavours."""
+
+    shards: List
+    slots_per_shard: int
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def shard_of(self, slot: int) -> Tuple[int, int]:
+        """Global slot id -> (shard, local slot)."""
+        return divmod(slot, self.slots_per_shard)
+
+    # -- length accounting (global ids) ---------------------------------
+    def advance(self, slot: int, n: int) -> None:
+        s, ls = self.shard_of(slot)
+        self.shards[s].advance(ls, n)
+
+    def advance_mask(self, mask) -> None:
+        mask = np.asarray(mask).reshape(self.n_shards, self.slots_per_shard)
+        for s, m in enumerate(self.shards):
+            m.advance_mask(mask[s])
+
+    def length_of(self, slot: int) -> int:
+        s, ls = self.shard_of(slot)
+        return self.shards[s].length_of(ls)
+
+    def has_room(self, slot: int, n: int = 1) -> bool:
+        s, ls = self.shard_of(slot)
+        return self.shards[s].has_room(ls, n)
+
+    def free(self, slot: int) -> None:
+        s, ls = self.shard_of(slot)
+        self.shards[s].free(ls)
+
+    # -- batched device-call views (D leading axis) ---------------------
+    def lengths_array(self) -> np.ndarray:
+        """(D, Bs) i32 — per-shard slot lengths, ready to stage."""
+        return np.stack([m.lengths for m in self.shards])
+
+    @property
+    def n_free(self) -> int:
+        return sum(m.n_free for m in self.shards)
+
+    @property
+    def n_used(self) -> int:
+        return sum(m.n_used for m in self.shards)
+
+
+class ShardedPageAllocator(_ShardedBase):
+    """Per-device paged KV pools behind one global-slot-id allocator."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_shards: int,
+        slots_per_shard: int,
+        max_seq: int,
+        *,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        prefix_sharing: bool = True,
+        placement: Optional[ShardPlacement] = None,
+    ):
+        assert n_shards >= 1
+        self.cfg = cfg
+        self.slots_per_shard = slots_per_shard
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.prefix_sharing = prefix_sharing
+        self.placement = placement or ShardPlacement()
+        self.shards = [
+            PagedCacheManager(
+                cfg, slots_per_shard, max_seq, page_size=page_size,
+                n_pages=n_pages, prefix_sharing=prefix_sharing,
+                with_cache=False)
+            for _ in range(n_shards)
+        ]
+        self.pages_per_seq = self.shards[0].pages_per_seq
+        self.n_pages = self.shards[0].n_pages  # per shard
+
+    # -- admission ------------------------------------------------------
+    def probe_pending(self, prompt: Sequence[int]) -> bool:
+        """True if any shard holds a not-yet-ready registration of this
+        prompt's next prefix page (same-wave deferral, per shard)."""
+        return any(m.probe_pending(prompt) for m in self.shards)
+
+    def alloc(
+        self,
+        prompt: Sequence[int],
+        max_new: int = 1,
+        *,
+        share: bool = True,
+    ) -> Optional[Tuple[int, int]]:
+        """Place one request on a single shard.
+
+        Candidate shards come from :class:`ShardPlacement` (prefix
+        affinity first — committed, so a momentarily-full prefix shard
+        makes the request wait rather than lose the copy-free link — then
+        most available pages).  Returns ``(global_slot, shared_tokens)``,
+        or None when every candidate shard is momentarily full (caller
+        retries next tick).  Raises ``ValueError`` when NO candidate
+        shard could *ever* fit the request — pages never straddle shards,
+        so aggregate free space across shards cannot save it.
+        """
+        order = self.placement.order(
+            self.shards, prompt, share=share and self.prefix_sharing)
+        never_fits = 0
+        err: Optional[ValueError] = None
+        for s in order:
+            try:
+                res = self.shards[s].alloc(prompt, max_new, share=share)
+            except ValueError as e:  # this shard can never fit it
+                never_fits += 1
+                err = e
+                continue
+            if res is not None:
+                local_slot, shared_tokens = res
+                return s * self.slots_per_shard + local_slot, shared_tokens
+        if never_fits == len(order):  # every candidate shard raised
+            raise ValueError(
+                f"request fits no single pool shard ({err}); K/V pages "
+                "never straddle shards, so aggregate free pages across "
+                f"{self.n_shards} shards cannot admit it — raise n_pages "
+                "per shard or lower max_new")
+        return None
+
+    def ensure_decode_room(self, mask) -> None:
+        mask = np.asarray(mask).reshape(self.n_shards, self.slots_per_shard)
+        for s, m in enumerate(self.shards):
+            m.ensure_decode_room(mask[s])
+
+    # -- batched device-call views --------------------------------------
+    def block_tables_array(self) -> np.ndarray:
+        """(D, Bs, pages_per_seq) i32 — the only per-request state that
+        travels to devices (shard-local page ids)."""
+        return np.stack([m.block_tables for m in self.shards])
+
+    # -- locality verification ------------------------------------------
+    def owned_pages(self, slot: int) -> set:
+        """Page ids backing a global slot — all from its own shard's pool
+        (tests assert the slot's block-table row ⊆ this ∪ {null})."""
+        s, ls = self.shard_of(slot)
+        return set(self.shards[s]._slot_pages.get(ls, []))
+
+    def check_shard_locality(self) -> None:
+        """Assert every live slot's block table resolves inside its own
+        shard's id space and matches that shard's ownership records."""
+        for s, m in enumerate(self.shards):
+            for ls in m._used_slots:
+                row = set(int(p) for p in m.block_tables[ls])
+                owned = set(m._slot_pages[ls]) | {0}
+                assert row <= owned, (s, ls, row, owned)
+                assert all(0 <= p < m.n_pages for p in row), (s, ls, row)
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def available_pages(self) -> List[int]:
+        return [m.available_pages for m in self.shards]
+
+    def stats(self) -> Dict[str, int]:
+        per_shard = [m.stats() for m in self.shards]
+        return {k: sum(d[k] for d in per_shard) for k in per_shard[0]}
+
+
+class ShardedSlotAllocator(_ShardedBase):
+    """Per-device contiguous slot pools (the ``kv_layout="stacked"``
+    flavour): one :class:`SlotCacheManager` per shard, least-loaded
+    placement, global slot ids.  Kept so every paged distributed result
+    can be asserted bit-exact against the contiguous distributed layout,
+    mirroring the single-device pairing."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_shards: int,
+        slots_per_shard: int,
+        max_seq: int,
+        *,
+        placement: Optional[ShardPlacement] = None,
+    ):
+        assert n_shards >= 1
+        self.cfg = cfg
+        self.slots_per_shard = slots_per_shard
+        self.max_seq = max_seq
+        self.placement = placement or ShardPlacement()
+        self.shards = [
+            SlotCacheManager(cfg, slots_per_shard, max_seq, with_cache=False)
+            for _ in range(n_shards)
+        ]
+
+    def alloc(self) -> Optional[int]:
+        """Claim a slot on the least-loaded shard (the same
+        :class:`ShardPlacement` order as the paged allocator, minus prefix
+        affinity — no prompt), or None when every shard is full."""
+        for s in self.placement.order(self.shards):
+            local = self.shards[s].alloc()
+            if local is not None:
+                return s * self.slots_per_shard + local
+        return None

@@ -1,0 +1,145 @@
+"""Transfer scheduling: double-buffer host<->device traffic behind compute.
+
+The paper's headline distributed claim is that the dual-FPGA pipeline
+"overlaps and hides all data transfers so that the distributed
+accelerators are fully utilized".  The serving-engine analogue: every
+per-tick transfer (prompt-chunk shipping, block-table rows, token ids,
+and the logits activation collective coming back) is *staged or fetched
+while a previously dispatched device computation is still in flight*, so
+the wire time sits in the shadow of the model math.
+
+:class:`TransferScheduler` is both the mechanism and the meter:
+
+  * ``dispatch`` registers an async device computation (jax dispatch
+    returns before the work completes) and returns an op token;
+  * ``stage`` moves a host array to its device sharding; ``fetch`` pulls a
+    device array back.  Each records one transfer *event*, counted
+    **overlapped** iff at least one dispatched op was still unconsumed at
+    that moment — i.e. the transfer was scheduled into a compute shadow —
+    and **exposed** otherwise;
+  * ``retire`` drops ops whose outputs feed only the next dispatch (e.g.
+    a non-final prefill chunk's discarded logits) at tick end, so an op
+    can't shadow transfers beyond the tick it ran in.
+
+The accounting is deliberately *schedule-level*, like the benchmark's
+ticks/model-calls/pages columns: it measures whether the engine's order
+of operations put every transfer behind compute (the paper's property),
+independent of how a particular backend interleaves the streams — on the
+forced-CPU test mesh, wall-clock overlap is a host-threading artifact,
+but the schedule either hides a transfer or it does not.
+
+``overlap_ratio`` = overlapped events / all events is the engine metric
+the acceptance criterion bounds (>= 0.5 on the mixed-length workload; the
+steady-state pipeline hides everything, only stream boundaries — first
+tick, drain ticks — expose transfers).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TransferScheduler:
+    def __init__(self):
+        self._in_flight: Dict[int, List] = {}  # op id -> output leaves
+        self._next_op = 0
+        # recent events only (bounded ring — a long-lived engine logs a
+        # handful per tick forever); the aggregate counters stay exact
+        self.events: Deque[Tuple[str, int, bool]] = deque(maxlen=16384)
+        self.n_hidden = 0
+        self.n_exposed = 0
+        self.bytes_hidden = 0
+        self.bytes_exposed = 0
+        self.max_event_bytes = 0
+
+    def reset(self) -> None:
+        """Zero the event log (benchmarks: drop jit-warm-up boundary
+        events so the metric covers the measured workload only).  Ops
+        still in flight keep shadowing subsequent transfers."""
+        self.events.clear()
+        self.n_hidden = self.n_exposed = 0
+        self.bytes_hidden = self.bytes_exposed = 0
+        self.max_event_bytes = 0
+
+    # -- compute registration -------------------------------------------
+    def dispatch(self, name: str, *outputs) -> int:
+        """Register an async device computation by its output arrays.
+        Transfers recorded while the op is unconsumed count as hidden."""
+        oid = self._next_op
+        self._next_op += 1
+        leaves = []
+        for o in outputs:
+            leaves.extend(jax.tree_util.tree_leaves(o))
+        self._in_flight[oid] = leaves
+        return oid
+
+    def retire(self, oid: int) -> None:
+        """Forget an op without fetching (its outputs chain into the next
+        dispatch); call at tick end so it stops shadowing transfers."""
+        self._in_flight.pop(oid, None)
+
+    def sync(self) -> None:
+        """Block on every outstanding op (drain / shutdown)."""
+        for leaves in self._in_flight.values():
+            for leaf in leaves:
+                leaf.block_until_ready()
+        self._in_flight.clear()
+
+    # -- transfers -------------------------------------------------------
+    def _record(self, name: str, nbytes: int, hidden: bool) -> None:
+        self.events.append((name, nbytes, hidden))
+        if hidden:
+            self.n_hidden += 1
+            self.bytes_hidden += nbytes
+        else:
+            self.n_exposed += 1
+            self.bytes_exposed += nbytes
+        self.max_event_bytes = max(self.max_event_bytes, nbytes)
+
+    def stage(self, name: str, value, sharding=None) -> jax.Array:
+        """Host -> device: ship a (metadata-sized) array, recording whether
+        the copy rode a compute shadow."""
+        value = np.asarray(value)
+        hidden = bool(self._in_flight)
+        # one hop: device_put straight to the target sharding (asarray
+        # first would commit to the default device and pay a second copy)
+        arr = (jax.device_put(value, sharding) if sharding is not None
+               else jnp.asarray(value))
+        self._record(name, int(value.nbytes), hidden)
+        return arr
+
+    def fetch(self, name: str, array, of: Optional[int] = None) -> np.ndarray:
+        """Device -> host: pull an op's output.  ``of`` names the producer
+        (consumed by this fetch); the transfer is hidden iff OTHER ops are
+        still in flight behind it."""
+        if of is not None:
+            self._in_flight.pop(of, None)
+        hidden = bool(self._in_flight)
+        out = np.asarray(array)
+        self._record(name, int(out.nbytes), hidden)
+        return out
+
+    # -- metrics ---------------------------------------------------------
+    def overlap_ratio(self) -> float:
+        total = self.n_hidden + self.n_exposed
+        return self.n_hidden / total if total else 0.0
+
+    def byte_overlap_ratio(self) -> float:
+        total = self.bytes_hidden + self.bytes_exposed
+        return self.bytes_hidden / total if total else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "transfers": self.n_hidden + self.n_exposed,
+            "transfers_hidden": self.n_hidden,
+            "transfers_exposed": self.n_exposed,
+            "transfer_bytes": self.bytes_hidden + self.bytes_exposed,
+            "transfer_bytes_hidden": self.bytes_hidden,
+            "max_transfer_bytes": self.max_event_bytes,
+            "overlap_ratio": self.overlap_ratio(),
+            "byte_overlap_ratio": self.byte_overlap_ratio(),
+        }

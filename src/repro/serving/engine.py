@@ -93,6 +93,38 @@ class Request:
         return None if self.t_first is None else self.t_first - self.t_submit
 
 
+def submit_request(engine, prompt, max_new, sampling) -> int:
+    """Queue one request — the submit path shared by :class:`ServeEngine`
+    and the distributed engine (same validation, rid assignment, and
+    timestamping, so per-request accounting stays comparable)."""
+    assert 0 < len(prompt) < engine.max_seq, (
+        f"prompt ({len(prompt)} tokens) must fit the cache "
+        f"(max_seq={engine.max_seq})")
+    rid = engine._next_rid
+    engine._next_rid += 1
+    engine.queue.append(
+        Request(rid=rid, prompt=list(prompt), max_new=max_new,
+                sampling=sampling or samplers.GREEDY,
+                t_submit=time.monotonic()))
+    return rid
+
+
+def latency_stats(finished: List[Request]) -> Dict[str, float]:
+    """Per-request latency aggregates (TTFT / TPOT), shared by both
+    engines' ``stats()``."""
+    ttft = [r.ttft for r in finished if r.ttft is not None]
+    tpot = [
+        (r.t_done - r.t_first) / max(1, len(r.out) - 1)
+        for r in finished
+        if r.t_done and r.t_first and len(r.out) > 1
+    ]
+    return {
+        "requests": len(finished),
+        "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+        "mean_tok_latency_s": float(np.mean(tpot)) if tpot else 0.0,
+    }
+
+
 class ServeEngine:
     def __init__(
         self,
@@ -227,16 +259,7 @@ class ServeEngine:
         max_new: int = 32,
         sampling: Optional[samplers.SamplingParams] = None,
     ) -> int:
-        assert 0 < len(prompt) < self.max_seq, (
-            f"prompt ({len(prompt)} tokens) must fit the cache "
-            f"(max_seq={self.max_seq})")
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(
-            Request(rid=rid, prompt=list(prompt), max_new=max_new,
-                    sampling=sampling or samplers.GREEDY,
-                    t_submit=time.monotonic()))
-        return rid
+        return submit_request(self, prompt, max_new, sampling)
 
     def _admit(self) -> None:
         while self.queue:
@@ -428,21 +451,13 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        ttft = [r.ttft for r in self.finished if r.ttft is not None]
-        tpot = [
-            (r.t_done - r.t_first) / max(1, len(r.out) - 1)
-            for r in self.finished
-            if r.t_done and r.t_first and len(r.out) > 1
-        ]
-        out = {
-            "requests": len(self.finished),
+        out = latency_stats(self.finished)
+        out.update({
             "ticks": self.ticks,
             "model_calls": self.model_calls,
             "prefill_calls": self.prefill_calls,
-            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
-            "mean_tok_latency_s": float(np.mean(tpot)) if tpot else 0.0,
             "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
-        }
+        })
         if self.paged:
             out.update(self.kv.stats())
         return out

@@ -69,12 +69,18 @@ class SlotCacheManager:
         *,
         layout: str = "stacked",
         dtype=jnp.bfloat16,
+        with_cache: bool = True,
     ):
         self.cfg = cfg
         self.B = batch_slots
         self.max_seq = max_seq
-        self.cache: Dict = lm.init_cache(
-            cfg, batch_slots, max_seq, layout=layout, dtype=dtype)
+        # with_cache=False: host metadata only — the sharded allocator
+        # (serving/distributed) owns one stacked device pytree for all
+        # shards instead of per-manager arrays
+        self.cache: Optional[Dict] = (
+            lm.init_cache(cfg, batch_slots, max_seq, layout=layout,
+                          dtype=dtype)
+            if with_cache else None)
         # host-side: read/updated every tick (the engine converts to a
         # device array once per decode/prefill call)
         self.lengths = np.zeros((batch_slots,), np.int32)
@@ -151,6 +157,7 @@ class PagedCacheManager:
         n_pages: Optional[int] = None,
         prefix_sharing: bool = True,
         dtype=jnp.bfloat16,
+        with_cache: bool = True,
     ):
         assert blocks.chunk_supported(cfg), (
             "paged KV cache requires a global-attention stack",
@@ -170,9 +177,12 @@ class PagedCacheManager:
         assert n_pages >= 2, "need at least the null page and one real page"
         self.n_pages = n_pages
         self.prefix_sharing = prefix_sharing
-        # pool axis = pages, "seq" axis = one page's tokens
-        self.cache: Dict = lm.init_cache(
-            cfg, n_pages, page_size, layout="paged", dtype=dtype)
+        # pool axis = pages, "seq" axis = one page's tokens.
+        # with_cache=False: host metadata only (see SlotCacheManager)
+        self.cache: Optional[Dict] = (
+            lm.init_cache(cfg, n_pages, page_size, layout="paged",
+                          dtype=dtype)
+            if with_cache else None)
         # host-side, like block_tables (see SlotCacheManager.__init__)
         self.lengths = np.zeros((batch_slots,), np.int32)
         self.block_tables = np.zeros(
@@ -261,6 +271,11 @@ class PagedCacheManager:
             pids.append(pid)
             parent = pid
         return pids, h
+
+    def shared_prefix_pages(self, prompt: Sequence[int]) -> int:
+        """Ready-to-share full prefix pages this pool already holds for
+        ``prompt`` (non-mutating) — the shard-placement affinity signal."""
+        return len(self._match_prefix(prompt)[0])
 
     def probe_pending(self, prompt: Sequence[int]) -> bool:
         """True if this prompt's next unshared full prefix page is

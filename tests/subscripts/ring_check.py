@@ -64,20 +64,60 @@ def main():
     )
     assert "all-gather" in txt2
 
+    # --- sharded W8A8 matmul: bit-identical to the local Fused MP kernel ---
+    from repro.kernels import ops
+
+    xq = jnp.asarray(rng.integers(-127, 128, (8, 64)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (64, 128)), jnp.int8)
+    xs_ = jnp.asarray(rng.uniform(0.01, 0.1, (8, 1)), jnp.float32)
+    ws_ = jnp.asarray(rng.uniform(0.01, 0.1, (1, 128)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    want_q = np.asarray(ops.quant_matmul(xq, wq, xs_, ws_, bias,
+                                         out_dtype=jnp.float32))
+    got_q = np.asarray(ring.tp_quant_matmul(xq, wq, xs_, ws_, bias,
+                                            mesh=mesh,
+                                            out_dtype=jnp.float32))
+    # column sharding touches no reduction: results must be bitwise equal
+    np.testing.assert_array_equal(got_q, want_q)
+
     # --- serving engine routed through ring-TP == plain engine ---
+    # (dense AND quantized: mesh= must not silently fall back to dense on
+    # the W8A8 path — its matmuls route through tp_quant_matmul)
     from repro.configs import get_config
     from repro.models import lm
     from repro.serving.engine import ServeEngine
 
     cfg = get_config("gpt2-345m").reduced()  # d=64, ff=128, V=512: all %8==0
     params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=32)
-    outs = {}
-    for label, m in (("plain", None), ("ring", mesh)):
-        eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, eos_id=-1,
-                          chunk_size=8, mesh=m)
-        eng.submit([5, 6, 7, 8], max_new=3)
-        outs[label] = eng.run()[0].out
-    assert outs["plain"] == outs["ring"], outs
+    cal = [jnp.asarray([[2, 3, 4, 5, 6, 7, 8, 9]])]
+    for quantized in (False, True):
+        outs = {}
+        for label, m in (("plain", None), ("ring", mesh)):
+            eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32,
+                              eos_id=-1, chunk_size=8, mesh=m,
+                              quantized=quantized,
+                              calibration_batches=cal if quantized else None)
+            eng.submit([5, 6, 7, 8], max_new=3)
+            outs[label] = eng.run()[0].out
+        assert outs["plain"] == outs["ring"], (quantized, outs)
+
+    # the quantized ring path really shards: under tp_context the linear's
+    # output is column-partitioned over all 8 devices (each holds N/8
+    # columns; no collective is *needed* — replicated-input column
+    # parallelism is communication-free, the cheapest point on the ring)
+    from repro.core import quant
+    from repro.models.layers import linear, tp_context
+
+    qlin = quant.quantize_linear_params(
+        jnp.asarray(rng.normal(size=(cfg.d_model, 128)), jnp.float32), None)
+    x_in = jnp.asarray(rng.normal(size=(4, cfg.d_model)), jnp.float32)
+    with tp_context(mesh):
+        y_q = jax.jit(lambda a: linear(qlin, a))(x_in)
+    shards = y_q.addressable_shards
+    assert len(shards) == 8 and len({s.device for s in shards}) == 8
+    assert all(s.data.shape == (4, 128 // 8) for s in shards), (
+        "quantized linear under tp_context did not column-shard",
+        [s.data.shape for s in shards])
 
     print("RING_OK")
 
