@@ -26,6 +26,17 @@ token-identical (pages are a layout, not a model change), and sharing
 must allocate >=30% fewer pages than no-sharing paged mode (PR-2
 acceptance criterion; shared full prompt pages are linked, not copied).
 
+Part "spec" (``--part spec``; also runs under ``--part all``) drives a
+repetitive-text workload (short patterns repeated into 24-token prompts,
+long generations that fall into the model's greedy cycles — the regime
+where decode ticks are pure weight-streaming waste) through the plain
+engine and the speculative engine (``spec=SpecConfig(k)``, self-drafting
+n-gram proposer).  Tokens must be identical, the speculative engine must
+finish with **fewer model calls**, and its **tokens-per-model-call** must
+exceed 1.5 (each verify call emits the accepted draft run + one
+bonus/corrective token per slot); acceptance rate comes from
+``stats()["acceptance_rate"]``.
+
 Part 3 (``--part dist``; auto-spawned in a forced 4-device subprocess
 when the main process has fewer devices) drives the mixed-length workload
 through ``DistributedServeEngine`` on a 4-shard mesh and reports, next to
@@ -117,6 +128,73 @@ def run_mode(cfg, params, prompts, *, mode, chunk, slots, max_new, max_seq,
         "hit_pages": (eng.kv.prefix_hit_pages - t_hits
                       if eng.paged else 0),
     }
+
+
+def build_repetitive_workload(rng, n_requests, vocab, *, pattern_len=8,
+                              repeats=3):
+    """Repetitive text: a few short patterns, each repeated into a
+    prompt — the n-gram proposer's home turf (and greedy decode of long
+    generations settles into cycles it also predicts)."""
+    patterns = [list(rng.integers(1, vocab, pattern_len)) for _ in range(3)]
+    return [list(patterns[i % len(patterns)]) * repeats
+            for i in range(n_requests)]
+
+
+def run_spec_part(args) -> None:
+    """Part "spec": speculative decoding vs the plain engine."""
+    from repro.serving.speculative import SpecConfig
+
+    cfg = get_config("gpt2-345m").reduced()
+    max_seq = max(args.max_seq, 128)
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=max_seq)
+    rng = np.random.default_rng(args.seed)
+    prompts = build_repetitive_workload(rng, 6, cfg.vocab_size)
+    max_new = 48
+    print(f"\nspeculative workload: {len(prompts)} repetitive prompts "
+          f"({len(prompts[0])} tokens: 8-token patterns x3), {max_new} new "
+          f"tokens each, {args.slots} slots, k={args.spec_k} (n-gram "
+          "self-drafting)")
+
+    rows = {}
+    for name, spec in (("plain", None), ("spec", SpecConfig(k=args.spec_k))):
+        eng = ServeEngine(cfg, params, batch_slots=args.slots,
+                          max_seq=max_seq, eos_id=-1, chunk_size=args.chunk,
+                          spec=spec)
+        for p in prompts:
+            eng.submit(list(p), max_new=max_new)
+        t0 = time.time()
+        eng.run(max_ticks=50_000)
+        wall = time.time() - t0
+        s = eng.stats()
+        rows[name] = {
+            "outs": {r.rid: r.out for r in eng.finished},
+            "ticks": s["ticks"],
+            "calls": s["model_calls"],
+            "tok_per_call": s["tokens_per_model_call"],
+            "accept": s.get("acceptance_rate", float("nan")),
+            "tok_per_verify": s.get("tokens_per_verify_call", float("nan")),
+            "wall_s": wall,
+        }
+
+    print(f"\n{'engine':8s} {'ticks':>6s} {'calls':>6s} {'tok/call':>9s} "
+          f"{'accept':>7s} {'tok/verify':>11s}")
+    for name, r in rows.items():
+        print(f"{name:8s} {r['ticks']:6d} {r['calls']:6d} "
+              f"{r['tok_per_call']:9.2f} {r['accept']:7.2f} "
+              f"{r['tok_per_verify']:11.2f}")
+
+    assert rows["spec"]["outs"] == rows["plain"]["outs"], (
+        "speculative decoding changed the greedy stream")
+    assert rows["spec"]["calls"] < rows["plain"]["calls"], (
+        "speculation must reduce model calls "
+        f"({rows['spec']['calls']} vs {rows['plain']['calls']})")
+    assert rows["spec"]["tok_per_call"] > 1.5, (
+        "speculative decode must emit > 1.5 tokens per model call on the "
+        f"repetitive workload (got {rows['spec']['tok_per_call']:.2f})")
+    print(f"\nmodel-call reduction: {rows['plain']['calls']} -> "
+          f"{rows['spec']['calls']} "
+          f"({rows['plain']['calls'] / rows['spec']['calls']:.2f}x)")
+    print("SERVING_BENCH_SPEC_OK")
 
 
 def run_distributed_part(args) -> None:
@@ -222,7 +300,8 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sys-len", type=int, default=96)
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--part", choices=("all", "core", "dist"),
+    ap.add_argument("--spec-k", type=int, default=6)
+    ap.add_argument("--part", choices=("all", "core", "dist", "spec"),
                     default="all")
     args = ap.parse_args()
 
@@ -231,6 +310,9 @@ def main() -> None:
             run_distributed_part(args)
         else:
             spawn_distributed_part(args)
+        return
+    if args.part == "spec":
+        run_spec_part(args)
         return
 
     cfg = get_config("gpt2-345m").reduced()
@@ -308,6 +390,10 @@ def main() -> None:
         "prefix sharing must allocate >=30% fewer pages on the "
         f"shared-system-prompt workload (got {saved:.1%})")
     print("SERVING_BENCH_OK")
+
+    # -- part "spec": speculative decode vs plain on repetitive text --
+    if args.part == "all":
+        run_spec_part(args)
 
     # -- part 3: distributed engine, transfer overlap vs single device --
     if args.part == "all":

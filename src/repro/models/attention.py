@@ -104,23 +104,26 @@ def chunk_attention(
     ``positions`` first, then the chunk queries attend over the *whole*
     cache under the causal mask ``key_pos <= query_pos`` — earlier chunks
     of the same prompt are live cache content below the chunk; stale
-    entries above it are masked out by causality.  Returns
-    (out (B,C,D), k_cache, v_cache).
+    entries above it are masked out by causality.  ``positions`` are
+    per-row: prefill passes one broadcast row, speculative verification
+    passes each slot's own offset.  Returns (out (B,C,D), k_cache,
+    v_cache).
     """
     B, C = x.shape[:2]
     q, k, v = _project_qkv(p, cfg, x, name)  # (B,C,H,hd) / (B,C,Hkv,hd)
     if cfg.pos == "rope":
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
-    # per-position scatter with mode="drop": when the fixed-size chunk
-    # window of the *last* chunk hangs past max_seq, the padding positions
-    # are dropped instead of (as dynamic_update_slice would) clamping the
-    # start index backwards over already-written prompt K/V
-    idx = positions[0]  # (C,) — positions are broadcast across the batch
-    k_cache = k_cache.at[:, :, idx].set(
-        k.swapaxes(1, 2).astype(k_cache.dtype), mode="drop")
-    v_cache = v_cache.at[:, :, idx].set(
-        v.swapaxes(1, 2).astype(v_cache.dtype), mode="drop")
+    # per-row per-position scatter with mode="drop": positions past the
+    # cache end — the last prefill chunk's fixed-size window hanging past
+    # max_seq, or a verify row flagged inactive by an out-of-range offset
+    # — are dropped instead of (as dynamic_update_slice would) clamping
+    # backwards over already-written prompt K/V
+    b_idx = jnp.arange(B)[:, None]  # advanced dims lead: value is (B,C,..)
+    k_cache = k_cache.at[b_idx, :, positions].set(
+        k.astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[b_idx, :, positions].set(
+        v.astype(v_cache.dtype), mode="drop")
     group = cfg.n_heads // cfg.n_kv_heads
     S = k_cache.shape[2]
     qg = q.reshape(B, C, cfg.n_kv_heads, group, cfg.head_dim)

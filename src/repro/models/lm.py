@@ -506,6 +506,59 @@ def _paged_scatter(cache: Dict, view: Dict, bt_row: jax.Array) -> Dict:
     return new_cache
 
 
+def _chunk_body(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, C) i32
+    view: Dict,  # per-row cache views (slot view, paged view, or the
+    # whole stacked cache, whose batch axis is the slot axis)
+    positions: jax.Array,  # (B, C) absolute positions per row
+    moe_cf: Optional[float],
+    dtype,
+) -> Tuple[jax.Array, Dict]:
+    """Shared multi-token cached forward: embed the chunk rows, run every
+    layer's :func:`repro.models.blocks.block_apply_chunk` against ``view``,
+    and return (pre-final-norm hidden (B, C, d), new_view).  Used by both
+    chunked prefill (B=1, one slot view) and speculative verification
+    (B=slots, per-row offsets)."""
+    x = embed(params["embed"], tokens, dtype)  # (B, C, d)
+    if cfg.pos == "learned":
+        # clipped gather (not dynamic_slice, whose clamped start would
+        # mis-position every token when the last chunk window passes the
+        # table end); padding rows read a clamped embedding and are masked
+        P = params["pos_embed"].shape[0]
+        x = x + jnp.take(params["pos_embed"],
+                         jnp.clip(positions, 0, P - 1), axis=0).astype(dtype)
+
+    period = _period(cfg)
+    n_per = _n_per_from(params)
+
+    def period_body(x, scanned):
+        layer_p, layer_c = scanned
+        new_c = []
+        for i in range(period):
+            x, c = blocks.block_apply_chunk(
+                layer_p[i], x, layer_c[i], cfg, cfg.block_pattern[i],
+                positions=positions, moe_cf=moe_cf, name=f"p{i}")
+            new_c.append(c)
+        return x, tuple(new_c)
+
+    if n_per == 0:
+        new_periods = view["periods"]
+    else:
+        x, new_periods = jax.lax.scan(
+            period_body, x, (params["periods"], view["periods"]))
+
+    new_rest = []
+    for j, layer_p in enumerate(params["rest"]):
+        li = n_per * period + j
+        x, c = blocks.block_apply_chunk(
+            layer_p, x, view["rest"][j], cfg, cfg.block_kind(li),
+            positions=positions, moe_cf=moe_cf, name=f"r{j}")
+        new_rest.append(c)
+    return x, {"periods": new_periods, "rest": new_rest}
+
+
 def prefill_into_slot(
     params: Dict,
     cfg: ModelConfig,
@@ -551,43 +604,9 @@ def prefill_into_slot(
         view = _paged_view(cache, block_table)
     else:
         view = _slot_view(cache, slot)
-    x = embed(params["embed"], tokens, dtype)  # (1, C, d)
     positions = (offset + jnp.arange(C, dtype=jnp.int32))[None]  # (1, C)
-    if cfg.pos == "learned":
-        # clipped gather (not dynamic_slice, whose clamped start would
-        # mis-position every token when the last chunk window passes the
-        # table end); padding rows read a clamped embedding and are masked
-        P = params["pos_embed"].shape[0]
-        x = x + jnp.take(params["pos_embed"],
-                         jnp.clip(positions[0], 0, P - 1),
-                         axis=0).astype(dtype)[None]
-
-    period = _period(cfg)
-    n_per = _n_per_from(params)
-
-    def period_body(x, scanned):
-        layer_p, layer_c = scanned
-        new_c = []
-        for i in range(period):
-            x, c = blocks.block_apply_chunk(
-                layer_p[i], x, layer_c[i], cfg, cfg.block_pattern[i],
-                positions=positions, moe_cf=moe_cf, name=f"p{i}")
-            new_c.append(c)
-        return x, tuple(new_c)
-
-    if n_per == 0:
-        new_periods = view["periods"]
-    else:
-        x, new_periods = jax.lax.scan(
-            period_body, x, (params["periods"], view["periods"]))
-
-    new_rest = []
-    for j, layer_p in enumerate(params["rest"]):
-        li = n_per * period + j
-        x, c = blocks.block_apply_chunk(
-            layer_p, x, view["rest"][j], cfg, cfg.block_kind(li),
-            positions=positions, moe_cf=moe_cf, name=f"r{j}")
-        new_rest.append(c)
+    x, new_view = _chunk_body(params, cfg, tokens, view, positions,
+                              moe_cf, dtype)
 
     x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
     x_last = apply_norm(params["final_ln"], x_last, cfg.norm)
@@ -595,12 +614,126 @@ def prefill_into_slot(
         logits = unembed(params["embed"], x_last)
     else:
         logits = linear(params["lm_head"], x_last, "lm_head")
-    new_view = {"periods": new_periods, "rest": new_rest}
     if block_table is not None:
         new_cache = _paged_scatter(cache, new_view, block_table)
     else:
         new_cache = _slot_scatter(cache, new_view, slot)
     return logits[0, 0].astype(jnp.float32), new_cache
+
+
+def _paged_view_batch(cache: Dict, bts: jax.Array) -> Dict:
+    """Batched :func:`_paged_view`: gather every row's pages into
+    contiguous views — leaves shaped like the *stacked* cache
+    ((B, Hkv, n_pg*ps, hd); periods keep B on axis 1)."""
+    B, n_pg = bts.shape
+
+    def g_rest(t):  # (P, Hkv, ps, hd) -> (B, Hkv, n_pg*ps, hd)
+        g = t[bts].transpose(0, 2, 1, 3, 4)  # (B, Hkv, n_pg, ps, hd)
+        return g.reshape(B, t.shape[1], n_pg * t.shape[2], t.shape[3])
+
+    def g_per(t):  # (n_per, P, Hkv, ps, hd) -> (n_per, B, Hkv, n_pg*ps, hd)
+        g = t[:, bts].transpose(0, 1, 3, 2, 4, 5)
+        return g.reshape(
+            t.shape[0], B, t.shape[2], n_pg * t.shape[3], t.shape[4])
+
+    return {
+        "periods": jax.tree_util.tree_map(g_per, cache["periods"]),
+        "rest": jax.tree_util.tree_map(g_rest, cache["rest"]),
+    }
+
+
+def _paged_scatter_batch(cache: Dict, view: Dict, bts: jax.Array) -> Dict:
+    """Scatter every row's updated view back onto its pages.  Page ids
+    shared between rows receive identical bits from each (full prompt
+    pages are immutable below every sharer's write offset, so no row's
+    chunk touched them), and the null page 0 — named by every unfilled
+    block-table entry — may take writes in any order because its content
+    is never unmasked."""
+    B, n_pg = bts.shape
+
+    def s_rest(full, v):  # v (B, Hkv, n_pg*ps, hd)
+        Hkv, ps, hd = full.shape[1], full.shape[2], full.shape[3]
+        pages = v.reshape(B, Hkv, n_pg, ps, hd).transpose(0, 2, 1, 3, 4)
+        return full.at[bts].set(pages.astype(full.dtype))
+
+    def s_per(full, v):  # v (n_per, B, Hkv, n_pg*ps, hd)
+        n_per, Hkv, ps, hd = (full.shape[0], full.shape[2], full.shape[3],
+                              full.shape[4])
+        pages = v.reshape(n_per, B, Hkv, n_pg, ps, hd).transpose(
+            0, 1, 3, 2, 4, 5)
+        return full.at[:, bts].set(pages.astype(full.dtype))
+
+    new_cache = dict(cache)
+    new_cache["periods"] = jax.tree_util.tree_map(
+        s_per, cache["periods"], view["periods"])
+    new_cache["rest"] = jax.tree_util.tree_map(
+        s_rest, cache["rest"], view["rest"])
+    return new_cache
+
+
+def verify_chunk(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, C) i32 — per-slot [cur_tok, draft...] chunks
+    cache: Dict,
+    lengths: jax.Array,  # (B,) i32 — absolute position of tokens[b, 0]
+    *,
+    block_tables: Optional[jax.Array] = None,  # (B, n_pg) => paged cache
+    moe_cf: Optional[float] = None,
+    dtype=jnp.bfloat16,
+):
+    """Score C tokens per slot against live KV caches in ONE forward call —
+    the speculative-decode verification kernel (the multi-token sibling of
+    :func:`prefill_into_slot`, batched over slots with per-row offsets).
+
+    Row ``b``'s tokens occupy absolute positions ``lengths[b] ..
+    lengths[b]+C-1`` of that row's sequence; their K/V are written into the
+    row's cache and ``logits[b, i]`` is the next-token distribution after
+    ``tokens[b, :i+1]`` — so one call verifies k draft tokens *and* scores
+    the bonus token (paper Fig 3c/4c: decode streams every weight through
+    the MDK pipeline anyway, so the extra chunk positions ride the same
+    memory-bound tick like chunked prefill does).
+
+    Rows flagged inactive by ``lengths[b] >= max_seq`` write nothing
+    (the per-row scatter drops out-of-range positions) and return garbage
+    logits that must not be consumed.  The caller commits only an accepted
+    prefix of the written positions by rewinding its length accounting
+    (``SlotCacheManager.rewind`` / ``PagedCacheManager.rewind``); K/V of
+    rejected or padded positions stay masked and are overwritten by later
+    writes at those positions.
+
+    With ``block_tables`` the cache is the paged layout: every row gathers
+    its pages into a contiguous view, the same chunk math runs, and views
+    scatter back (see :func:`_paged_scatter_batch` for why concurrent rows
+    cannot corrupt shared or null pages).  Like paged chunked prefill,
+    the gather/scatter spans each row's full ``max_seq`` view rather than
+    only the pages below ``lengths + C`` — a fixed-shape simplification
+    whose copy traffic scales with ``max_seq``; a scalar-prefetch paged
+    verify kernel bounding it to live pages is the named ROADMAP seam.
+
+    Returns (logits (B, C, V) f32, new_cache).
+    """
+    assert blocks.chunk_supported(cfg), cfg.block_pattern
+    B, C = tokens.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    if block_tables is not None:
+        view = _paged_view_batch(cache, block_tables)
+    else:
+        view = cache  # stacked: the cache batch axis IS the slot axis
+    x, new_view = _chunk_body(params, cfg, tokens, view, positions,
+                              moe_cf, dtype)
+    x = apply_norm(params["final_ln"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = linear(params["lm_head"], x, "lm_head")
+    if block_tables is not None:
+        new_cache = _paged_scatter_batch(cache, new_view, block_tables)
+    else:
+        new_cache = dict(cache)
+        new_cache.update(new_view)
+    return logits.astype(jnp.float32), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -147,6 +147,13 @@ class FIFOAdmission:
         pages it must resurrect from the cached-free pool); it is exposed
         here so alternative admission policies can price differently
         (e.g. over-commit with preemption) without touching the manager.
+
+        The price also covers speculative decoding with no surcharge: the
+        engine caps each tick's draft length so every verify-chunk write
+        stays below ``min(prompt_len + max_new, max_seq)`` tokens, and
+        ``PagedCacheManager.rewind`` returns rejected-draft pages to the
+        reservation — so the worst-case lifetime footprint is the same
+        with or without speculation.
         """
         toks = min(prompt_len + max_new, max_seq)
         total = -(-toks // page_size)

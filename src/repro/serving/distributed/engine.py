@@ -60,7 +60,7 @@ from repro.serving.distributed.sharded_kv import (
     ShardedPageAllocator, ShardedSlotAllocator)
 from repro.serving.distributed.transfer import TransferScheduler
 from repro.serving.engine import (
-    DECODE, PREFILL, Request, latency_stats, submit_request)
+    DECODE, PREFILL, Request, drain_engine, latency_stats, submit_request)
 from repro.serving.quantize import calibrate, quantize_model_params
 
 
@@ -184,6 +184,7 @@ class DistributedServeEngine:
         self.ticks = 0
         self.model_calls = 0
         self.prefill_calls = 0
+        self.stalled = 0  # unfinished requests when run() gave up
         self._pending_decode = None  # (op, logits_dev, decoding mask)
         self._busy_ticks = np.zeros((self.D,), np.int64)
         self.mdk_stats = sched.mdk_stats(cfg)
@@ -403,15 +404,20 @@ class DistributedServeEngine:
             self.ticks += 1
 
     # ------------------------------------------------------------------
-    def run(self, max_ticks: int = 10_000) -> List[Request]:
-        while (
-            self.queue
-            or any(s is not None for s in self.slots)
-            or self._pending_decode is not None
-        ) and self.ticks < max_ticks:
-            self.tick()
-        self.xfer.sync()
-        return self.finished
+    def run(self, max_ticks: int = 10_000, *,
+            on_stall: str = "raise") -> List[Request]:
+        """Drive ticks until drained or ``max_ticks`` loop iterations
+        pass; see :func:`repro.serving.engine.drain_engine` for the stall
+        contract (the transfer log syncs either way)."""
+        try:
+            return drain_engine(
+                self,
+                lambda: (self.queue
+                         or any(s is not None for s in self.slots)
+                         or self._pending_decode is not None),
+                max_ticks, on_stall)
+        finally:
+            self.xfer.sync()
 
     # ------------------------------------------------------------------
     def utilization(self) -> np.ndarray:
@@ -435,6 +441,7 @@ class DistributedServeEngine:
             "ticks": self.ticks,
             "model_calls": self.model_calls,
             "prefill_calls": self.prefill_calls,
+            "stalled": self.stalled,
             "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
             "n_shards": self.D,
             "mean_device_utilization": float(np.mean(self.utilization())),

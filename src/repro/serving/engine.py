@@ -29,6 +29,17 @@ every tick, and *admission work rides along without stalling it*.
     :class:`repro.serving.sampler.SamplingParams`; the engine packs them
     into per-slot arrays and one jitted ``sample_batch`` serves the whole
     heterogeneous batch.
+  * **Speculative decoding** — with ``spec=SpecConfig(...)`` each decode
+    tick proposes up to k draft tokens per slot
+    (:mod:`repro.serving.speculative`: self-drafting n-gram lookup or a
+    small draft model), verifies every slot's draft in ONE chunked
+    forward call (:func:`repro.models.lm.verify_chunk` — the same
+    ride-along economics as chunked prefill: decode streams every weight
+    through the MDK pipeline anyway), and emits 1..k+1 tokens via the
+    distribution-preserving accept/reject rule in
+    ``sampler.spec_accept_batch``.  Greedy streams are token-for-token
+    identical to plain decode; rejected-draft K/V are discarded by
+    ``kv.rewind`` (mask-only on slots, refcounted page release on pages).
   * **Ring-TP** — an optional ``mesh=`` routes the dense matmuls through
     :func:`repro.core.ring.tp_matmul` (the collective-matmul schedule that
     hides synchronisation inside block matmuls).
@@ -61,7 +72,7 @@ from repro.configs.base import ModelConfig
 from repro.core import scheduler as sched
 from repro.models import blocks, lm
 from repro.models.layers import tp_context
-from repro.serving import sampler as samplers
+from repro.serving import sampler as samplers, speculative
 from repro.serving.admission import FIFOAdmission
 from repro.serving.kv_cache import PagedCacheManager, SlotCacheManager
 from repro.serving.quantize import calibrate, quantize_model_params
@@ -96,10 +107,21 @@ class Request:
 def submit_request(engine, prompt, max_new, sampling) -> int:
     """Queue one request — the submit path shared by :class:`ServeEngine`
     and the distributed engine (same validation, rid assignment, and
-    timestamping, so per-request accounting stays comparable)."""
-    assert 0 < len(prompt) < engine.max_seq, (
-        f"prompt ({len(prompt)} tokens) must fit the cache "
-        f"(max_seq={engine.max_seq})")
+    timestamping, so per-request accounting stays comparable).
+
+    Validation raises ``ValueError`` (not ``assert``, which vanishes under
+    ``python -O`` and would let a bad request corrupt slot masks): the
+    prompt must be non-empty and leave room to generate, and ``max_new``
+    must be at least 1 (a request that may not emit anything would still
+    occupy a slot and emit one token before the length check fires)."""
+    if not 0 < len(prompt) < engine.max_seq:
+        raise ValueError(
+            f"prompt ({len(prompt)} tokens) must be non-empty and fit the "
+            f"cache with room to generate (max_seq={engine.max_seq})")
+    if max_new < 1:
+        raise ValueError(
+            f"max_new={max_new}: a request must generate at least one "
+            "token")
     rid = engine._next_rid
     engine._next_rid += 1
     engine.queue.append(
@@ -107,6 +129,34 @@ def submit_request(engine, prompt, max_new, sampling) -> int:
                 sampling=sampling or samplers.GREEDY,
                 t_submit=time.monotonic()))
     return rid
+
+
+def drain_engine(engine, pending, max_ticks: int,
+                 on_stall: str) -> List[Request]:
+    """Shared run loop for :class:`ServeEngine` and the distributed
+    engine: tick while ``pending()`` and the budget lasts (counting loop
+    iterations, not engine ticks, so a no-op tick cannot spin forever),
+    then surface leftovers.  Exhausting ``max_ticks`` with requests still
+    queued or in flight raises (``finished`` would silently read as the
+    complete result otherwise); ``on_stall="ignore"`` returns the partial
+    list instead, with the leftover count in ``stats()["stalled"]``."""
+    if on_stall not in ("raise", "ignore"):
+        raise ValueError(
+            f"on_stall={on_stall!r} must be 'raise' or 'ignore'")
+    spent = 0
+    while pending() and spent < max_ticks:
+        engine.tick()
+        spent += 1
+    engine.stalled = len(engine.queue) + sum(
+        s is not None for s in engine.slots)
+    if engine.stalled and on_stall == "raise":
+        raise RuntimeError(
+            f"engine stalled: max_ticks={max_ticks} exhausted with "
+            f"{len(engine.queue)} queued and "
+            f"{engine.stalled - len(engine.queue)} in-flight requests "
+            "(the finished list is partial; raise max_ticks or pass "
+            "on_stall='ignore')")
+    return engine.finished
 
 
 def latency_stats(finished: List[Request]) -> Dict[str, float]:
@@ -146,6 +196,7 @@ class ServeEngine:
         admission: Optional[FIFOAdmission] = None,
         mesh: Optional[jax.sharding.Mesh] = None,
         act_dtype=None,
+        spec: Optional[speculative.SpecConfig] = None,
     ):
         self.cfg = cfg
         self.max_seq = max_seq
@@ -243,13 +294,42 @@ class ServeEngine:
                                      valid=valid, dtype=self.act_dtype)))
         self._sample = jax.jit(samplers.sample_batch)
 
+        self.spec = spec
+        self.proposer: Optional[speculative.DraftProposer] = None
+        if spec is not None:
+            if self.prefill_mode != "chunked":
+                raise ValueError(
+                    "speculative decoding needs the chunked path "
+                    "(verification is a chunked forward call); this "
+                    f"config prefills via {self.prefill_mode!r}")
+            if spec.k < 1:
+                raise ValueError(f"SpecConfig.k={spec.k} must be >= 1")
+            self.proposer = speculative.make_proposer(
+                spec, batch_slots, max_seq, chunk_size=self.chunk_size,
+                dtype=self.act_dtype)
+            if self.paged:
+                self._verify = jax.jit(_traced(
+                    lambda p, toks, cache, lens, bts: lm.verify_chunk(
+                        p, cfg, toks, cache, lens, block_tables=bts,
+                        dtype=self.act_dtype)))
+            else:
+                self._verify = jax.jit(_traced(
+                    lambda p, toks, cache, lens: lm.verify_chunk(
+                        p, cfg, toks, cache, lens, dtype=self.act_dtype)))
+            self._accept = jax.jit(samplers.spec_accept_batch)
+
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: deque = deque()
         self.finished: List[Request] = []
         self._next_rid = 0
         self.ticks = 0
-        self.model_calls = 0  # decode steps + prefill chunks
+        self.model_calls = 0  # decode steps + prefill chunks + verifies
         self.prefill_calls = 0
+        self.stalled = 0  # unfinished requests when run() gave up
+        self.spec_ticks = 0  # verify calls issued
+        self.spec_proposed = 0  # draft tokens submitted for verification
+        self.spec_accepted = 0  # draft tokens accepted
+        self.spec_emitted = 0  # tokens emitted off verify calls
         self.mdk_stats = sched.mdk_stats(cfg)
 
     # ------------------------------------------------------------------
@@ -292,6 +372,8 @@ class ServeEngine:
             # their K/V are already in the pool, rope'd at these positions
             req.filled = shared_tokens
             self.slots[slot] = req
+            if self.proposer is not None:
+                self.proposer.alloc(slot, req.prompt, shared_tokens)
             self._temp[slot] = req.sampling.temperature
             self._topk[slot] = req.sampling.top_k
             self._topp[slot] = req.sampling.top_p
@@ -312,6 +394,8 @@ class ServeEngine:
             self.finished.append(req)
             self.slots[req.slot] = None
             self.kv.free(req.slot)
+            if self.proposer is not None:
+                self.proposer.free(req.slot)
             self.cur_tok[req.slot, 0] = 0
         else:
             req.state = DECODE
@@ -373,6 +457,8 @@ class ServeEngine:
             self.prefill_calls += 1
             req.filled += ch.n
             self.kv.advance(ch.slot, ch.n)
+            if self.proposer is not None:
+                self.proposer.prefill_chunk(ch.slot, chunk, ch.start, ch.n)
             if req.filled == len(req.prompt):
                 # first generated token comes straight off the prefill
                 # logits — this is the TTFT the chunked path buys
@@ -383,26 +469,108 @@ class ServeEngine:
         # -- one batched decode step over all decoding slots --
         decoding = [r is not None and r.state == DECODE for r in self.slots]
         if any(decoding):
-            if self.paged:
-                self.kv.ensure_decode_room(decoding)
-                logits, self.kv.cache = self._step(
-                    self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                    self.kv.lengths, jnp.asarray(self.kv.block_tables))
+            if self.spec is not None:
+                self._spec_decode(np.asarray(decoding))
             else:
-                logits, self.kv.cache = self._step(
-                    self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                    self.kv.lengths)
-            self.model_calls += 1
-            sampled = self._sample_rows(logits)
-            self.kv.advance_mask(np.asarray(decoding))
-            now = time.monotonic()
-            for b, req in enumerate(self.slots):
-                if req is not None and req.state == DECODE and decoding[b]:
-                    self._emit(req, int(sampled[b]), now)
+                self._plain_decode(decoding)
             did = True
 
         if did:
             self.ticks += 1
+
+    def _plain_decode(self, decoding: List[bool]) -> None:
+        """One single-token batched decode step (the non-speculative path)."""
+        if self.paged:
+            self.kv.ensure_decode_room(decoding)
+            logits, self.kv.cache = self._step(
+                self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                self.kv.lengths, jnp.asarray(self.kv.block_tables))
+        else:
+            logits, self.kv.cache = self._step(
+                self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                self.kv.lengths)
+        self.model_calls += 1
+        sampled = self._sample_rows(logits)
+        self.kv.advance_mask(np.asarray(decoding))
+        now = time.monotonic()
+        for b, req in enumerate(self.slots):
+            if req is not None and req.state == DECODE and decoding[b]:
+                self._emit(req, int(sampled[b]), now)
+
+    def _spec_decode(self, decoding: np.ndarray) -> None:
+        """One speculative decode tick: propose per slot, verify every
+        slot's draft in ONE chunked forward call, emit 1..k+1 tokens.
+
+        Per decoding slot with cache length L the verify chunk holds
+        ``[cur_tok, d_1..d_c]`` at absolute positions ``L..L+c`` (c is the
+        slot's draft count, capped by its remaining token budget and the
+        cache ceiling so writes never pass the admission-time page
+        reservation).  ``sampler.spec_accept_batch`` accepts a prefix of
+        the drafts and supplies the bonus/corrective token; the accepted
+        tokens commit via ``kv.rewind(slot, L+m+1)``, which also releases
+        (paged) pages grown for rejected positions — their K/V stay
+        masked and are overwritten by the next write at those positions.
+        """
+        B, k = self.B, self.spec.k
+        lengths_h = np.asarray(self.kv.lengths).copy()
+        caps = np.zeros((B,), np.int32)
+        for b, req in enumerate(self.slots):
+            if decoding[b]:
+                # cap so every written position stays below both the cache
+                # ceiling and prompt+max_new (the reservation bound)
+                caps[b] = max(0, min(k, req.max_new - len(req.out),
+                                     self.max_seq - 1 - int(lengths_h[b])))
+        draft, counts = self.proposer.propose(
+            self.slots, self.cur_tok, lengths_h, decoding, caps)
+        if not counts.any():
+            # no slot proposed anything: a (k+1)-wide verify would pay
+            # ~(k+1)x a decode step's position-axis compute (and, paged,
+            # the full view gather/scatter) for zero speculative gain.
+            # Accepting zero drafts IS plain sampling from position 0, so
+            # the plain step emits the identical token stream.
+            self._plain_decode(list(decoding))
+            return
+        toks = np.zeros((B, k + 1), np.int32)
+        toks[:, 0] = self.cur_tok[:, 0]
+        toks[:, 1:] = draft
+        # inactive rows park at max_seq: their writes drop, logits unused
+        vlen = np.where(decoding, lengths_h, self.max_seq).astype(np.int32)
+        if self.paged:
+            self.kv.ensure_decode_room(decoding, counts + 1)
+            logits, self.kv.cache = self._verify(
+                self.params, jnp.asarray(toks), self.kv.cache,
+                jnp.asarray(vlen), jnp.asarray(self.kv.block_tables))
+        else:
+            logits, self.kv.cache = self._verify(
+                self.params, jnp.asarray(toks), self.kv.cache,
+                jnp.asarray(vlen))
+        self.model_calls += 1
+        self.spec_ticks += 1
+        self.rng, sub = jax.random.split(self.rng)
+        n_acc, next_tok = jax.device_get(self._accept(
+            logits, jnp.asarray(draft), jnp.asarray(counts), sub,
+            jnp.asarray(self._temp), jnp.asarray(self._topk),
+            jnp.asarray(self._topp)))
+        now = time.monotonic()
+        for b in range(B):
+            req = self.slots[b]
+            if not decoding[b] or req is None:
+                continue
+            m = int(n_acc[b])
+            self.spec_proposed += int(counts[b])
+            self.spec_accepted += m
+            L = int(lengths_h[b])
+            for tok in list(draft[b, :m]) + [int(next_tok[b])]:
+                self._emit(req, int(tok), now)
+                self.spec_emitted += 1
+                if req.done:
+                    break
+            else:
+                # request lives on: commit cur_tok + the m accepted drafts
+                # (positions L..L+m); the bonus token becomes cur_tok via
+                # _emit and is written next tick
+                self.kv.rewind(b, L + m + 1)
+                self.proposer.commit(b, req.prompt + req.out, L + m + 1)
 
     # ------------------------------------------------------------------
     def _tick_replay(self) -> None:
@@ -442,22 +610,43 @@ class ServeEngine:
         self.ticks += 1
 
     # ------------------------------------------------------------------
-    def run(self, max_ticks: int = 10_000) -> List[Request]:
-        while (self.queue or any(s is not None for s in self.slots)) and (
-            self.ticks < max_ticks
-        ):
-            self.tick()
-        return self.finished
+    def run(self, max_ticks: int = 10_000, *,
+            on_stall: str = "raise") -> List[Request]:
+        """Drive ticks until drained or ``max_ticks`` loop iterations
+        pass; see :func:`drain_engine` for the stall contract."""
+        return drain_engine(
+            self,
+            lambda: self.queue or any(s is not None for s in self.slots),
+            max_ticks, on_stall)
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         out = latency_stats(self.finished)
+        emitted = sum(len(r.out) for r in self.finished) + sum(
+            len(r.out) for r in self.slots if r is not None)
         out.update({
             "ticks": self.ticks,
             "model_calls": self.model_calls,
             "prefill_calls": self.prefill_calls,
+            "stalled": self.stalled,
+            "tokens_per_model_call": emitted / max(self.model_calls, 1),
             "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
         })
+        if self.spec is not None:
+            out.update({
+                "spec_ticks": self.spec_ticks,
+                "spec_proposed": self.spec_proposed,
+                "spec_accepted": self.spec_accepted,
+                "spec_emitted": self.spec_emitted,
+                "acceptance_rate": (
+                    self.spec_accepted / max(self.spec_proposed, 1)),
+                "tokens_per_verify_call": (
+                    self.spec_emitted / max(self.spec_ticks, 1)),
+                # draft-model forwards (0 for the free n-gram proposer):
+                # the cost side tokens_per_model_call excludes, so a
+                # proposer="model" benchmark can't read as a free win
+                "draft_calls": getattr(self.proposer, "draft_calls", 0),
+            })
         if self.paged:
             out.update(self.kv.stats())
         return out

@@ -121,6 +121,23 @@ class SlotCacheManager:
         """Advance every masked slot by one token (one decode tick)."""
         self.lengths += np.asarray(mask, np.int32)
 
+    def rewind(self, slot: int, new_len: int) -> None:
+        """Set a slot's valid length after a multi-token (speculative)
+        write — mask-only: lengths gate attention, so K/V of rejected
+        draft positions above ``new_len`` are never read and the next
+        write at those positions overwrites them.  ``new_len`` may exceed
+        the current length (the verify call writes before the engine
+        commits the accepted prefix).  Violations raise ``ValueError``
+        (not ``assert``: the guard is a mask-corruption barrier and must
+        survive ``python -O``)."""
+        if slot not in self._used:
+            raise ValueError(f"rewind of unallocated slot {slot}")
+        if not 0 <= new_len <= self.max_seq:
+            raise ValueError(
+                f"rewind of slot {slot} to {new_len} outside the cache "
+                f"(max_seq={self.max_seq})")
+        self.lengths[slot] = new_len
+
     def length_of(self, slot: int) -> int:
         return int(self.lengths[slot])
 
@@ -204,6 +221,7 @@ class PagedCacheManager:
         self._refcount = np.zeros((n_pages,), np.int64)
         self._slot_pages: Dict[int, List[int]] = {}
         self._reserved: Dict[int, int] = {}  # slot -> pages still owed
+        self._min_len: Dict[int, int] = {}  # slot -> rewind floor (prompt)
         # prefix sharing: chained hash of full prompt pages -> page id;
         # a page is only handed out once its owner's prefill covered it.
         # The hash is a lookup accelerator, not the identity: _page_meta
@@ -411,6 +429,8 @@ class PagedCacheManager:
                     pending.append((pid, (i + 1) * ps))
         self._slot_pages[slot] = pages
         self._reserved[slot] = total_pages - prompt_pages
+        self._min_len[slot] = plen  # rewind floor: prompt pages may be
+        # prefix-shared/registered; rejected drafts always sit above them
         self._pending_ready[slot] = pending
         row = np.zeros((self.pages_per_seq,), np.int32)
         row[:len(pages)] = pages
@@ -426,6 +446,7 @@ class PagedCacheManager:
         for pid in self._slot_pages.pop(slot):
             self._release_page(pid)
         self._reserved.pop(slot, None)
+        self._min_len.pop(slot, None)
         self._pending_ready.pop(slot, None)
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
@@ -454,16 +475,75 @@ class PagedCacheManager:
     def length_of(self, slot: int) -> int:
         return int(self.lengths[slot])
 
-    def ensure_decode_room(self, mask) -> None:
-        """Grow block tables so every masked slot can take one more token.
-        Backed by the admission-time reservation, so the pop cannot fail."""
+    def rewind(self, slot: int, new_len: int) -> None:
+        """Set a slot's valid length after a multi-token (speculative)
+        write, releasing pages wholly past it.
+
+        The speculative engine writes ``cur_tok`` plus every draft token
+        in one verify call, then commits only the accepted prefix:
+        ``new_len`` may exceed the current length (committing the
+        accepted tokens) while sitting below the pages
+        :meth:`ensure_decode_room` grew for the full draft.  Pages whose
+        first position is at or past ``new_len`` return to the free pool
+        and their count returns to the slot's decode-growth reservation,
+        preserving the reservation invariant (pages held + pages reserved
+        = worst-case lifetime pages) so a later speculation can grow
+        again.  Released pages are always uniquely-owned decode tail
+        pages: rewinding below the prompt is refused — prompt pages may
+        be prefix-shared or registered in the prefix map (releasing them
+        would tear sharing chains another request is linked to), and
+        rejected draft tokens only ever sit above the prompt.  Violations
+        raise (never ``assert``: these guards are the barrier between a
+        buggy caller and silently corrupting *another* request's shared
+        pages, and must survive ``python -O``).
+        """
+        if slot not in self._used_slots:
+            raise ValueError(f"rewind of unallocated slot {slot}")
+        if not self._min_len.get(slot, 0) <= new_len <= self.max_seq:
+            raise ValueError(
+                f"rewind of slot {slot} to {new_len} outside "
+                f"[prompt={self._min_len.get(slot, 0)}, "
+                f"max_seq={self.max_seq}]: prompt pages may be "
+                "prefix-shared (releasing them would tear another "
+                "request's sharing chain)")
+        keep = self.pages_for(new_len)
+        pages = self._slot_pages[slot]
+        if len(pages) < keep:
+            raise RuntimeError(
+                f"rewind of slot {slot} to {new_len} beyond its "
+                f"{len(pages)} allocated pages")
+        while len(pages) > keep:
+            pid = pages.pop()
+            if self._refcount[pid] != 1:
+                raise RuntimeError(
+                    f"rewind reached shared page {pid} of slot {slot} "
+                    f"(refcount {int(self._refcount[pid])})")
+            self._release_page(pid)
+            self._reserved[slot] = self._reserved.get(slot, 0) + 1
+            self.block_tables[slot, len(pages)] = 0
+        self.lengths[slot] = new_len
+
+    def ensure_decode_room(self, mask, n=1) -> None:
+        """Grow block tables so every masked slot can take ``n`` more
+        tokens (scalar or per-slot array; the speculative path grows by
+        each slot's draft length + 1).  Backed by the admission-time
+        reservation, so the pop cannot fail: the engine caps writes at
+        ``min(prompt+max_new, max_seq)`` tokens — draft positions beyond
+        a request's remaining budget are never scheduled."""
+        ns = np.broadcast_to(np.asarray(n, np.int64), (self.B,))
         for slot, active in enumerate(mask):
             if not active:
                 continue
             pages = self._slot_pages[slot]
-            while len(pages) * self.page_size < int(self.lengths[slot]) + 1:
-                assert self._reserved.get(slot, 0) > 0, (
-                    "page growth past the admission reservation", slot)
+            need = int(self.lengths[slot]) + int(ns[slot])
+            while len(pages) * self.page_size < need:
+                if self._reserved.get(slot, 0) <= 0:
+                    # raise, don't assert: under python -O a silent claim
+                    # here would eat pages other requests' reservations
+                    # guarantee, failing them far from the actual bug
+                    raise RuntimeError(
+                        f"slot {slot} page growth to {need} tokens "
+                        "exceeds its admission-time reservation")
                 pid = self._claim_page()
                 self._reserved[slot] -= 1
                 self.block_tables[slot, len(pages)] = pid

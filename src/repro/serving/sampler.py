@@ -15,6 +15,7 @@ disables the top-k filter; ``top_p >= 1`` disables the nucleus filter.
 from __future__ import annotations
 
 import dataclasses
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +58,45 @@ class SamplingParams:
 GREEDY = SamplingParams()
 
 
+def _filter_logits(
+    lg: jax.Array,  # (B, V) f32
+    temp: jax.Array,  # (B,) f32
+    topk: jax.Array,  # (B,) i32
+    topp: jax.Array,  # (B,) f32
+) -> jax.Array:
+    """Temperature + per-row top-k + nucleus filtering, shared by
+    :func:`sample_batch` and :func:`spec_accept_batch`.
+
+    Greedy rows (temp <= 0) are sanitized to temperature 1.0 before the
+    divide — their argmax is taken separately by the callers, and pushing
+    real logits through the 1e-4 floor overflows them to inf, which turns
+    the softmax row into NaNs (crashes under ``jax_debug_nans`` even
+    though a final ``where`` discards the row).
+
+    The nucleus cut keeps tokens by *rank* in the descending-probability
+    order, not by comparing against the cutoff value: a value comparison
+    readmits every token tied with the last kept one, exceeding mass p.
+    """
+    V = lg.shape[-1]
+    safe_temp = jnp.where(temp <= 0.0, 1.0, jnp.maximum(temp, 1e-4))
+    x = lg / safe_temp[:, None]
+    # per-row top-k: threshold at the k-th largest value (k<=0 -> keep all)
+    sorted_desc = -jnp.sort(-x, axis=-1)  # (B, V) descending
+    k = jnp.clip(jnp.where(topk <= 0, V, topk), 1, V)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    x = jnp.where(x >= kth, x, _NEG_INF)
+    # per-row top-p on the filtered distribution: keep the smallest prefix
+    # of descending probs whose cumulative mass reaches p, by rank
+    probs = jax.nn.softmax(x, axis=-1)
+    order = jnp.argsort(-probs, axis=-1)  # descending, index-stable
+    sp = jnp.take_along_axis(probs, order, axis=-1)
+    keep = (jnp.cumsum(sp, axis=-1) - sp) < topp[:, None]
+    keep = keep.at[:, 0].set(True)  # top_p <= 0 still keeps the top token
+    n_keep = jnp.sum(keep.astype(jnp.int32), axis=-1, keepdims=True)
+    ranks = jnp.argsort(order, axis=-1)  # token id -> its descending rank
+    return jnp.where(ranks < n_keep, x, _NEG_INF)
+
+
 def sample_batch(
     logits: jax.Array,  # (B, V)
     rng: jax.Array,
@@ -71,24 +111,78 @@ def sample_batch(
     logit), then a per-row nucleus (top-p) cut, then categorical sampling.
     Returns (B,) i32.
     """
-    V = logits.shape[-1]
     lg = logits.astype(jnp.float32)
     greedy_tok = jnp.argmax(lg, axis=-1)
-
-    x = lg / jnp.maximum(temp, 1e-4)[:, None]
-    # per-row top-k: threshold at the k-th largest value (k<=0 -> keep all)
-    sorted_desc = -jnp.sort(-x, axis=-1)  # (B, V) descending
-    k = jnp.clip(jnp.where(topk <= 0, V, topk), 1, V)
-    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
-    x = jnp.where(x >= kth, x, _NEG_INF)
-    # per-row top-p on the filtered distribution: keep the smallest prefix
-    # of descending probs whose cumulative mass reaches p
-    probs = jax.nn.softmax(x, axis=-1)
-    sp = -jnp.sort(-probs, axis=-1)
-    keep = (jnp.cumsum(sp, axis=-1) - sp) < topp[:, None]
-    keep = keep.at[:, 0].set(True)  # top_p <= 0 still keeps the top token
-    cutoff = jnp.min(jnp.where(keep, sp, jnp.inf), axis=-1, keepdims=True)
-    x = jnp.where(probs >= cutoff, x, _NEG_INF)
-
+    x = _filter_logits(lg, temp, topk, topp)
     tok = jax.random.categorical(rng, x, axis=-1)
     return jnp.where(temp <= 0.0, greedy_tok, tok).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: accept/reject against verified logits
+# ---------------------------------------------------------------------------
+
+
+def spec_accept_batch(
+    logits: jax.Array,  # (B, C, V) verify logits, C >= k + 1
+    draft: jax.Array,  # (B, k) i32 proposed tokens
+    n_draft: jax.Array,  # (B,) i32 valid draft count per row
+    rng: jax.Array,
+    temp: jax.Array,  # (B,) f32
+    topk: jax.Array,  # (B,) i32
+    topp: jax.Array,  # (B,) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Accept/reject deterministically-drafted tokens against the target
+    distribution, preserving it exactly.
+
+    ``logits[b, i]`` is the target's next-token distribution after the
+    row's context plus ``draft[b, :i]`` (position 0 follows the current
+    token) — the per-position logits one ``lm.verify_chunk`` call returns.
+    Draft tokens are a *point-mass* proposal (n-gram lookup, or a greedy
+    draft model), so the Leviathan accept rule reduces to: accept token i
+    with probability ``p_i(d_i)`` under the row's (temperature / top-k /
+    top-p filtered) target distribution ``p_i``; at the first rejection
+    resample from the leftover ``(p - q)^+ / Z`` — which for a point mass
+    is ``p_i`` with ``d_i`` struck out and renormalized.  Marginally every
+    emitted token is distributed exactly as plain per-token sampling.
+
+    Greedy rows (temp <= 0) reduce to the longest draft prefix matching
+    the argmax chain plus the argmax at the first divergence (or the bonus
+    argmax after a full match) — token-for-token the plain greedy stream.
+
+    Returns ``(n_accept (B,) i32, next_tok (B,) i32)``: row b emits
+    ``draft[b, :n_accept[b]]`` followed by ``next_tok[b]`` — 1..k+1 tokens.
+    """
+    B, C, V = logits.shape
+    k = draft.shape[1]
+    lg = logits.astype(jnp.float32)
+    flat = _filter_logits(
+        lg.reshape(B * C, V),
+        jnp.repeat(temp, C), jnp.repeat(topk, C), jnp.repeat(topp, C),
+    ).reshape(B, C, V)
+    probs = jax.nn.softmax(flat, axis=-1)
+    gtok = jnp.argmax(lg, axis=-1)  # (B, C) the greedy chain
+
+    p_draft = jnp.take_along_axis(
+        probs[:, :k], draft[..., None], axis=-1)[..., 0]  # (B, k)
+    r1, r2 = jax.random.split(rng)
+    u = jax.random.uniform(r1, (B, k))
+    greedy_row = (temp <= 0.0)[:, None]
+    ok = jnp.where(greedy_row, draft == gtok[:, :k], u < p_draft)
+    ok = ok & (jnp.arange(k)[None] < n_draft[:, None])
+    n_accept = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=-1), axis=-1)
+
+    # bonus (all accepted) / corrective (first rejection) token: in both
+    # cases the right distribution sits at chunk position n_accept
+    row = jnp.arange(B)
+    p_next = probs[row, n_accept]  # (B, V)
+    rejected = n_accept < n_draft
+    d_rej = draft[row, jnp.minimum(n_accept, k - 1)]
+    strike = rejected[:, None] & (jnp.arange(V)[None] == d_rej[:, None])
+    p_next = jnp.where(strike, 0.0, p_next)
+    p_next = p_next / jnp.maximum(
+        jnp.sum(p_next, axis=-1, keepdims=True), 1e-30)
+    sampled = jax.random.categorical(
+        r2, jnp.log(jnp.maximum(p_next, 1e-30)), axis=-1)
+    next_tok = jnp.where(temp <= 0.0, gtok[row, n_accept], sampled)
+    return n_accept.astype(jnp.int32), next_tok.astype(jnp.int32)

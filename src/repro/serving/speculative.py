@@ -1,0 +1,298 @@
+"""Speculative decoding: draft proposers for the serving engine.
+
+LoopLynx's decode tick is memory-bound weight streaming (paper Fig 3c/4c
+— the MDK temporal-reuse argument): the weights of every stage cross the
+pipeline once per tick regardless of how many token positions ride the
+activations.  Verifying k draft tokens in one chunked forward call
+(:func:`repro.models.lm.verify_chunk`) therefore costs roughly one decode
+tick and can emit up to k+1 tokens — the same ride-along economics that
+justified chunked prefill, applied to decode.
+
+The engine side lives in ``serving/engine.py`` (``spec=SpecConfig(...)``);
+this module owns the *proposal* side:
+
+  * :class:`NgramProposer` — self-drafting prompt lookup: an n-gram table
+    over each request's own context (prompt + generated tokens) proposes
+    the continuation that followed the most recent earlier occurrence of
+    the current suffix.  Free (no model calls), and very effective on
+    repetitive text — exactly the workloads where decode ticks are pure
+    weight-streaming waste.
+  * :class:`ModelDraft` — a small draft model decodes k tokens greedily
+    against its own contiguous KV cache, mirroring the target engine's
+    slot layout.  Draft prefill rides along with the target's prefill
+    chunks; after verification :meth:`ModelDraft.commit` re-syncs the
+    draft cache to the accepted length (mask-only rewind, plus a one-token
+    teacher-forced chunk when a fully-accepted bonus token left the draft
+    cache one position behind).
+
+Both proposers are *deterministic* (point-mass proposals), so the
+accept/reject rule in :func:`repro.serving.sampler.spec_accept_batch`
+preserves the target sampling distribution exactly — greedy requests
+reduce to longest-prefix matching and stay token-for-token identical to
+plain decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, lm
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decode policy for :class:`repro.serving.engine.
+    ServeEngine` (``spec=SpecConfig(...)``).
+
+    ``k`` is the maximum draft length per tick (the engine emits 1..k+1
+    tokens per verify call).  ``proposer`` picks the draft source:
+    ``"ngram"`` (default, free self-drafting) or ``"model"`` (requires
+    ``draft_cfg``/``draft_params`` — a small chunk-capable model)."""
+
+    k: int = 4
+    proposer: str = "ngram"  # "ngram" | "model"
+    ngram_max: int = 3  # longest suffix n-gram to look up
+    ngram_min: int = 1
+    draft_cfg: Optional[ModelConfig] = None
+    draft_params: Any = None
+
+
+class DraftProposer:
+    """Interface the engine drives.  ``propose`` is batched over slots;
+    the lifecycle hooks mirror the target engine's slot lifecycle so
+    stateful proposers (the draft model's KV cache, the n-gram tables)
+    stay in sync with admission, chunked prefill, and retirement."""
+
+    def alloc(self, slot: int, prompt: List[int], filled: int) -> None:
+        """A request was admitted to ``slot``; ``filled`` prompt tokens
+        are already covered (prefix-sharing hit) and will not be
+        prefilled."""
+
+    def prefill_chunk(self, slot: int, chunk: np.ndarray, offset: int,
+                      n: int) -> None:
+        """The engine prefilled ``n`` prompt tokens (``chunk[:n]``) into
+        ``slot`` at absolute ``offset``."""
+
+    def propose(
+        self,
+        slots,  # List[Optional[Request]] — the engine's slot table
+        cur_tok: np.ndarray,  # (B, 1) last emitted (uncached) token
+        lengths: np.ndarray,  # (B,) target cache lengths
+        active: np.ndarray,  # (B,) bool — slots decoding this tick
+        caps: np.ndarray,  # (B,) per-slot draft-length cap (<= k)
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Return ``(draft (B, k) i32, counts (B,) i32)`` with
+        ``counts[b] <= caps[b]`` valid tokens per active row."""
+        raise NotImplementedError
+
+    def commit(self, slot: int, context: List[int], new_len: int) -> None:
+        """Verification committed ``new_len`` cache positions for
+        ``slot``; ``context[p]`` is the token at position ``p``."""
+
+    def free(self, slot: int) -> None:
+        """The request in ``slot`` retired."""
+
+
+class NgramProposer(DraftProposer):
+    """Self-drafting prompt lookup (the n-gram table flavour of
+    speculative decoding: no draft model, no extra model calls).
+
+    Per slot, a table maps every ``n``-gram (``ngram_min <= n <=
+    ngram_max``) of the request's context to the positions right after
+    its occurrences.  ``propose`` looks up the context's current suffix,
+    longest n first, and drafts the continuation of the most recent
+    *earlier* occurrence.  The table extends incrementally as the context
+    grows (each token indexes O(ngram_max) entries once); rejected draft
+    tokens never enter the context, so nothing is ever un-indexed."""
+
+    def __init__(self, k: int, n_max: int = 3, n_min: int = 1):
+        assert 1 <= n_min <= n_max
+        self.k = k
+        self.n_max = n_max
+        self.n_min = n_min
+        # slot -> [indexed prefix length, {ngram: [continuation starts]}]
+        self._tables: Dict[int, list] = {}
+
+    def alloc(self, slot, prompt, filled):
+        self._tables[slot] = [0, {}]
+
+    def free(self, slot):
+        self._tables.pop(slot, None)
+
+    def _extend(self, slot: int, ctx: List[int]) -> Dict:
+        state = self._tables[slot]
+        done, table = state
+        for end in range(done + 1, len(ctx) + 1):
+            for n in range(self.n_min, min(self.n_max, end) + 1):
+                table.setdefault(tuple(ctx[end - n:end]), []).append(end)
+        state[0] = len(ctx)
+        return table
+
+    def _lookup(self, table: Dict, ctx: List[int], cap: int) -> List[int]:
+        L = len(ctx)
+        for n in range(min(self.n_max, L), self.n_min - 1, -1):
+            occs = table.get(tuple(ctx[L - n:]))
+            if not occs:
+                continue
+            # most recent occurrence with a continuation (the suffix
+            # itself indexes continuation start == L: nothing follows yet)
+            for start in reversed(occs):
+                if start < L:
+                    return ctx[start:start + cap]
+        return []
+
+    def propose(self, slots, cur_tok, lengths, active, caps):
+        B = len(slots)
+        draft = np.zeros((B, self.k), np.int32)
+        counts = np.zeros((B,), np.int32)
+        for b, req in enumerate(slots):
+            if not active[b] or caps[b] <= 0 or req is None:
+                continue
+            ctx = req.prompt + req.out  # out[-1] == cur_tok[b]
+            table = self._extend(b, ctx)
+            toks = self._lookup(table, ctx, int(caps[b]))
+            counts[b] = len(toks)
+            draft[b, :len(toks)] = toks
+        return draft, counts
+
+
+class ModelDraft(DraftProposer):
+    """Small-model draft: k batched greedy decode steps per tick against
+    the draft model's own contiguous KV cache (one row per engine slot).
+
+    The draft cache mirrors the target slot-for-slot: admission resets the
+    row, target prefill chunks replay through the draft model (plus a
+    catch-up prefill for prefix-shared tokens the target never prefills),
+    and :meth:`commit` re-syncs the row to the verified length.  During
+    ``propose``, rows past their per-slot cap (and non-decoding rows)
+    freeze: they rewrite their last token at a fixed position, which is
+    either above the committed mask or rewritten by the next real write,
+    so one fixed-shape batched call serves ragged per-slot draft budgets.
+    The draft decodes greedily regardless of the request's sampling params
+    — a deterministic proposal, which is what keeps the accept/reject rule
+    distribution-preserving."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        batch_slots: int,
+        max_seq: int,
+        k: int,
+        *,
+        chunk_size: int = 32,
+        dtype=jnp.bfloat16,
+    ):
+        assert blocks.chunk_supported(cfg), (
+            "the draft model must support chunked prefill",
+            cfg.block_pattern)
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.k = k
+        self.chunk_size = min(chunk_size, max_seq)
+        self.cache = lm.init_cache(cfg, batch_slots, max_seq, dtype=dtype)
+        self.lengths = np.zeros((batch_slots,), np.int32)  # clean fill
+        self.draft_calls = 0  # draft model invocations (decode + prefill)
+        self._step = jax.jit(
+            lambda p, tok, cache, lens: lm.decode_step(
+                p, cfg, tok, cache, lens, dtype=dtype))
+        self._prefill = jax.jit(
+            lambda p, toks, cache, slot, offset, valid:
+            lm.prefill_into_slot(p, cfg, toks, cache, slot, offset,
+                                 valid=valid, dtype=dtype))
+
+    def alloc(self, slot, prompt, filled):
+        self.lengths[slot] = 0
+        if filled:
+            # prefix-sharing hit: the target starts prefill past the
+            # shared pages, but the draft pool holds nothing for them —
+            # replay the covered prompt tokens through the draft model
+            self._force(slot, prompt[:filled], 0)
+
+    def prefill_chunk(self, slot, chunk, offset, n):
+        _, self.cache = self._prefill(
+            self.params, jnp.asarray(chunk, jnp.int32), self.cache, slot,
+            offset, n)
+        self.draft_calls += 1
+        self.lengths[slot] = offset + n
+
+    def _force(self, slot: int, tokens: List[int], offset: int) -> None:
+        """Teacher-force ``tokens`` into a draft row at ``offset``."""
+        C = self.chunk_size
+        for start in range(0, len(tokens), C):
+            n = min(C, len(tokens) - start)
+            chunk = np.zeros((C,), np.int32)
+            chunk[:n] = tokens[start:start + n]
+            self.prefill_chunk(slot, chunk, offset + start, n)
+
+    def propose(self, slots, cur_tok, lengths, active, caps):
+        B, k = self.B, self.k
+        draft = np.zeros((B, k), np.int32)
+        counts = np.where(active, np.maximum(caps, 0), 0).astype(np.int32)
+        # positions: active rows write at the target's length (the draft
+        # cache is committed to the same length); frozen/inactive rows
+        # rewrite a masked position (see class docstring)
+        pos = np.where(active, lengths, self.lengths).astype(np.int32)
+        pos = np.minimum(pos, self.max_seq - 1)
+        toks = np.array(cur_tok, np.int32).reshape(B, 1).copy()
+        for j in range(k):
+            logits, self.cache = self._step(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(pos))
+            self.draft_calls += 1
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            live = active & (j < counts)
+            draft[live, j] = nxt[live]
+            # advance and feed only rows still under their cap; frozen
+            # rows keep (token, position) so the repeated write is the
+            # same token at the same — correct or masked — position
+            adv = active & (j + 1 < np.minimum(counts + 1, k))
+            pos = np.minimum(pos + adv.astype(np.int32), self.max_seq - 1)
+            toks[adv, 0] = nxt[adv]
+        # clean fill: positions L..L+min(cap, k-1) now hold real tokens
+        upd = np.asarray(active, bool)
+        self.lengths[upd] = (lengths[upd]
+                             + np.minimum(counts[upd] + 1, k)).astype(
+                                 np.int32)
+        return draft, counts
+
+    def commit(self, slot, context, new_len):
+        fill = int(self.lengths[slot])
+        if new_len > fill:
+            # full acceptance of a k-token draft: the bonus position's
+            # token (the last draft token) was generated but never
+            # written — teacher-force the gap (at most one token)
+            self._force(slot, context[fill:new_len], fill)
+        self.lengths[slot] = new_len
+
+    def free(self, slot):
+        self.lengths[slot] = 0
+
+
+def make_proposer(
+    spec: SpecConfig,
+    batch_slots: int,
+    max_seq: int,
+    *,
+    chunk_size: int = 32,
+    dtype=jnp.bfloat16,
+) -> DraftProposer:
+    if spec.proposer == "ngram":
+        return NgramProposer(spec.k, n_max=spec.ngram_max,
+                             n_min=spec.ngram_min)
+    if spec.proposer == "model":
+        if spec.draft_cfg is None or spec.draft_params is None:
+            raise ValueError(
+                "proposer='model' needs SpecConfig.draft_cfg and "
+                ".draft_params")
+        return ModelDraft(spec.draft_cfg, spec.draft_params, batch_slots,
+                          max_seq, spec.k, chunk_size=chunk_size,
+                          dtype=dtype)
+    raise ValueError(f"unknown proposer {spec.proposer!r}")

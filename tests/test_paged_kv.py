@@ -384,7 +384,8 @@ def test_prefill_overrun_raises_not_corrupts(gpt2_setup, layout):
 def test_submit_rejects_oversized_prompt(gpt2_setup):
     cfg, params = gpt2_setup
     eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, eos_id=-1)
-    with pytest.raises(AssertionError):
+    # ValueError, not assert: validation must survive ``python -O``
+    with pytest.raises(ValueError, match="fit the cache"):
         eng.submit(list(range(1, 40)), max_new=2)
 
 

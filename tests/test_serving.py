@@ -111,6 +111,72 @@ def test_sample_batch_degenerate_params():
         assert tok.tolist() == [2]
 
 
+def test_submit_validation(gpt2_setup):
+    """submit raises ValueError (not a strippable assert) on an empty
+    prompt, a prompt that cannot fit, and a zero-token budget."""
+    cfg, params = gpt2_setup
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=64, eos_id=-1)
+    with pytest.raises(ValueError, match="fit the cache"):
+        eng.submit([], max_new=4)
+    with pytest.raises(ValueError, match="fit the cache"):
+        eng.submit(list(range(1, 70)), max_new=4)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit([1, 2, 3], max_new=0)
+    assert not eng.queue  # nothing was enqueued
+
+
+def test_run_surfaces_stall(gpt2_setup):
+    """Exhausting max_ticks with work pending must not silently return a
+    partial finished list: raise by default, surface the leftover count
+    in stats() under on_stall='ignore'."""
+    cfg, params = gpt2_setup
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=64, eos_id=-1)
+    for _ in range(3):
+        eng.submit([5, 6, 7], max_new=8)
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.run(max_ticks=2)
+    with pytest.raises(ValueError, match="on_stall"):
+        eng.run(max_ticks=2, on_stall="warn")  # no silent third mode
+    partial = eng.run(max_ticks=2, on_stall="ignore")
+    assert len(partial) < 3
+    assert eng.stats()["stalled"] == 3 - len(partial)
+    done = eng.run()  # finish the stream; the stall flag clears
+    assert len(done) == 3
+    assert eng.stats()["stalled"] == 0
+
+
+def test_sample_batch_greedy_rows_no_nan():
+    """Greedy rows (temp<=0) must not push real logits through the 1e-4
+    temperature floor: that overflows to inf and NaNs the softmax row
+    (only masked by the final where — crashes under jax_debug_nans)."""
+    logits = jnp.asarray([[1e35, 0.0, -5.0, 2.0], [0.0, 3.0, 1.0, -1.0]])
+    try:
+        jax.config.update("jax_debug_nans", True)
+        tok = sampler.sample_batch(
+            logits, jax.random.PRNGKey(0),
+            jnp.asarray([0.0, 1.0], jnp.float32),
+            jnp.asarray([0, 0], jnp.int32),
+            jnp.asarray([1.0, 1.0], jnp.float32))
+    finally:
+        jax.config.update("jax_debug_nans", False)
+    assert tok[0] == 0  # greedy row takes the argmax
+
+
+def test_sample_batch_top_p_excludes_boundary_ties():
+    """Tokens tied with the last kept nucleus token must stay excluded:
+    probs (0.4, 0.3, 0.3) at top_p=0.5 keeps exactly two tokens (a value
+    cutoff would readmit the third and overshoot the nucleus mass)."""
+    lp = jnp.log(jnp.asarray([[0.4, 0.3, 0.3]]))
+    seen = set()
+    for seed in range(60):
+        tok = sampler.sample_batch(
+            lp, jax.random.PRNGKey(seed),
+            jnp.asarray([1.0], jnp.float32), jnp.asarray([0], jnp.int32),
+            jnp.asarray([0.5], jnp.float32))
+        seen.add(int(tok[0]))
+    assert seen == {0, 1}
+
+
 def test_chunked_prefill_matches_token_replay(gpt2_setup):
     """prefill_into_slot chunks == teacher-forced decode_step replay:
     identical last logits and identical KV cache content for the slot."""

@@ -1,0 +1,384 @@
+"""Speculative decoding: greedy bit-exactness vs plain decode on both KV
+layouts, the accept/reject sampler (greedy reduction + distribution
+preservation), acceptance accounting, verify_chunk per-position logits,
+and KV rewind invariants (mask-only stacked, refcounted paged release
+under churn without corrupting prefix-sharing chains)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import sampler
+from repro.serving.engine import ServeEngine
+from repro.serving.kv_cache import PagedCacheManager, SlotCacheManager
+from repro.serving.speculative import NgramProposer, SpecConfig
+
+
+@pytest.fixture(scope="module")
+def gpt2_setup():
+    cfg = get_config("gpt2-345m").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=64)
+    return cfg, params
+
+
+def _mixed_prompts(vocab, lengths=(3, 17, 5, 26), seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, vocab, int(n)))) for n in lengths]
+
+
+def _run(cfg, params, prompts, *, max_new=10, spec=None, kv_layout="auto",
+         sampling=None, eos_id=-1, **kw):
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=64, eos_id=eos_id,
+                      chunk_size=8, kv_layout=kv_layout, spec=spec, **kw)
+    for p in prompts:
+        eng.submit(p, max_new=max_new, sampling=sampling)
+    done = eng.run()
+    assert len(done) == len(prompts)
+    return eng, {tuple(r.prompt): r.out for r in done}
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: greedy spec == plain decode, both layouts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_layout", ["stacked", "paged"])
+def test_greedy_spec_bitexact_vs_plain(gpt2_setup, kv_layout):
+    """Greedy speculative decoding is token-for-token identical to plain
+    ServeEngine decode — more requests than slots, mixed lengths, so
+    the check covers slot churn and mixed prefill/verify ticks."""
+    cfg, params = gpt2_setup
+    prompts = _mixed_prompts(cfg.vocab_size)
+    _, plain = _run(cfg, params, prompts, kv_layout=kv_layout)
+    eng, spec = _run(cfg, params, prompts, kv_layout=kv_layout,
+                     spec=SpecConfig(k=4))
+    assert spec == plain
+    assert eng.spec_ticks > 0 and eng.spec_emitted > eng.spec_ticks
+
+
+@pytest.mark.parametrize("kv_layout", ["stacked", "paged"])
+def test_model_draft_spec_bitexact_vs_plain(gpt2_setup, kv_layout):
+    """The small-model draft proposer also preserves the greedy stream —
+    with a *different* draft model (low acceptance, heavy rejection
+    traffic exercises rewind) and with the target itself as draft
+    (every draft accepted)."""
+    cfg, params = gpt2_setup
+    draft_params = lm.init(cfg, jax.random.PRNGKey(7), max_seq=64)
+    prompts = _mixed_prompts(cfg.vocab_size, seed=2)
+    _, plain = _run(cfg, params, prompts, kv_layout=kv_layout)
+    for dp in (draft_params, params):
+        eng, spec = _run(cfg, params, prompts, kv_layout=kv_layout,
+                         spec=SpecConfig(k=3, proposer="model",
+                                         draft_cfg=cfg, draft_params=dp))
+        assert spec == plain
+    # the second engine drafted with the target itself: every proposal
+    # must have been accepted, and the draft model's own forward passes
+    # are surfaced next to the target-call metrics
+    s = eng.stats()
+    assert s["acceptance_rate"] == 1.0
+    assert s["draft_calls"] > 0
+
+
+def test_spec_prefix_sharing_paged(gpt2_setup):
+    """Speculation composes with copy-free prefix sharing: shared prompt
+    pages stay linked (never scattered over by verify writes) and the
+    stream is unchanged."""
+    cfg, params = gpt2_setup
+    rng = np.random.default_rng(5)
+    sysp = list(map(int, rng.integers(1, cfg.vocab_size, 32)))
+    prompts = [sysp + list(map(int, rng.integers(1, cfg.vocab_size, 4 + i)))
+               for i in range(5)]
+    _, plain = _run(cfg, params, prompts, kv_layout="paged")
+    eng, spec = _run(cfg, params, prompts, kv_layout="paged",
+                     spec=SpecConfig(k=3))
+    assert spec == plain
+    assert eng.kv.prefix_hit_pages > 0
+
+
+def test_spec_eos_and_budget_stops(gpt2_setup):
+    """EOS inside an accepted draft run stops emission mid-batch, and a
+    max_new budget smaller than the draft length truncates exactly like
+    the plain engine."""
+    cfg, params = gpt2_setup
+    probe = ServeEngine(cfg, params, batch_slots=1, max_seq=64, eos_id=-1,
+                        chunk_size=8)
+    probe.submit([3, 4, 5], max_new=6)
+    eos = probe.run()[0].out[3]
+    for kv_layout in ("stacked", "paged"):
+        for max_new in (2, 20):
+            _, plain = _run(cfg, params, [[3, 4, 5]], max_new=max_new,
+                            kv_layout=kv_layout, eos_id=eos)
+            _, spec = _run(cfg, params, [[3, 4, 5]], max_new=max_new,
+                           kv_layout=kv_layout, eos_id=eos,
+                           spec=SpecConfig(k=4))
+            assert spec == plain, (kv_layout, max_new)
+
+
+def test_spec_sampling_completes_with_accounting(gpt2_setup):
+    """Stochastic per-request sampling through the spec path: requests
+    complete with in-vocab tokens and the acceptance accounting is
+    consistent."""
+    cfg, params = gpt2_setup
+    prompts = _mixed_prompts(cfg.vocab_size, lengths=(9, 6, 12), seed=4)
+    eng, outs = _run(
+        cfg, params, prompts, max_new=8, spec=SpecConfig(k=4), seed=11,
+        sampling=sampler.SamplingParams(temperature=1.2, top_k=50,
+                                        top_p=0.9))
+    assert all(len(o) == 8 for o in outs.values())
+    assert all(0 <= t < cfg.vocab_size for o in outs.values() for t in o)
+    s = eng.stats()
+    assert 0 <= s["spec_accepted"] <= s["spec_proposed"]
+    assert 0.0 <= s["acceptance_rate"] <= 1.0
+    assert s["spec_ticks"] > 0
+    assert s["tokens_per_verify_call"] >= 1.0
+    # every emitted token is an accepted draft or one of (at most) one
+    # bonus/corrective token per slot per verify call
+    assert s["spec_emitted"] <= s["spec_accepted"] + s["spec_ticks"] * eng.B
+
+
+def test_spec_zero_draft_ticks_fall_back_to_plain_decode(gpt2_setup):
+    """A tick where no slot proposes anything must run the 1-token plain
+    decode step (same stream, no (k+1)-wide verify compute)."""
+    cfg, params = gpt2_setup
+
+    class NeverPropose(NgramProposer):
+        def propose(self, slots, cur_tok, lengths, active, caps):
+            B = len(slots)
+            return (np.zeros((B, self.k), np.int32),
+                    np.zeros((B,), np.int32))
+
+    prompts = _mixed_prompts(cfg.vocab_size, lengths=(5, 9), seed=6)
+    _, plain = _run(cfg, params, prompts, max_new=6)
+    eng, outs = _run(cfg, params, prompts, max_new=6, spec=SpecConfig(k=4))
+    eng2 = ServeEngine(cfg, params, batch_slots=2, max_seq=64, eos_id=-1,
+                       chunk_size=8, spec=SpecConfig(k=4))
+    eng2.proposer = NeverPropose(4)
+    for p in prompts:
+        eng2.submit(p, max_new=6)
+    done = {tuple(r.prompt): r.out for r in eng2.run()}
+    assert done == plain == outs
+    assert eng2.spec_ticks == 0  # every decode tick took the plain path
+    assert eng.spec_ticks > 0
+
+
+def test_spec_requires_chunked_path():
+    """Replay-only stacks (no absolute-offset cache) cannot verify via a
+    chunked call: spec= must raise, not silently decode token-by-token."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=32)
+    with pytest.raises(ValueError, match="chunked"):
+        ServeEngine(cfg, params, batch_slots=1, max_seq=32, eos_id=-1,
+                    spec=SpecConfig(k=2))
+
+
+# ---------------------------------------------------------------------------
+# verify_chunk: per-position logits against live caches
+# ---------------------------------------------------------------------------
+
+
+def test_verify_chunk_matches_sequential_decode(gpt2_setup):
+    """One verify_chunk call returns, per row, the same logits sequential
+    decode_step calls produce at those positions, with per-row offsets;
+    inactive rows (offset=max_seq) leave their cache bits untouched."""
+    cfg, params = gpt2_setup
+    rng = np.random.default_rng(0)
+    B, S, C = 3, 64, 4
+    cache = lm.init_cache(cfg, B, S)
+    lengths = jnp.zeros((B,), jnp.int32)
+    ctx = {0: list(map(int, rng.integers(1, cfg.vocab_size, 7))),
+           1: list(map(int, rng.integers(1, cfg.vocab_size, 11)))}
+    for b, toks in ctx.items():
+        for t in toks:
+            tok_b = jnp.zeros((B, 1), jnp.int32).at[b, 0].set(t)
+            _, cache = lm.decode_step(params, cfg, tok_b, cache, lengths)
+            lengths = lengths.at[b].add(1)
+
+    vt = {b: list(map(int, rng.integers(1, cfg.vocab_size, C)))
+          for b in (0, 1)}
+    toks = np.zeros((B, C), np.int32)
+    toks[0], toks[1] = vt[0], vt[1]
+    vlen = jnp.asarray([len(ctx[0]), len(ctx[1]), S], jnp.int32)
+    vlogits, vcache = lm.verify_chunk(params, cfg, jnp.asarray(toks), cache,
+                                      vlen)
+    assert vlogits.shape == (B, C, cfg.vocab_size)
+
+    ref_cache, ref_len = cache, lengths
+    for j in range(C):
+        tok_b = jnp.zeros((B, 1), jnp.int32)
+        for b in (0, 1):
+            tok_b = tok_b.at[b, 0].set(vt[b][j])
+        lg, ref_cache = lm.decode_step(params, cfg, tok_b, ref_cache,
+                                       ref_len)
+        ref_len = ref_len + jnp.asarray([1, 1, 0], jnp.int32)
+        for b in (0, 1):
+            np.testing.assert_allclose(
+                np.asarray(vlogits[b, j]), np.asarray(lg[b], np.float32),
+                rtol=2e-4, atol=2e-4)
+            assert (int(np.argmax(vlogits[b, j]))
+                    == int(np.argmax(lg[b])))
+    # inactive row 2: bit-identical cache
+    for lv, lr in zip(jax.tree_util.tree_leaves(vcache),
+                      jax.tree_util.tree_leaves(cache)):
+        ax = 1 if lv.ndim == 5 else 0
+        assert (np.asarray(jnp.take(lv, 2, axis=ax))
+                == np.asarray(jnp.take(lr, 2, axis=ax))).all()
+
+
+# ---------------------------------------------------------------------------
+# accept/reject sampler
+# ---------------------------------------------------------------------------
+
+
+def test_spec_accept_greedy_reduction():
+    """Greedy rows accept exactly the longest draft prefix matching the
+    argmax chain and emit the argmax at the divergence (or the bonus)."""
+    B, k, V = 3, 3, 5
+    logits = np.zeros((B, k + 1, V), np.float32)
+    for i, t in enumerate([1, 2, 3, 4]):
+        logits[0, i, t] = 5.0  # draft matches 2, diverges at position 2
+    for i, t in enumerate([2, 2, 2, 2]):
+        logits[1, i, t] = 5.0  # full acceptance + bonus
+    for i, t in enumerate([4, 1, 1, 1]):
+        logits[2, i, t] = 5.0  # immediate rejection
+    draft = np.asarray([[1, 2, 0], [2, 2, 2], [0, 1, 1]], np.int32)
+    n_draft = np.asarray([3, 3, 3], np.int32)
+    n_acc, nxt = sampler.spec_accept_batch(
+        jnp.asarray(logits), jnp.asarray(draft), jnp.asarray(n_draft),
+        jax.random.PRNGKey(0), jnp.zeros((B,)), jnp.zeros((B,), jnp.int32),
+        jnp.ones((B,)))
+    assert n_acc.tolist() == [2, 3, 0]
+    assert nxt.tolist() == [3, 2, 4]
+
+
+def test_spec_accept_preserves_target_distribution():
+    """Point-mass accept/reject is marginally exact: over many trials the
+    first emitted token (draft if accepted, else the corrective resample)
+    is distributed as the plain filtered target distribution."""
+    V, trials = 4, 4000
+    p = np.asarray([0.45, 0.3, 0.15, 0.1])
+    logits = np.broadcast_to(np.log(p), (trials, 2, V)).astype(np.float32)
+    draft = np.full((trials, 1), 1, np.int32)  # always propose token 1
+    n_draft = np.ones((trials,), np.int32)
+    n_acc, nxt = sampler.spec_accept_batch(
+        jnp.asarray(logits), jnp.asarray(draft), jnp.asarray(n_draft),
+        jax.random.PRNGKey(123), jnp.ones((trials,)),
+        jnp.zeros((trials,), jnp.int32), jnp.ones((trials,)))
+    n_acc, nxt = np.asarray(n_acc), np.asarray(nxt)
+    first = np.where(n_acc >= 1, 1, nxt)
+    freq = np.bincount(first, minlength=V) / trials
+    np.testing.assert_allclose(freq, p, atol=0.03)
+    # rejected rows never resample the struck draft token
+    assert not np.any(nxt[n_acc == 0] == 1)
+
+
+def test_ngram_proposer_lookup():
+    """The table drafts the continuation of the most recent earlier
+    occurrence of the current suffix, longest n first."""
+
+    class R:
+        prompt = [5, 6, 7, 8, 5, 6, 7, 9, 5, 6]
+        out = [7]
+
+    prop = NgramProposer(k=4, n_max=3, n_min=1)
+    prop.alloc(0, R.prompt, 0)
+    draft, counts = prop.propose(
+        [R()], np.asarray([[7]]), np.asarray([10]),
+        np.asarray([True]), np.asarray([4], np.int32))
+    # suffix (5, 6, 7) last recurred at positions 4..6, followed by 9, 5...
+    assert counts[0] == 4
+    assert draft[0].tolist() == [9, 5, 6, 7]
+    prop.free(0)
+    assert 0 not in prop._tables
+
+
+# ---------------------------------------------------------------------------
+# KV rewind
+# ---------------------------------------------------------------------------
+
+
+def test_slot_manager_rewind_mask_only():
+    cfg = get_config("gpt2-345m").reduced()
+    kv = SlotCacheManager(cfg, 2, 32, with_cache=False)
+    slot = kv.alloc()
+    kv.advance(slot, 10)
+    kv.rewind(slot, 13)  # commit past the advance (spec verify wrote 3+)
+    assert kv.length_of(slot) == 13
+    kv.rewind(slot, 11)  # reject the tail
+    assert kv.length_of(slot) == 11
+    # ValueError, not assert: the guards must survive ``python -O``
+    with pytest.raises(ValueError, match="outside"):
+        kv.rewind(slot, 40)  # beyond the cache
+    kv.free(slot)
+    with pytest.raises(ValueError, match="unallocated"):
+        kv.rewind(slot, 0)  # not allocated
+
+
+def test_paged_rewind_releases_pages_and_keeps_reservation():
+    """rewind returns rejected-draft pages to the pool and their count to
+    the slot's reservation, so (pages held + reserved) stays the
+    worst-case lifetime price and later growth cannot fail."""
+    cfg = get_config("gpt2-345m").reduced()
+    ps = 4
+    kv = PagedCacheManager(cfg, 2, 32, page_size=ps, with_cache=False)
+    prompt = list(range(1, 11))  # 10 tokens -> 3 prompt pages
+    slot, shared = kv.alloc(prompt, max_new=16)  # total 26 -> 7 pages
+    assert shared == 0
+    total = kv.pages_for(len(prompt) + 16)
+    kv.advance(slot, len(prompt))
+
+    def held_plus_reserved():
+        return len(kv._slot_pages[slot]) + kv._reserved[slot]
+
+    assert held_plus_reserved() == total
+    # speculative tick at L=10: grow for cur_tok + 6 drafts, commit 1
+    kv.ensure_decode_room([True, False], 7)
+    assert len(kv._slot_pages[slot]) == kv.pages_for(17)
+    grown = list(kv._slot_pages[slot])
+    kv.rewind(slot, 11)
+    assert kv.length_of(slot) == 11
+    assert len(kv._slot_pages[slot]) == kv.pages_for(11)
+    assert held_plus_reserved() == total
+    released = set(grown) - set(kv._slot_pages[slot])
+    assert released and all(kv.refcount(p) == 0 for p in released)
+    # block-table entries past the kept pages all point at the null page
+    assert (kv.block_tables[slot][kv.pages_for(11):] == 0).all()
+    # grow again (re-speculation) and free: the pool fully drains
+    kv.ensure_decode_room([True, False], 6)
+    kv.free(slot)
+    assert kv.pages_in_use == 0
+
+
+def test_paged_rewind_refuses_prompt_and_preserves_sharing():
+    """Rewinding below the prompt is refused (prompt pages may be
+    prefix-shared); rewinding one sharer's decode tail never disturbs
+    the other sharer's pages or the prefix map, across slot churn."""
+    cfg = get_config("gpt2-345m").reduced()
+    ps = 4
+    kv = PagedCacheManager(cfg, 3, 32, page_size=ps, with_cache=False)
+    prompt = list(range(1, 10))  # 9 tokens: 2 full shareable pages
+    s1, sh1 = kv.alloc(prompt, max_new=8)
+    assert sh1 == 0
+    kv.advance(s1, len(prompt))  # marks the full prompt pages ready
+    s2, sh2 = kv.alloc(prompt, max_new=8)
+    assert sh2 == 2 * ps  # linked both full prompt pages
+    shared_pids = kv._slot_pages[s1][:2]
+    assert all(kv.refcount(p) == 2 for p in shared_pids)
+
+    with pytest.raises(ValueError, match="prefix-shared"):
+        kv.rewind(s2, len(prompt) - 1)
+
+    # sharer 2 speculates and rewinds its decode tail repeatedly
+    for _ in range(3):
+        kv.ensure_decode_room([False, True, False], 5)
+        kv.rewind(s2, len(prompt) + 1)
+    assert all(kv.refcount(p) == 2 for p in shared_pids)
+    kv.free(s2)
+    assert all(kv.refcount(p) == 1 for p in shared_pids)
+    # a third request still links the chain after the churn
+    s3, sh3 = kv.alloc(prompt, max_new=8)
+    assert sh3 == 2 * ps
+    kv.free(s3)
+    kv.free(s1)
+    assert kv.pages_in_use == 0
