@@ -37,6 +37,14 @@ exceed 1.5 (each verify call emits the accepted draft run + one
 bonus/corrective token per slot); acceptance rate comes from
 ``stats()["acceptance_rate"]``.
 
+Part "hybrid" (``--part hybrid``; also runs under ``--part all``) drives
+the mixed-length workload through a rotating-window + recurrent stack
+(recurrentgemma-shaped: rglru, rglru, local_attn) in both engine modes.
+The universal chunked path must generate exactly the replay tokens while
+spending **>= 2x fewer ticks** — the PR-5 acceptance gate: a P-token
+prompt costs ``ceil(P / chunk)`` chunked calls instead of P replay
+ticks, now for window/recurrent kinds too.
+
 Part 3 (``--part dist``; auto-spawned in a forced 4-device subprocess
 when the main process has fewer devices) drives the mixed-length workload
 through ``DistributedServeEngine`` on a 4-shard mesh and reports, next to
@@ -197,6 +205,47 @@ def run_spec_part(args) -> None:
     print("SERVING_BENCH_SPEC_OK")
 
 
+def run_hybrid_part(args) -> None:
+    """Part "hybrid": the windowed/recurrent stack through the universal
+    chunked path vs the seed replay engine (PR-5 tick-reduction gate)."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    max_seq = args.max_seq
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=max_seq)
+    rng = np.random.default_rng(args.seed)
+    prompts = build_workload(rng, args.requests, cfg.vocab_size)
+    print(f"\nhybrid workload: {cfg.block_pattern} stack (window "
+          f"{cfg.window}), {args.requests} requests, prompt lengths "
+          f"{sorted(len(p) for p in prompts)}, {args.max_new} new tokens, "
+          f"{args.slots} slots, chunk={args.chunk}")
+
+    rows = {
+        mode: run_mode(cfg, params, prompts, mode=mode, chunk=args.chunk,
+                       slots=args.slots, max_new=args.max_new,
+                       max_seq=max_seq)
+        for mode in ("replay", "chunked")
+    }
+    print(f"\n{'mode':10s} {'ttft_ms':>9s} {'ticks':>6s} {'calls':>6s} "
+          f"{'prefill':>8s}")
+    for mode, r in rows.items():
+        print(f"{mode:10s} {r['ttft_s']*1e3:9.2f} {r['ticks']:6d} "
+              f"{r['model_calls']:6d} {r['prefill_calls']:8d}")
+
+    expected_prefill = sum(math.ceil(len(p) / args.chunk) for p in prompts)
+    tick_gain = rows["replay"]["ticks"] / max(rows["chunked"]["ticks"], 1)
+    print(f"\nchunked == replay tokens: "
+          f"{rows['chunked']['outs'] == rows['replay']['outs']}")
+    print(f"tick reduction: {tick_gain:.2f}x "
+          f"({rows['replay']['ticks']} -> {rows['chunked']['ticks']})")
+    assert rows["chunked"]["outs"] == rows["replay"]["outs"], (
+        "the universal chunked path changed the hybrid greedy stream")
+    assert rows["chunked"]["prefill_calls"] == expected_prefill, (
+        rows["chunked"]["prefill_calls"], expected_prefill)
+    assert tick_gain >= 2.0, (
+        "chunked prefill must cut >= 2x the ticks replay spends on the "
+        f"windowed/recurrent mixed-length workload (got {tick_gain:.2f}x)")
+    print("SERVING_BENCH_HYBRID_OK")
+
+
 def run_distributed_part(args) -> None:
     """Part 3: the mixed-length workload over a 4-shard device mesh."""
     from repro.serving.distributed import DistributedServeEngine
@@ -301,7 +350,8 @@ def main() -> None:
     ap.add_argument("--sys-len", type=int, default=96)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--spec-k", type=int, default=6)
-    ap.add_argument("--part", choices=("all", "core", "dist", "spec"),
+    ap.add_argument("--part",
+                    choices=("all", "core", "dist", "spec", "hybrid"),
                     default="all")
     args = ap.parse_args()
 
@@ -313,6 +363,9 @@ def main() -> None:
         return
     if args.part == "spec":
         run_spec_part(args)
+        return
+    if args.part == "hybrid":
+        run_hybrid_part(args)
         return
 
     cfg = get_config("gpt2-345m").reduced()
@@ -394,6 +447,10 @@ def main() -> None:
     # -- part "spec": speculative decode vs plain on repetitive text --
     if args.part == "all":
         run_spec_part(args)
+
+    # -- part "hybrid": windowed/recurrent stack, chunked vs replay --
+    if args.part == "all":
+        run_hybrid_part(args)
 
     # -- part 3: distributed engine, transfer overlap vs single device --
     if args.part == "all":

@@ -34,11 +34,19 @@ def main() -> None:
     ap.add_argument("--no-quant", action="store_true")
     ap.add_argument("--chunk-size", type=int, default=32)
     ap.add_argument("--prefill-mode", default="auto",
-                    choices=("auto", "chunked", "replay"))
+                    choices=("auto", "chunked", "replay"),
+                    help="auto == chunked for every block kind (hybrid "
+                         "rotating-window/recurrent stacks included); "
+                         "replay is a deprecated A/B debug mode")
     ap.add_argument("--ckpt-dir", default=None,
                     help="restore params from a launch/train.py checkpoint")
     args = ap.parse_args()
 
+    if args.prefill_mode == "replay":
+        print("[serve] note: --prefill-mode replay is deprecated — the "
+              "chunked path covers every block kind, so auto == chunked; "
+              "replay remains only for A/B debugging against the seed "
+              "one-token-per-tick engine")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -143,6 +143,85 @@ def chunk_attention(
     return linear(p["out"], out, name + ".out"), k_cache, v_cache
 
 
+def chunk_attention_rotating(
+    p: Dict,
+    x: jax.Array,  # (B, C, D) chunk of prompt / draft tokens
+    cfg: ModelConfig,
+    k_cache: jax.Array,  # (B, Hkv, W, hd) rotating-window (ring) cache
+    v_cache: jax.Array,
+    positions: jax.Array,  # (B, C) absolute positions of the chunk tokens
+    limits: jax.Array,  # (B,) absolute position bound: >= limit writes drop
+    *,
+    name: str = "",
+):
+    """Multi-token cached attention for rotating-window (sliding) layers.
+
+    The ring cache (W slots; slot = pos % W) cannot hold both a chunk's
+    new K/V and the predecessor positions they evict, so unlike
+    :func:`chunk_attention` the chunk queries attend over the
+    *concatenation* of the pre-write ring (ring slot ``s`` holds the
+    latest position below the row's chunk start congruent to ``s``) and
+    the chunk's own K/V, under the sliding-window causal mask
+    ``query_pos - W < key_pos <= query_pos``.  Writes then land at
+    ``pos % W`` with last-write-wins semantics: only positions in
+    ``[limit - W, limit)`` — the final window — are written, so an
+    over-window chunk leaves exactly the ring a sequential replay would.
+    ``limits`` bounds each row's real tokens: positions at or past it
+    (prompt padding, parked verify rows) write nothing — a ring write
+    wraps instead of dropping, so unlike the absolute-offset path the
+    bound must be explicit.  Returns (out (B,C,D), k_cache, v_cache).
+    """
+    B, C = x.shape[:2]
+    W = k_cache.shape[2]
+    q, k, v = _project_qkv(p, cfg, x, name)  # (B,C,H,hd) / (B,C,Hkv,hd)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    # read (and later write) chunk K/V at cache precision, like the
+    # write-then-read absolute-offset chunk path does
+    k = k.astype(k_cache.dtype)
+    v = v.astype(v_cache.dtype)
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, C, cfg.n_kv_heads, group, cfg.head_dim)
+    # ring slot s holds the latest position below the row's chunk start
+    # congruent to s mod W; prefill is contiguous, so written <=> pos >= 0
+    off = positions[:, :1]  # (B, 1) — first chunk position per row
+    s_idx = jnp.arange(W)[None]  # (1, W)
+    cache_pos = off - 1 - jnp.mod(off - 1 - s_idx, W)  # (B, W)
+    scale = cfg.head_dim**0.5
+    sc_cache = jnp.einsum(
+        "bqhgd,bhkd->bhgqk", qg, k_cache,
+        preferred_element_type=jnp.float32) / scale
+    sc_self = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k,
+        preferred_element_type=jnp.float32) / scale
+    qpos = positions[:, None, None, :, None]  # (B,1,1,C,1)
+    cpos = cache_pos[:, None, None, None, :]  # (B,1,1,1,W)
+    mask_cache = (cpos >= 0) & (cpos > qpos - W)  # cpos <= qpos always
+    kpos = positions[:, None, None, None, :]  # (B,1,1,1,C)
+    mask_self = (kpos <= qpos) & (kpos > qpos - W)
+    scores = jnp.concatenate(
+        [jnp.where(mask_cache, sc_cache, _NEG_INF),
+         jnp.where(mask_self, sc_self, _NEG_INF)], axis=-1)
+    probs = jax.nn.softmax(scores, axis=-1)
+    vals = jnp.concatenate(
+        [v_cache, v.transpose(0, 2, 1, 3)], axis=2)  # (B,Hkv,W+C,hd)
+    out = jnp.einsum(
+        "bhgqk,bhkd->bqhgd", probs.astype(vals.dtype), vals,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.astype(x.dtype).reshape(B, C, cfg.q_dim)
+    # last-write-wins ring update, bounded to each row's real tokens;
+    # kept positions span at most one window, so their slots are distinct
+    wvalid = (positions < limits[:, None]) & (positions >= limits[:, None]
+                                              - W)
+    slots = jnp.where(wvalid, jnp.mod(positions, W), W)  # W => dropped
+    b_idx = jnp.arange(B)[:, None]
+    k_cache = k_cache.at[b_idx, :, slots].set(k, mode="drop")
+    v_cache = v_cache.at[b_idx, :, slots].set(v, mode="drop")
+    return linear(p["out"], out, name + ".out"), k_cache, v_cache
+
+
 def decode_attention(
     p: Dict,
     x: jax.Array,  # (B, 1, D) current token

@@ -1,9 +1,13 @@
 """Transformer-block assembly for every block kind in the assigned pool.
 
-Each block kind provides three functions used by ``models/lm.py``:
+Each block kind provides the functions used by ``models/lm.py``:
   * ``block_init``        — params for one layer
   * ``block_apply_seq``   — full-sequence path (train / prefill)
   * ``block_apply_step``  — single-token decode path against a cache entry
+  * ``block_apply_chunk`` — multi-token cached path (chunked prefill and
+    speculative verification) — universal across ALL kinds: absolute
+    offsets for ``attn``, rotated ring writes for ``local_attn``, and an
+    intra-chunk carried-state scan for the recurrent kinds
   * ``block_init_cache``  — that layer's decode-state allocation
 
 Kinds: ``attn`` | ``local_attn`` | ``rglru`` | ``mlstm`` | ``slstm``.
@@ -130,14 +134,87 @@ def cross_kv(p_attn, encoder_out, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 
-def chunk_supported(cfg: ModelConfig) -> bool:
-    """Chunked prefill covers global-attention decoder-only stacks; rotating
-    window caches and recurrent states prefill via the sequential replay
-    path (their cache layout is position-rotated / carried, not addressed
-    by absolute offset)."""
+def page_addressable(cfg: ModelConfig) -> bool:
+    """Paged KV caches cover global-attention decoder-only stacks: a page
+    pool is addressed by absolute position, while rotating-window rings
+    (slot = pos % W) and carried recurrent states have no absolute-offset
+    layout.  The *chunked forward path* is universal — every block kind
+    prefills/verifies through :func:`block_apply_chunk`; only the paged
+    cache layout remains gated on this predicate."""
     return (not cfg.is_encoder_decoder) and all(
         k == "attn" for k in cfg.block_pattern
     )
+
+
+def chunk_capable(cfg: ModelConfig) -> bool:
+    """The chunked forward body (:func:`block_apply_chunk`) covers every
+    decoder-only stack — the only hold-out is the whisper encoder-decoder,
+    whose cross-attention sub-block has no chunk path (it prefills by
+    replay)."""
+    return not cfg.is_encoder_decoder
+
+
+def window_capped(cfg: ModelConfig) -> bool:
+    """True when every layer's serving state is bounded independently of
+    sequence length: rotating windows pin at most ``min(len, W)`` cache
+    positions and recurrent kinds O(1) state, so a stack with no global
+    ``attn`` layer can serve prompts of *any* length from fixed-size
+    slots.  The engine derives its actual admission ceiling from
+    ``FIFOAdmission.slot_price`` (the per-layer pricing this predicate
+    summarizes) plus a learned-position check — a learned table is
+    itself a max_seq-wide absolute buffer and keeps the ceiling even on
+    an attention-free stack."""
+    return (not cfg.is_encoder_decoder) and all(
+        k != "attn" for k in cfg.block_pattern
+    )
+
+
+def init_state(cfg: ModelConfig, kind: str, batch: int,
+               dtype=jnp.float32) -> Dict:
+    """A recurrent kind's start-of-sequence carried state (the single
+    kind->init mapping; :func:`block_init_cache` delegates here)."""
+    if kind == "rglru":
+        return rglru.rglru_init_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _reset_fresh_rows(cfg: ModelConfig, kind: str, state: Dict,
+                      fresh: jax.Array) -> Dict:
+    """Rows starting a sequence (position / length 0) enter with the
+    kind's init state.  Slot reuse must not leak the previous occupant's
+    carried state: K/V slots are masked by length accounting, but a
+    recurrent state has no mask — the reset is keyed on position instead,
+    which both serving engines hit exactly at a request's first token."""
+    B = fresh.shape[0]
+    init = init_state(cfg, kind, B)
+
+    def sel(i, c):
+        m = fresh.reshape((B,) + (1,) * (c.ndim - 1))
+        return jnp.where(m, i.astype(c.dtype), c)
+
+    return jax.tree_util.tree_map(sel, init, state)
+
+
+def _commit_traj(traj: Dict, entering: Dict, cache: Dict,
+                 valids: jax.Array) -> Dict:
+    """Carried state after each row's ``valids`` chunk tokens, in the
+    cache entry's dtypes; rows with ``valids == 0`` (parked verify rows)
+    keep their entering state."""
+    B = valids.shape[0]
+    C = jax.tree_util.tree_leaves(traj)[0].shape[1]
+    idx = jnp.clip(valids - 1, 0, C - 1)
+
+    def pick(t, e, c_leaf):
+        sel = t[jnp.arange(B), idx]
+        m = (valids > 0).reshape((B,) + (1,) * (sel.ndim - 1))
+        return jnp.where(m, sel.astype(c_leaf.dtype),
+                         e.astype(c_leaf.dtype))
+
+    return jax.tree_util.tree_map(pick, traj, entering, cache)
 
 
 def block_apply_chunk(
@@ -148,20 +225,64 @@ def block_apply_chunk(
     kind: str,
     *,
     positions: jax.Array,  # (B, C) absolute positions
+    valids: Optional[jax.Array] = None,  # (B,) real tokens per row (def C)
     moe_cf: Optional[float] = None,
     name: str = "",
-) -> Tuple[jax.Array, Dict]:
-    """Chunked-prefill block step: the multi-token analogue of
-    :func:`block_apply_step`.  Returns (x_out (B,C,d), new_cache)."""
-    if kind != "attn":
-        raise NotImplementedError(
-            f"chunked prefill not supported for block kind {kind!r}")
+) -> Tuple[jax.Array, Dict, Optional[Dict]]:
+    """Chunked cached block step for EVERY block kind: the multi-token
+    analogue of :func:`block_apply_step`, shared by chunked prefill and
+    speculative verification.
+
+      * ``attn`` — absolute-offset cache writes + causal chunk attention
+        (:func:`repro.models.attention.chunk_attention`); padding above a
+        row's real tokens lands past the prompt and stays masked.
+      * ``local_attn`` — rotated ring writes at ``pos % W`` with the chunk
+        attending over the live window
+        (:func:`~repro.models.attention.chunk_attention_rotating`); ring
+        writes wrap rather than drop, so ``valids`` bounds them.
+      * recurrent kinds — carried-state chunk application: an intra-chunk
+        ``jax.lax.scan`` threads the state through the chunk, and the
+        returned cache entry is the state after each row's ``valids``
+        tokens.  Rows at position 0 enter with a fresh init state (see
+        :func:`_reset_fresh_rows`).
+
+    Returns ``(x_out (B,C,d), new_cache, traj)``.  ``traj`` is None for
+    attention kinds; for recurrent kinds it is the full per-position state
+    trajectory (``traj[:, t]`` = state after chunk tokens ``0..t``) that
+    :func:`repro.models.lm.commit_verify` selects from when a speculative
+    verify commits fewer tokens than it scored.
+    """
+    B, C = x.shape[:2]
+    if valids is None:
+        valids = jnp.full((B,), C, jnp.int32)
+    traj: Optional[Dict] = None
     h = apply_norm(p["ln1"], x, cfg.norm)
-    out, k_c, v_c = attention.chunk_attention(
-        p["attn"], h, cfg, cache["k"], cache["v"], positions,
-        name=name + ".attn")
+    if kind == "attn":
+        out, k_c, v_c = attention.chunk_attention(
+            p["attn"], h, cfg, cache["k"], cache["v"], positions,
+            name=name + ".attn")
+        new_cache: Dict = {"k": k_c, "v": v_c}
+    elif kind == "local_attn":
+        limits = positions[:, 0] + valids
+        out, k_c, v_c = attention.chunk_attention_rotating(
+            p["attn"], h, cfg, cache["k"], cache["v"], positions, limits,
+            name=name + ".attn")
+        new_cache = {"k": k_c, "v": v_c}
+    elif kind in ("rglru", "mlstm", "slstm"):
+        state = _reset_fresh_rows(cfg, kind, cache, positions[:, 0] == 0)
+        if kind == "rglru":
+            out, traj = rglru.rglru_chunk(p["rglru"], h, state, cfg,
+                                          name + ".rglru")
+        elif kind == "mlstm":
+            out, traj = xlstm.mlstm_chunk(p["mlstm"], h, state, cfg,
+                                          name + ".mlstm")
+        else:
+            out, traj = xlstm.slstm_chunk(p["slstm"], h, state, cfg,
+                                          name + ".slstm")
+        new_cache = _commit_traj(traj, state, cache, valids)
+    else:
+        raise ValueError(kind)
     x = x + out
-    cache = {"k": k_c, "v": v_c}
     if "mlp" in p or "moe" in p:
         h = apply_norm(p["ln2"], x, cfg.norm)
         if cfg.n_experts:
@@ -170,7 +291,7 @@ def block_apply_chunk(
         else:
             out = mlp(p["mlp"], h, cfg.activation, name + ".mlp")
         x = x + out
-    return x, cache
+    return x, new_cache, traj
 
 
 # ---------------------------------------------------------------------------
@@ -190,13 +311,7 @@ def block_init_cache(
     if kind in ("attn", "local_attn"):
         shape = (batch, cfg.n_kv_heads, S, cfg.head_dim)
         return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
-    if kind == "rglru":
-        return rglru.rglru_init_state(cfg, batch, dtype)
-    if kind == "mlstm":
-        return xlstm.mlstm_init_state(cfg, batch)
-    if kind == "slstm":
-        return xlstm.slstm_init_state(cfg, batch)
-    raise ValueError(kind)
+    return init_state(cfg, kind, batch, dtype)
 
 
 def block_apply_step(
@@ -207,13 +322,26 @@ def block_apply_step(
     cfg: ModelConfig,
     kind: str,
     *,
+    active: Optional[jax.Array] = None,  # (B,) bool — rows really decoding
     cross_cache: Optional[Dict] = None,
     enc_lengths: Optional[jax.Array] = None,
     block_table: Optional[jax.Array] = None,  # (B, n_pg) => paged cache
     moe_cf: Optional[float] = None,  # None = exact capacity (tiny batches)
     name: str = "",
 ) -> Tuple[jax.Array, Dict]:
-    """Returns (x_out (B,1,d), new_cache)."""
+    """Returns (x_out (B,1,d), new_cache).
+
+    ``active`` masks *state commits* for rows riding the batched call
+    without really decoding (a serving engine steps every slot; rows
+    mid-chunked-prefill or empty just tag along).  Global-attention
+    writes need no mask — an inactive row's write at ``lengths[b]``
+    stays length-masked and is overwritten by the row's next real write
+    at that position — but rotating rings and recurrent states mutate
+    in place with no mask, so an unmasked tag-along step would consume
+    state the row's owner never produced.  ``None`` commits every row
+    (the replay/generate paths, where all rows step one real token).
+    """
+    prev_cache = cache
     h = apply_norm(p["ln1"], x, cfg.norm)
     if kind in ("attn", "local_attn"):
         if block_table is not None:
@@ -238,14 +366,30 @@ def block_apply_step(
                 name=name + ".attn",
             )
         cache = {"k": k_c, "v": v_c}
-    elif kind == "rglru":
-        out, cache = rglru.rglru_step(p["rglru"], h, cache, cfg, name + ".rglru")
-    elif kind == "mlstm":
-        out, cache = xlstm.mlstm_step(p["mlstm"], h, cache, cfg, name + ".mlstm")
-    elif kind == "slstm":
-        out, cache = xlstm.slstm_step(p["slstm"], h, cache, cfg, name + ".slstm")
+    elif kind in ("rglru", "mlstm", "slstm"):
+        # a row at length 0 is a request's first token: enter with a fresh
+        # init state so slot reuse cannot leak the prior occupant's state
+        cache = _reset_fresh_rows(cfg, kind, cache, lengths == 0)
+        if kind == "rglru":
+            out, cache = rglru.rglru_step(p["rglru"], h, cache, cfg,
+                                          name + ".rglru")
+        elif kind == "mlstm":
+            out, cache = xlstm.mlstm_step(p["mlstm"], h, cache, cfg,
+                                          name + ".mlstm")
+        else:
+            out, cache = xlstm.slstm_step(p["slstm"], h, cache, cfg,
+                                          name + ".slstm")
     else:
         raise ValueError(kind)
+    if active is not None and kind in ("local_attn", "rglru", "mlstm",
+                                       "slstm"):
+        m = active
+
+        def keep(n, o):
+            mm = m.reshape((m.shape[0],) + (1,) * (n.ndim - 1))
+            return jnp.where(mm, n, o)
+
+        cache = jax.tree_util.tree_map(keep, cache, prev_cache)
     x = x + out
     if "cross_attn" in p and cross_cache is not None:
         h = apply_norm(p["cross_ln"], x, cfg.norm)

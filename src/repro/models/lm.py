@@ -299,13 +299,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     the leading axis is a global *page pool* instead of the slot batch —
     ``batch`` pages of ``max_seq``(= page_size) tokens each, addressed
     through per-request block tables (see ``serving/kv_cache.py``).  The
-    paged layout is only defined for global-attention stacks (the kinds
-    :func:`repro.models.blocks.chunk_supported` admits); rotating-window
-    and recurrent caches are not page-addressable."""
-    if layout == "paged":
-        assert blocks.chunk_supported(cfg), (
-            "paged KV cache requires a global-attention stack",
-            cfg.block_pattern)
+    paged layout is only defined for global-attention stacks
+    (:func:`repro.models.blocks.page_addressable`); rotating-window and
+    recurrent caches are not page-addressable (the chunked *forward* path
+    covers every kind — only this layout stays gated)."""
+    if layout == "paged" and not blocks.page_addressable(cfg):
+        # ValueError, not assert: the guard is the last barrier between a
+        # non-pageable stack and silent cache corruption under python -O
+        raise ValueError(
+            "paged KV cache requires a global-attention stack; "
+            f"{cfg.block_pattern} holds rotating-window/recurrent kinds — "
+            "serve it with the stacked layout")
     period = _period(cfg)
     n_per, n_rest = _layer_counts(cfg)
     if layout == "layers":
@@ -357,6 +361,7 @@ def decode_step(
     cache: Dict,
     lengths: jax.Array,  # (B,) i32 — positions already in cache
     *,
+    active: Optional[jax.Array] = None,  # (B,) bool — rows really decoding
     enc_lengths: Optional[jax.Array] = None,
     block_table: Optional[jax.Array] = None,  # (B, n_pg) => paged cache
     unroll_periods: bool = False,  # exact per-layer HLO for the dry-run
@@ -367,7 +372,13 @@ def decode_step(
 
     With ``block_table`` the cache is the paged layout
     (``init_cache(..., layout="paged")``): attention K/V are read and
-    written through the table instead of a per-slot batch axis."""
+    written through the table instead of a per-slot batch axis.
+
+    ``active`` gates state commits for rows that merely ride the batched
+    call (a serving engine steps all slots; rows mid-prefill or empty tag
+    along) — rotating rings and recurrent states have no length mask, so
+    their entries keep the pre-call value on inactive rows; see
+    :func:`repro.models.blocks.block_apply_step`."""
     B = token.shape[0]
     x = embed(params["embed"], token, dtype)  # (B, 1, d)
     if cfg.pos == "learned":
@@ -384,7 +395,7 @@ def decode_step(
         for i in range(period):
             x, c = blocks.block_apply_step(
                 layer_p[i], x, layer_c[i], lengths, cfg,
-                cfg.block_pattern[i],
+                cfg.block_pattern[i], active=active,
                 cross_cache=(cross_c[i] if has_cross else None),
                 enc_lengths=enc_lengths, block_table=block_table,
                 moe_cf=moe_cf, name=f"p{i}")
@@ -412,6 +423,7 @@ def decode_step(
         li = n_per * period + j
         x, c = blocks.block_apply_step(
             layer_p, x, cache["rest"][j], lengths, cfg, cfg.block_kind(li),
+            active=active,
             cross_cache=(cache["cross"]["rest"][j] if has_cross else None),
             enc_lengths=enc_lengths, block_table=block_table,
             moe_cf=moe_cf, name=f"r{j}")
@@ -515,12 +527,15 @@ def _chunk_body(
     positions: jax.Array,  # (B, C) absolute positions per row
     moe_cf: Optional[float],
     dtype,
-) -> Tuple[jax.Array, Dict]:
+    valids: Optional[jax.Array] = None,  # (B,) real tokens per row
+) -> Tuple[jax.Array, Dict, Dict]:
     """Shared multi-token cached forward: embed the chunk rows, run every
     layer's :func:`repro.models.blocks.block_apply_chunk` against ``view``,
-    and return (pre-final-norm hidden (B, C, d), new_view).  Used by both
-    chunked prefill (B=1, one slot view) and speculative verification
-    (B=slots, per-row offsets)."""
+    and return (pre-final-norm hidden (B, C, d), new_view, traj).  Used by
+    both chunked prefill (B=1, one slot view) and speculative verification
+    (B=slots, per-row offsets).  ``traj`` mirrors the layer structure with
+    the recurrent kinds' per-position state trajectories (None entries for
+    attention kinds) — :func:`commit_verify`'s input."""
     x = embed(params["embed"], tokens, dtype)  # (B, C, d)
     if cfg.pos == "learned":
         # clipped gather (not dynamic_slice, whose clamped start would
@@ -535,28 +550,33 @@ def _chunk_body(
 
     def period_body(x, scanned):
         layer_p, layer_c = scanned
-        new_c = []
+        new_c, trajs = [], []
         for i in range(period):
-            x, c = blocks.block_apply_chunk(
+            x, c, tr = blocks.block_apply_chunk(
                 layer_p[i], x, layer_c[i], cfg, cfg.block_pattern[i],
-                positions=positions, moe_cf=moe_cf, name=f"p{i}")
+                positions=positions, valids=valids, moe_cf=moe_cf,
+                name=f"p{i}")
             new_c.append(c)
-        return x, tuple(new_c)
+            trajs.append(tr)
+        return x, (tuple(new_c), tuple(trajs))
 
     if n_per == 0:
         new_periods = view["periods"]
+        traj_periods: Tuple = ()
     else:
-        x, new_periods = jax.lax.scan(
+        x, (new_periods, traj_periods) = jax.lax.scan(
             period_body, x, (params["periods"], view["periods"]))
 
-    new_rest = []
+    new_rest, traj_rest = [], []
     for j, layer_p in enumerate(params["rest"]):
         li = n_per * period + j
-        x, c = blocks.block_apply_chunk(
+        x, c, tr = blocks.block_apply_chunk(
             layer_p, x, view["rest"][j], cfg, cfg.block_kind(li),
-            positions=positions, moe_cf=moe_cf, name=f"r{j}")
+            positions=positions, valids=valids, moe_cf=moe_cf, name=f"r{j}")
         new_rest.append(c)
-    return x, {"periods": new_periods, "rest": new_rest}
+        traj_rest.append(tr)
+    return (x, {"periods": new_periods, "rest": new_rest},
+            {"periods": traj_periods, "rest": traj_rest})
 
 
 def prefill_into_slot(
@@ -578,21 +598,28 @@ def prefill_into_slot(
     The chunk attends causally over its own tokens *and* the slot's cache
     below ``offset`` (earlier chunks of the same prompt), so a P-token
     prompt costs ``ceil(P / C)`` forward calls instead of P decode ticks.
-    Tokens past ``valid`` are padding: their K/V writes land above the
-    prompt and are masked (and later overwritten) by decode's length
-    accounting.  Supported for global-attention stacks
-    (:func:`repro.models.blocks.chunk_supported`); recurrent / windowed
-    kinds replay through :func:`prefill`.
+    The chunked body is universal across block kinds
+    (:func:`repro.models.blocks.block_apply_chunk`): global attention
+    writes at absolute offsets (padding past ``valid`` lands above the
+    prompt and stays masked by decode's length accounting), rotating
+    windows write ``pos % W`` ring slots (padding writes are dropped via
+    ``valid``), and recurrent kinds thread their carried state through an
+    intra-chunk scan, committing the state after ``valid`` tokens.
 
     With ``block_table`` (one request's ``(n_pg,)`` block-table row) the
-    cache is the paged layout: the row's pages are gathered into a
-    contiguous view, the chunk runs the *same* attention math, and the
-    updated view scatters back onto the pages — ``slot`` is ignored.
+    cache is the paged layout — defined for global-attention stacks only
+    (:func:`repro.models.blocks.page_addressable`): the row's pages are
+    gathered into a contiguous view, the chunk runs the *same* attention
+    math, and the updated view scatters back onto the pages — ``slot`` is
+    ignored.
 
     Returns (last_logits (V,) f32 — logits at chunk position valid-1,
     new_cache).
     """
-    assert blocks.chunk_supported(cfg), cfg.block_pattern
+    if block_table is not None and not blocks.page_addressable(cfg):
+        raise ValueError(
+            f"paged prefill requires a global-attention stack, got "
+            f"{cfg.block_pattern}")
     C = tokens.shape[-1]
     tokens = tokens.reshape(1, C)
     slot = jnp.asarray(slot, jnp.int32)
@@ -605,8 +632,8 @@ def prefill_into_slot(
     else:
         view = _slot_view(cache, slot)
     positions = (offset + jnp.arange(C, dtype=jnp.int32))[None]  # (1, C)
-    x, new_view = _chunk_body(params, cfg, tokens, view, positions,
-                              moe_cf, dtype)
+    x, new_view, _ = _chunk_body(params, cfg, tokens, view, positions,
+                                 moe_cf, dtype, valids=valid[None])
 
     x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
     x_last = apply_norm(params["final_ln"], x_last, cfg.norm)
@@ -678,7 +705,9 @@ def verify_chunk(
     cache: Dict,
     lengths: jax.Array,  # (B,) i32 — absolute position of tokens[b, 0]
     *,
+    valids: Optional[jax.Array] = None,  # (B,) real tokens per row (def C)
     block_tables: Optional[jax.Array] = None,  # (B, n_pg) => paged cache
+    with_traj: bool = False,
     moe_cf: Optional[float] = None,
     dtype=jnp.bfloat16,
 ):
@@ -711,9 +740,22 @@ def verify_chunk(
     whose copy traffic scales with ``max_seq``; a scalar-prefetch paged
     verify kernel bounding it to live pages is the named ROADMAP seam.
 
-    Returns (logits (B, C, V) f32, new_cache).
+    Stacks with rotating-window or recurrent layers verify through the
+    same chunk body (stacked layout only — such stacks are not
+    page-addressable).  ``valids`` bounds each row's real tokens
+    (``cur_tok`` + its draft count; 0 parks the row): ring writes past a
+    row's ``lengths + valids`` are dropped, and the recurrent carried
+    state commits at ``valids`` tokens.  With ``with_traj`` the call also
+    returns the per-layer per-position state trajectories, which
+    :func:`commit_verify` selects from after the accept/reject decision —
+    the state-rewind seam (K/V rewind stays with the cache managers).
+
+    Returns (logits (B, C, V) f32, new_cache[, traj]).
     """
-    assert blocks.chunk_supported(cfg), cfg.block_pattern
+    if block_tables is not None and not blocks.page_addressable(cfg):
+        raise ValueError(
+            f"paged verification requires a global-attention stack, got "
+            f"{cfg.block_pattern}")
     B, C = tokens.shape
     lengths = jnp.asarray(lengths, jnp.int32)
     positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
@@ -721,8 +763,8 @@ def verify_chunk(
         view = _paged_view_batch(cache, block_tables)
     else:
         view = cache  # stacked: the cache batch axis IS the slot axis
-    x, new_view = _chunk_body(params, cfg, tokens, view, positions,
-                              moe_cf, dtype)
+    x, new_view, traj = _chunk_body(params, cfg, tokens, view, positions,
+                                    moe_cf, dtype, valids=valids)
     x = apply_norm(params["final_ln"], x, cfg.norm)
     if cfg.tie_embeddings:
         logits = unembed(params["embed"], x)
@@ -733,7 +775,96 @@ def verify_chunk(
     else:
         new_cache = dict(cache)
         new_cache.update(new_view)
+    if with_traj:
+        return logits.astype(jnp.float32), new_cache, traj
     return logits.astype(jnp.float32), new_cache
+
+
+_RECURRENT_KINDS = ("rglru", "mlstm", "slstm")
+
+
+def commit_verify(
+    cfg: ModelConfig,
+    prev_cache: Dict,  # the cache :func:`verify_chunk` read (verify base)
+    new_cache: Dict,  # the cache it returned (every draft position applied)
+    traj: Dict,  # its ``with_traj`` output (per-position state trajectories)
+    lengths: jax.Array,  # (B,) i32 — verify-base absolute offsets
+    counts: jax.Array,  # (B,) i32 — chunk tokens committed (0 parks a row)
+    valids: jax.Array,  # (B,) i32 — chunk tokens verify actually applied
+    *,
+    chunk: int,  # static chunk width (k + 1)
+) -> Dict:
+    """Commit the accepted prefix of a speculative verify — the
+    state-rewind half of the rewind seam, for serving state that has no
+    length mask.
+
+    K/V of global-attention layers rewind for free (the cache managers'
+    ``rewind`` is length-accounting only; rejected positions stay masked
+    and are overwritten), but the other kinds mutate state in place:
+
+      * **rotating windows** — a rejected draft's ring write at
+        ``pos % W`` *evicted* the K/V of position ``pos - W``, which the
+        post-rewind window still needs.  Those slots are restored from
+        ``prev_cache`` — the verify base is the snapshot (JAX arrays are
+        immutable, so holding the pre-verify cache costs nothing).
+      * **recurrent kinds** — the carried state consumed every draft
+        token; the state after only the accepted prefix is ``traj`` at
+        ``counts - 1`` (the committed token count includes ``cur_tok``).
+        Rows with ``counts == 0`` keep ``new_cache``'s entry, which
+        :func:`verify_chunk` left at the verify base for parked rows.
+
+    Restored ring slots are exactly the rejected writes
+    (``counts <= j < valids``); the caller must bound drafts so a verify
+    writes at most W positions per ring (``chunk <= W``), otherwise an
+    accepted write and a rejected one can share a slot.  Returns the
+    committed cache; global-attention entries pass through untouched.
+    """
+    lengths = jnp.asarray(lengths, jnp.int32)
+    counts = jnp.asarray(counts, jnp.int32)
+    valids = jnp.asarray(valids, jnp.int32)
+    B = counts.shape[0]
+    rows = jnp.arange(B)
+    b_col = rows[:, None]
+    j = jnp.arange(chunk, dtype=jnp.int32)[None]  # (1, chunk)
+    pos = lengths[:, None] + j  # (B, chunk)
+    undo = (j >= counts[:, None]) & (j < valids[:, None])  # rejected writes
+
+    def ring_restore(prev_l, new_l):  # leaves (B, Hkv, W, hd)
+        W = prev_l.shape[2]
+        old = prev_l[b_col, :, jnp.mod(pos, W)]  # (B, chunk, Hkv, hd)
+        slots = jnp.where(undo, jnp.mod(pos, W), W)  # W => keep new
+        return new_l.at[b_col, :, slots].set(old, mode="drop")
+
+    def state_select(tr_l, new_l):  # tr (B, chunk, ...), new (B, ...)
+        idx = jnp.clip(counts - 1, 0, tr_l.shape[1] - 1)
+        sel = tr_l[rows, idx]
+        m = (counts > 0).reshape((B,) + (1,) * (sel.ndim - 1))
+        return jnp.where(m, sel.astype(new_l.dtype), new_l)
+
+    def fix_entry(kind, prev_e, new_e, tr_e, stacked):
+        if kind == "local_attn":
+            fn = jax.vmap(ring_restore) if stacked else ring_restore
+            return jax.tree_util.tree_map(fn, prev_e, new_e)
+        if kind in _RECURRENT_KINDS:
+            fn = jax.vmap(state_select) if stacked else state_select
+            return jax.tree_util.tree_map(fn, tr_e, new_e)
+        return new_e  # global attention: mask-only rewind, nothing to do
+
+    period = _period(cfg)
+    n_per = _n_per_from(new_cache)
+    out = dict(new_cache)
+    if new_cache["periods"]:
+        out["periods"] = tuple(
+            fix_entry(cfg.block_pattern[i], prev_cache["periods"][i],
+                      new_cache["periods"][i], traj["periods"][i],
+                      stacked=True)
+            for i in range(len(new_cache["periods"])))
+    out["rest"] = [
+        fix_entry(cfg.block_kind(n_per * period + jl),
+                  prev_cache["rest"][jl], new_cache["rest"][jl],
+                  traj["rest"][jl], stacked=False)
+        for jl in range(len(new_cache["rest"]))]
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -766,6 +897,7 @@ def sharded_decode_step(
     cache: Dict,  # leaves (D, ...) — shard axis leading everywhere
     lengths: jax.Array,  # (D, Bs) i32
     *,
+    actives: Optional[jax.Array] = None,  # (D, Bs) bool — really decoding
     block_tables: Optional[jax.Array] = None,  # (D, Bs, n_pg) => paged
     axis: str = "shard",
     gather_logits: bool = True,
@@ -779,16 +911,31 @@ def sharded_decode_step(
     ring_all_gather`) — the tick's activation collective — and the result
     is the replicated (D*Bs, V) batch; otherwise logits stay sharded as
     (D, Bs, V).  Returns (logits, new_cache); cache shards never move.
+
+    ``actives`` is :func:`decode_step`'s tag-along mask, per shard slot:
+    required whenever the stack carries rotating rings or recurrent
+    states (their entries have no length mask, so an idle slot riding
+    the batched tick must not commit state).
     """
     from jax.sharding import PartitionSpec as P
 
     from repro.core import collectives, compat
 
     paged = block_tables is not None
+    masked = actives is not None
+    if paged and masked:
+        # paged stacks are pure global-attention today (no maskable
+        # state), so the combination is unimplemented — refuse rather
+        # than silently dropping the mask if paged window pages ever land
+        raise ValueError(
+            "sharded_decode_step: actives masking is not implemented for "
+            "the paged layout (paged stacks carry no ring/recurrent "
+            "state)")
 
-    def body(p, tok, cache, lengths, bt):
+    def body(p, tok, cache, lengths, act, bt):
         logits, new_cache = decode_step(
             p, cfg, tok[0], _shard_squeeze(cache), lengths[0],
+            active=(act[0] if masked else None),
             block_table=(bt[0] if paged else None), dtype=dtype)
         if gather_logits:
             logits = collectives.ring_all_gather(logits, axis)  # (D*Bs, V)
@@ -798,12 +945,20 @@ def sharded_decode_step(
 
     if paged:
         fn = compat.shard_map(
-            body, mesh=mesh,
+            lambda p, tok, c, ln, bt: body(p, tok, c, ln, None, bt),
+            mesh=mesh,
             in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
             out_specs=(P() if gather_logits else P(axis), P(axis)))
         return fn(params, token, cache, lengths, block_tables)
+    if masked:
+        fn = compat.shard_map(
+            lambda p, tok, c, ln, act: body(p, tok, c, ln, act, None),
+            mesh=mesh,
+            in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
+            out_specs=(P() if gather_logits else P(axis), P(axis)))
+        return fn(params, token, cache, lengths, actives)
     fn = compat.shard_map(
-        lambda p, tok, c, ln: body(p, tok, c, ln, None), mesh=mesh,
+        lambda p, tok, c, ln: body(p, tok, c, ln, None, None), mesh=mesh,
         in_specs=(P(), P(axis), P(axis), P(axis)),
         out_specs=(P() if gather_logits else P(axis), P(axis)))
     return fn(params, token, cache, lengths)

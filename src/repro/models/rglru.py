@@ -85,6 +85,56 @@ def rglru_seq(p: Dict, x: jax.Array, cfg: ModelConfig, name: str = ""):
     return linear(p["out_proj"], y, name + ".out"), state
 
 
+def rglru_chunk(
+    p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, name: str = ""
+) -> Tuple[jax.Array, Dict]:
+    """Chunked cached forward: consume C tokens against a carried state.
+
+    The projections and gates run batched over the chunk; the linear
+    recurrence ``h_t = a_t h_{t-1} + b_t`` runs as a ``jax.lax.scan`` over
+    the chunk axis, seeded from ``state`` — the multi-token analogue of
+    :func:`rglru_step` with identical per-token math.  Returns
+    (out (B, C, d), traj) where ``traj`` holds the *full state
+    trajectory*: ``traj[:, t]`` is the carried state after consuming chunk
+    tokens ``0..t``.  Callers commit the entry matching the tokens they
+    accept (prefill commits ``valid``; speculative verification commits
+    the accepted prefix — the state-rewind seam).
+    """
+    B, C, _ = x.shape
+    h = linear(p["in_proj"], x, name + ".in")  # (B, C, 2w)
+    xw, gate = jnp.split(h, 2, axis=-1)
+    tail = state["conv_tail"]  # (B, 3, w)
+    # causal conv width 4 seeded from the carried tail (f32 accumulation).
+    # Intra-chunk taps round through the tail's storage dtype first: the
+    # decode step reads every tap back from the cached tail, so skipping
+    # the round-trip here would diverge whenever activations are wider
+    # than the cache (the quantized engine's f32 stream over a bf16 cache)
+    xw_t = xw.astype(tail.dtype)
+    xp = jnp.concatenate([tail, xw_t], axis=1).astype(jnp.float32)
+    conv = sum(
+        xp[:, i : i + C] * p["conv"][i].astype(jnp.float32)[None, None]
+        for i in range(_CONV_W)
+    )
+    a, b = _gates(p, conv)
+
+    def cell(hprev, ab):
+        h_t = ab[0] * hprev + ab[1]
+        return h_t, h_t
+
+    _, hs = jax.lax.scan(
+        cell, state["h"], (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    hseq = jnp.moveaxis(hs, 0, 1)  # (B, C, w)
+    y = hseq.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(
+        x.dtype
+    )
+    out = linear(p["out_proj"], y, name + ".out")
+    hist = jnp.concatenate([tail, xw_t], axis=1)
+    tails = jnp.stack(
+        [hist[:, t + 1 : t + _CONV_W] for t in range(C)], axis=1
+    )  # (B, C, 3, w) — conv tail after each chunk position
+    return out, {"h": hseq, "conv_tail": tails}
+
+
 def rglru_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
     w = cfg.lru_width or cfg.d_model
     return {

@@ -93,6 +93,31 @@ def mlstm_seq(p: Dict, x: jax.Array, cfg: ModelConfig, name: str = ""):
     return linear(p["out"], h * o, name + ".out"), state
 
 
+def mlstm_chunk(
+    p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, name: str = ""
+) -> Tuple[jax.Array, Dict]:
+    """Chunked cached forward: C tokens against a carried state via a
+    ``lax.scan`` over the chunk axis (same cell as seq/step paths).
+    Returns (out (B, C, d), traj) where ``traj[:, t]`` is the state after
+    chunk tokens ``0..t`` — callers commit the accepted entry (the
+    state-rewind seam for speculative verification)."""
+    B, C, _ = x.shape
+    q, k, v, li, lf = _mlstm_prep(p, x, cfg)
+
+    def step(st, inp):
+        st2, h = _mlstm_cell(st, inp)
+        return st2, (st2, h)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, li, lf))
+    _, (traj, hs) = jax.lax.scan(step, state, xs)
+    traj = jax.tree_util.tree_map(lambda t: jnp.moveaxis(t, 0, 1), traj)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, C, cfg.q_dim).astype(x.dtype)
+    o = jax.nn.sigmoid(
+        linear(p["o_gate"], x, name + ".o").astype(jnp.float32)
+    ).astype(x.dtype)
+    return linear(p["out"], h * o, name + ".out"), traj
+
+
 def mlstm_step(
     p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, name: str = ""
 ) -> Tuple[jax.Array, Dict]:
@@ -166,6 +191,23 @@ def slstm_seq(p: Dict, x: jax.Array, cfg: ModelConfig, name: str = ""):
 
     state, hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
     return jnp.moveaxis(hs, 0, 1).astype(x.dtype), state  # (B, S, d)
+
+
+def slstm_chunk(
+    p: Dict, x: jax.Array, state: Dict, cfg: ModelConfig, name: str = ""
+) -> Tuple[jax.Array, Dict]:
+    """Chunked cached forward (see :func:`mlstm_chunk`): C tokens against
+    a carried state, returning (out (B, C, d), full state trajectory)."""
+    B, C, _ = x.shape
+    gx = linear(p["gates"], x, name + ".gates")  # (B, C, 4d)
+
+    def step(st, g):
+        st2, h = _slstm_cell(p, st, g, cfg)
+        return st2, (st2, h)
+
+    _, (traj, hs) = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    traj = jax.tree_util.tree_map(lambda t: jnp.moveaxis(t, 0, 1), traj)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), traj
 
 
 def slstm_step(

@@ -159,6 +159,39 @@ class FIFOAdmission:
         total = -(-toks // page_size)
         return max(0, total - shared_tokens // page_size)
 
+    def slot_price(
+        self,
+        cfg: ModelConfig,
+        prompt_len: int,
+        max_new: int,
+        *,
+        max_seq: int,
+    ) -> int:
+        """Admission price of one request in contiguous-slot cache
+        positions — the per-layer maximum of its worst-case lifetime
+        footprint.
+
+        Global-attention layers pin every position, ``min(len,
+        max_seq)``; rotating-window layers pin at most the window,
+        ``min(len, W)`` (the ring holds only the last W positions);
+        recurrent layers pin O(1) carried state.  The maximum over the
+        stack is what the slot must actually hold, which is why a
+        window-capped stack (no global ``attn`` layer) admits prompts of
+        *any* length into a fixed-size slot: its price saturates at W.
+        The engine's admission ceiling (``seq_ceiling``) is this formula
+        evaluated at the limit — ``max_seq`` when some layer prices
+        unbounded, lifted otherwise.
+        """
+        toks = prompt_len + max_new
+        price = 1  # recurrent state: one position-equivalent, any length
+        for kind in cfg.block_pattern:
+            if kind == "attn":
+                price = max(price, min(toks, max_seq))
+            elif kind == "local_attn":
+                price = max(price, min(toks, cfg.window or max_seq,
+                                       max_seq))
+        return price
+
     def plan_chunks(
         self, prefilling: Sequence[Tuple[int, int, int]]
     ) -> List[PrefillChunk]:

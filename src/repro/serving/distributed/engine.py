@@ -87,9 +87,13 @@ class DistributedServeEngine:
         placement: Optional[ShardPlacement] = None,
         act_dtype=None,
     ):
-        assert blocks.chunk_supported(cfg), (
-            "the distributed engine drives chunked prefill only",
-            cfg.block_pattern)
+        if not blocks.chunk_capable(cfg):
+            # ValueError, not assert: the tick is chunked-prefill-only
+            # and must refuse encoder-decoder stacks under python -O too
+            raise ValueError(
+                "the distributed engine drives chunked prefill only; "
+                f"{cfg.name} is encoder-decoder (cross-attention has no "
+                "chunk path)")
         if mesh is None:
             from repro.launch.mesh import make_serving_mesh
 
@@ -115,8 +119,15 @@ class DistributedServeEngine:
             cfg, chunk_size=self.chunk_size)
         assert self.admission.chunk_size <= self.chunk_size
 
+        # the distributed tick is chunked end to end, so hybrid
+        # rotating-window/recurrent stacks serve through the sharded
+        # *stacked* layout (their rings/states are not page-addressable);
+        # admission stays bounded per shard — shipping recurrent state
+        # between shards for unbounded requests is a named next seam
+        self.seq_ceiling: Optional[int] = max_seq
         if kv_layout == "auto":
-            kv_layout = "paged" if max_seq % page_size == 0 else "stacked"
+            kv_layout = ("paged" if blocks.page_addressable(cfg)
+                         and max_seq % page_size == 0 else "stacked")
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
         if self.paged:
@@ -166,9 +177,12 @@ class DistributedServeEngine:
                     p, cfg, mesh, toks, cache, slots, offs, valids, acts,
                     block_tables=bts, dtype=self.act_dtype))
         else:
+            # stacked shards carry the really-decoding mask: rings and
+            # recurrent states of idle slots must not commit on the
+            # fixed-shape batched tick (see lm.decode_step ``active``)
             self._step = jax.jit(
-                lambda p, tok, cache, lengths: lm.sharded_decode_step(
-                    p, cfg, mesh, tok, cache, lengths,
+                lambda p, tok, cache, lengths, acts: lm.sharded_decode_step(
+                    p, cfg, mesh, tok, cache, lengths, actives=acts,
                     dtype=self.act_dtype))
             self._prefill = jax.jit(
                 lambda p, toks, cache, slots, offs, valids, acts:
@@ -381,7 +395,10 @@ class DistributedServeEngine:
                 logits_d, self.cache = self._step(
                     self.params,
                     self._stage("decode.tokens", self.cur_tok), self.cache,
-                    self._stage("decode.lengths", self.kv.lengths_array()))
+                    self._stage("decode.lengths", self.kv.lengths_array()),
+                    self._stage("decode.actives",
+                                np.asarray(decoding).reshape(
+                                    self.D, self.Bs)))
             self.model_calls += 1
             self.kv.advance_mask(decoding)
             op = self.xfer.dispatch("decode", logits_d)

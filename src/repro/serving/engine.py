@@ -48,10 +48,26 @@ every tick, and *admission work rides along without stalling it*.
     shared-buffer precision (activations quantize at each MP kernel's
     input, not between kernels).
 
-Block kinds without an absolute-offset cache (rotating local-attention
-windows, recurrent states) use the seed's sequential replay prefill
-(``prefill_mode="replay"``), which is also kept as the old-admission
-baseline for ``benchmarks/serving_bench.py``.
+The chunked forward body is universal across block kinds
+(:func:`repro.models.blocks.block_apply_chunk`): global attention writes
+at absolute offsets, rotating windows write ``pos % W`` ring slots, and
+recurrent kinds thread their carried state through an intra-chunk scan —
+so ``prefill_mode="auto"`` selects the chunked path for *every*
+decoder-only stack, hybrid recurrentgemma/xlstm-style configs included.
+Speculative decoding covers them too: stacks with rings or carried state
+verify with per-row ``valids`` and commit through the
+:class:`repro.serving.kv_cache.StateStore` rewind seam (restore rejected
+ring writes from the verify-base snapshot, select each recurrent state
+off the verify trajectory).  The seed's one-token-per-tick replay engine
+survives only as an explicit A/B debug mode (``prefill_mode="replay"``,
+the ``benchmarks/serving_bench.py`` baseline); the whisper
+encoder-decoder — whose cross-attention sub-block has no chunk path — is
+the one config ``auto`` still replays.
+
+Window-capped stacks (no global ``attn`` layer: every layer prices at
+``min(len, W)`` slots or O(1) state — ``FIFOAdmission.slot_price``) lose
+the ``max_seq`` admission ceiling entirely: prompts longer than the
+cache are admitted and served from the same fixed-size slots.
 
 Per-request accounting records TTFT (submit -> first token) and TPOT
 (steady-state decode latency); ``mdk_stats`` exposes the temporal-reuse
@@ -111,10 +127,14 @@ def submit_request(engine, prompt, max_new, sampling) -> int:
 
     Validation raises ``ValueError`` (not ``assert``, which vanishes under
     ``python -O`` and would let a bad request corrupt slot masks): the
-    prompt must be non-empty and leave room to generate, and ``max_new``
-    must be at least 1 (a request that may not emit anything would still
-    occupy a slot and emit one token before the length check fires)."""
-    if not 0 < len(prompt) < engine.max_seq:
+    prompt must be non-empty and — on engines with a length ceiling
+    (``engine.seq_ceiling``; window-capped stacks have none) — leave room
+    to generate, and ``max_new`` must be at least 1 (a request that may
+    not emit anything would still occupy a slot and emit one token before
+    the length check fires)."""
+    ceiling = engine.seq_ceiling
+    if len(prompt) < 1 or (ceiling is not None
+                           and len(prompt) >= ceiling):
         raise ValueError(
             f"prompt ({len(prompt)} tokens) must be non-empty and fit the "
             f"cache with room to generate (max_seq={engine.max_seq})")
@@ -216,10 +236,15 @@ class ServeEngine:
         self.params = params
 
         if prefill_mode == "auto":
-            prefill_mode = ("chunked" if blocks.chunk_supported(cfg)
+            # the chunked body covers every block kind; only the whisper
+            # encoder-decoder (no cross-attention chunk path) replays
+            prefill_mode = ("chunked" if blocks.chunk_capable(cfg)
                             else "replay")
-        if prefill_mode == "chunked":
-            assert blocks.chunk_supported(cfg), cfg.block_pattern
+        if prefill_mode == "chunked" and not blocks.chunk_capable(cfg):
+            # ValueError, not assert: the guard must survive python -O
+            raise ValueError(
+                f"{cfg.name} is encoder-decoder — cross-attention has no "
+                "chunk path; serve it with prefill_mode='replay'")
         self.prefill_mode = prefill_mode
         self.admission = admission or FIFOAdmission(
             cfg, chunk_size=self.chunk_size)
@@ -227,14 +252,26 @@ class ServeEngine:
             "admission schedules chunks larger than the engine's "
             f"prefill buffer ({self.admission.chunk_size} > "
             f"{self.chunk_size})")
+        # price a probe request one position past the cache: a stack whose
+        # per-layer slot footprint saturates below max_seq — rotating
+        # windows at W, recurrent state at O(1); admission.slot_price is
+        # the formula — admits prompts of ANY length into fixed-size
+        # slots, so the request-length ceiling is lifted.  A learned
+        # position table is itself a max_seq-wide absolute buffer and
+        # keeps the ceiling regardless of the block pattern.
+        probe = self.admission.slot_price(
+            cfg, max_seq + 1, 0, max_seq=max_seq + 1)
+        self.seq_ceiling: Optional[int] = (
+            None if probe <= max_seq and cfg.pos != "learned" else max_seq)
 
         if kv_layout == "auto":
-            # paged needs a global-attention stack AND a page size that
-            # divides max_seq (bit-exactness invariant); auto picks the
-            # contiguous layout otherwise rather than degrade page_size
+            # paged needs an absolute-offset (pure global-attention) stack
+            # AND a page size that divides max_seq (bit-exactness
+            # invariant); auto picks the contiguous layout otherwise
+            # rather than degrade page_size
             kv_layout = (
                 "paged"
-                if blocks.chunk_supported(cfg) and max_seq % page_size == 0
+                if blocks.page_addressable(cfg) and max_seq % page_size == 0
                 else "stacked")
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
@@ -253,7 +290,8 @@ class ServeEngine:
                 n_pages=n_pages, prefix_sharing=prefix_sharing)
         else:
             assert kv_layout == "stacked", kv_layout
-            self.kv = SlotCacheManager(cfg, batch_slots, max_seq)
+            self.kv = SlotCacheManager(cfg, batch_slots, max_seq,
+                                       bounded=self.seq_ceiling is not None)
         # sharing needs the chunked path: replay teacher-forces every prompt
         # token through decode, which cannot skip a shared prefix
         self._share = (self.paged and prefix_sharing
@@ -285,9 +323,13 @@ class ServeEngine:
                                      valid=valid, block_table=bt_row,
                                      dtype=self.act_dtype)))
         else:
+            # the batched step takes the really-decoding row mask: rings
+            # and recurrent states must not commit for tag-along rows
+            # (mid-prefill or empty slots riding the fixed-shape call)
             self._step = jax.jit(_traced(
-                lambda p, tok, cache, lengths: lm.decode_step(
-                    p, cfg, tok, cache, lengths, dtype=self.act_dtype)))
+                lambda p, tok, cache, lengths, active: lm.decode_step(
+                    p, cfg, tok, cache, lengths, active=active,
+                    dtype=self.act_dtype)))
             self._prefill = jax.jit(_traced(
                 lambda p, toks, cache, slot, offset, valid:
                 lm.prefill_into_slot(p, cfg, toks, cache, slot, offset,
@@ -296,6 +338,10 @@ class ServeEngine:
 
         self.spec = spec
         self.proposer: Optional[speculative.DraftProposer] = None
+        # hybrid stacks carry serving state with no length mask (rotating
+        # rings, recurrent states): their speculative verify goes through
+        # the StateStore rewind seam owned by the slot manager
+        self._state_store = getattr(self.kv, "state", None)
         if spec is not None:
             if self.prefill_mode != "chunked":
                 raise ValueError(
@@ -304,6 +350,14 @@ class ServeEngine:
                     f"config prefills via {self.prefill_mode!r}")
             if spec.k < 1:
                 raise ValueError(f"SpecConfig.k={spec.k} must be >= 1")
+            if "local_attn" in cfg.block_pattern:
+                W = min(cfg.window, max_seq)
+                if spec.k + 1 > W:
+                    raise ValueError(
+                        f"SpecConfig.k={spec.k}: a verify writes k+1 ring "
+                        f"positions but the rotating window holds {W} — "
+                        "state rewind needs k+1 <= W so an accepted write "
+                        "can never share a ring slot with a rejected one")
             self.proposer = speculative.make_proposer(
                 spec, batch_slots, max_seq, chunk_size=self.chunk_size,
                 dtype=self.act_dtype)
@@ -312,6 +366,13 @@ class ServeEngine:
                     lambda p, toks, cache, lens, bts: lm.verify_chunk(
                         p, cfg, toks, cache, lens, block_tables=bts,
                         dtype=self.act_dtype)))
+            elif self._state_store is not None:
+                # per-row valids bound ring writes / state commits; the
+                # trajectory feeds StateStore.commit after accept/reject
+                self._verify = jax.jit(_traced(
+                    lambda p, toks, cache, lens, valids: lm.verify_chunk(
+                        p, cfg, toks, cache, lens, valids=valids,
+                        with_traj=True, dtype=self.act_dtype)))
             else:
                 self._verify = jax.jit(_traced(
                     lambda p, toks, cache, lens: lm.verify_chunk(
@@ -388,7 +449,8 @@ class ServeEngine:
         if (
             tok == self.eos_id
             or len(req.out) >= req.max_new
-            or len(req.prompt) + len(req.out) >= self.max_seq
+            or (self.seq_ceiling is not None
+                and len(req.prompt) + len(req.out) >= self.seq_ceiling)
         ):
             req.t_done = now
             self.finished.append(req)
@@ -488,7 +550,7 @@ class ServeEngine:
         else:
             logits, self.kv.cache = self._step(
                 self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                self.kv.lengths)
+                self.kv.lengths, jnp.asarray(decoding, bool))
         self.model_calls += 1
         sampled = self._sample_rows(logits)
         self.kv.advance_mask(np.asarray(decoding))
@@ -516,10 +578,15 @@ class ServeEngine:
         caps = np.zeros((B,), np.int32)
         for b, req in enumerate(self.slots):
             if decoding[b]:
-                # cap so every written position stays below both the cache
-                # ceiling and prompt+max_new (the reservation bound)
-                caps[b] = max(0, min(k, req.max_new - len(req.out),
-                                     self.max_seq - 1 - int(lengths_h[b])))
+                # cap so every written position stays below the cache
+                # ceiling (window-capped stacks have none: rings wrap,
+                # states are O(1)) and prompt+max_new (the reservation
+                # bound)
+                cap = min(k, req.max_new - len(req.out))
+                if self.seq_ceiling is not None:
+                    cap = min(cap,
+                              self.seq_ceiling - 1 - int(lengths_h[b]))
+                caps[b] = max(0, cap)
         draft, counts = self.proposer.propose(
             self.slots, self.cur_tok, lengths_h, decoding, caps)
         if not counts.any():
@@ -533,13 +600,25 @@ class ServeEngine:
         toks = np.zeros((B, k + 1), np.int32)
         toks[:, 0] = self.cur_tok[:, 0]
         toks[:, 1:] = draft
-        # inactive rows park at max_seq: their writes drop, logits unused
+        # inactive rows park at max_seq: their absolute-offset writes
+        # drop, their logits go unused (ring writes and state commits are
+        # additionally gated by valids == 0 on the state-store path)
         vlen = np.where(decoding, lengths_h, self.max_seq).astype(np.int32)
+        valids = np.where(decoding, counts + 1, 0).astype(np.int32)
+        prev_cache = None
+        traj = None
         if self.paged:
             self.kv.ensure_decode_room(decoding, counts + 1)
             logits, self.kv.cache = self._verify(
                 self.params, jnp.asarray(toks), self.kv.cache,
                 jnp.asarray(vlen), jnp.asarray(self.kv.block_tables))
+        elif self._state_store is not None:
+            # the verify base IS the rewind snapshot (JAX arrays are
+            # immutable — holding the reference costs nothing)
+            prev_cache = self.kv.cache
+            logits, self.kv.cache, traj = self._verify(
+                self.params, jnp.asarray(toks), self.kv.cache,
+                jnp.asarray(vlen), jnp.asarray(valids))
         else:
             logits, self.kv.cache = self._verify(
                 self.params, jnp.asarray(toks), self.kv.cache,
@@ -551,6 +630,15 @@ class ServeEngine:
             logits, jnp.asarray(draft), jnp.asarray(counts), sub,
             jnp.asarray(self._temp), jnp.asarray(self._topk),
             jnp.asarray(self._topp)))
+        if self._state_store is not None:
+            # state half of the rewind seam: commit cur_tok + the accepted
+            # drafts — rejected ring writes are restored from the
+            # snapshot, each recurrent layer's state is selected off the
+            # verify trajectory (K/V length rewind stays with kv.rewind)
+            commit = np.where(decoding, n_acc + 1, 0).astype(np.int32)
+            self.kv.cache = self._state_store.commit(
+                prev_cache, self.kv.cache, traj, lengths_h, commit,
+                valids, chunk=k + 1)
         now = time.monotonic()
         for b in range(B):
             req = self.slots[b]
@@ -575,8 +663,11 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _tick_replay(self) -> None:
         """Seed-engine admission: replay the prompt one token per tick
-        through the decode path (kept for rotating-window/recurrent kinds
-        and as the benchmark baseline)."""
+        through the decode path.  No longer an auto fallback — every
+        decoder-only stack chunks — but kept as an explicit A/B debug
+        mode and the benchmark baseline (and the prefill path for the
+        whisper encoder-decoder, whose cross-attention has no chunk
+        body)."""
         self._admit()
         if all(s is None for s in self.slots):
             return
@@ -589,7 +680,7 @@ class ServeEngine:
         else:
             logits, self.kv.cache = self._step(
                 self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                self.kv.lengths)
+                self.kv.lengths, jnp.asarray(occupied, bool))
         self.model_calls += 1
         sampled = self._sample_rows(logits)
         lengths_h = np.asarray(self.kv.lengths)

@@ -48,9 +48,11 @@ mid-decode page growth (``ensure_decode_room``) cannot fail.
 """
 from __future__ import annotations
 
+import functools
 import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -58,8 +60,54 @@ from repro.configs.base import ModelConfig
 from repro.models import blocks, lm
 
 
+class StateStore:
+    """The carried-state rewind seam, owned beside the KV pool.
+
+    Rotating-window rings and recurrent states live in the same cache
+    pytree as the K/V slots, but they have *no length mask*: a
+    speculative verify mutates them for every draft position, accepted or
+    not, so the managers' mask-only ``rewind`` cannot undo a rejection.
+    The store commits a verify instead: the pre-verify cache is the
+    snapshot (JAX arrays are immutable — holding the reference costs
+    nothing), and :meth:`commit` restores rejected ring writes from it
+    and selects each recurrent layer's state off the trajectory
+    :func:`repro.models.lm.verify_chunk` returns (``with_traj=True``) —
+    see :func:`repro.models.lm.commit_verify` for the exact rule.
+
+    Owned by :class:`SlotCacheManager` (``.state``) whenever the stack
+    holds a non-global-attention kind; pure-attention stacks (and the
+    paged manager, which only they may use) have no carried state and no
+    store.
+    """
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._commit: Dict[int, object] = {}  # chunk width -> jitted fn
+
+    def commit(self, prev_cache: Dict, new_cache: Dict, traj: Dict,
+               lengths, counts, valids, *, chunk: int) -> Dict:
+        """Commit ``counts`` of the ``valids`` chunk tokens a verify at
+        base ``lengths`` applied per row; returns the committed cache."""
+        fn = self._commit.get(chunk)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                lm.commit_verify, self.cfg, chunk=chunk))
+            self._commit[chunk] = fn
+        return fn(prev_cache, new_cache, traj,
+                  jnp.asarray(lengths, jnp.int32),
+                  jnp.asarray(counts, jnp.int32),
+                  jnp.asarray(valids, jnp.int32))
+
+
 class SlotCacheManager:
-    """Owns the slot pool, per-slot lengths, and the cache pytree."""
+    """Owns the slot pool, per-slot lengths, and the cache pytree.
+
+    ``bounded=False`` (window-capped stacks: every layer a rotating
+    window or recurrent state, nothing addressed by absolute offset)
+    lifts the ``max_seq`` ceiling from the length accounting: slots are
+    still fixed-size device buffers, but a request may grow past
+    ``max_seq`` positions because no layer ever stores more than
+    ``min(len, W)`` of them."""
 
     def __init__(
         self,
@@ -70,10 +118,15 @@ class SlotCacheManager:
         layout: str = "stacked",
         dtype=jnp.bfloat16,
         with_cache: bool = True,
+        bounded: bool = True,
     ):
         self.cfg = cfg
         self.B = batch_slots
         self.max_seq = max_seq
+        self.bounded = bounded
+        self.state: Optional[StateStore] = (
+            StateStore(cfg)
+            if any(k != "attn" for k in cfg.block_pattern) else None)
         # with_cache=False: host metadata only — the sharded allocator
         # (serving/distributed) owns one stacked device pytree for all
         # shards instead of per-manager arrays
@@ -132,7 +185,7 @@ class SlotCacheManager:
         survive ``python -O``)."""
         if slot not in self._used:
             raise ValueError(f"rewind of unallocated slot {slot}")
-        if not 0 <= new_len <= self.max_seq:
+        if new_len < 0 or (self.bounded and new_len > self.max_seq):
             raise ValueError(
                 f"rewind of slot {slot} to {new_len} outside the cache "
                 f"(max_seq={self.max_seq})")
@@ -151,6 +204,8 @@ class SlotCacheManager:
         return len(self._used)
 
     def has_room(self, slot: int, n: int = 1) -> bool:
+        if not self.bounded:
+            return True  # window-capped: rings wrap, states are O(1)
         return self.length_of(slot) + n <= self.max_seq
 
 
@@ -176,9 +231,16 @@ class PagedCacheManager:
         dtype=jnp.bfloat16,
         with_cache: bool = True,
     ):
-        assert blocks.chunk_supported(cfg), (
-            "paged KV cache requires a global-attention stack",
-            cfg.block_pattern)
+        if not blocks.page_addressable(cfg):
+            # ValueError, not assert: the last barrier between a stack
+            # whose cache is not absolute-offset-addressable (rotating
+            # rings, carried states) and silent page corruption — it must
+            # survive ``python -O``.  The chunked *forward* path covers
+            # every kind; only this layout stays gated.
+            raise ValueError(
+                "paged KV cache requires a global-attention stack; "
+                f"{cfg.block_pattern} holds rotating-window/recurrent "
+                "kinds — serve them with kv_layout='stacked'")
         assert max_seq % page_size == 0, (
             "max_seq must be a page multiple so the gathered paged view has "
             f"exactly the contiguous layout's width ({max_seq} % {page_size})"

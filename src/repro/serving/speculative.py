@@ -188,9 +188,18 @@ class ModelDraft(DraftProposer):
         chunk_size: int = 32,
         dtype=jnp.bfloat16,
     ):
-        assert blocks.chunk_supported(cfg), (
-            "the draft model must support chunked prefill",
-            cfg.block_pattern)
+        if not blocks.page_addressable(cfg):
+            # ValueError, not assert (the guard must survive python -O):
+            # the draft cache rewinds by mask only — propose's frozen-row
+            # rewrites and commit's re-sync assume absolute-offset writes
+            # that length accounting can hide.  Rotating rings and
+            # recurrent states mutate in place and have no StateStore
+            # seam here; hybrid targets self-draft via the (free) n-gram
+            # proposer instead.
+            raise ValueError(
+                "proposer='model' needs a pure global-attention draft "
+                f"stack (got {cfg.block_pattern}); use proposer='ngram' "
+                "for rotating-window/recurrent targets")
         self.cfg = cfg
         self.params = params
         self.B = batch_slots

@@ -74,6 +74,32 @@ def main():
     print("greedy bit-exact vs single device: paged OK, stacked OK "
           "(4x1 and 2x2 shard geometries)")
 
+    # --- 1b. hybrid rotating-window/recurrent stack, sharded stacked ----
+    # the universal chunk body serves rglru+local_attn through the
+    # distributed tick too (auto layout = stacked: rings/states are not
+    # page-addressable); 2 slots per shard exercises the tag-along mask
+    # (an idle slot's ring/state must not commit on the batched step)
+    hcfg = get_config("recurrentgemma-9b").reduced()
+    hparams = lm.init(hcfg, jax.random.PRNGKey(1), max_seq=64)
+    hprompts = [list(rng.integers(1, hcfg.vocab_size, int(n)))
+                for n in (3, 40, 17, 37, 5, 9)]
+
+    def hserve(eng):
+        for p in hprompts:
+            eng.submit(p, max_new=4)
+        return {tuple(r.prompt): r.out for r in eng.run()}
+
+    hwant = hserve(ServeEngine(hcfg, hparams, batch_slots=4, max_seq=64,
+                               eos_id=-1, chunk_size=8))
+    heng = DistributedServeEngine(
+        hcfg, hparams, n_shards=2, slots_per_shard=2, max_seq=64,
+        eos_id=-1, chunk_size=8)
+    assert heng.kv_layout == "stacked", heng.kv_layout
+    hgot = hserve(heng)
+    assert hgot == hwant, (hgot, hwant)
+    print("hybrid (rglru+local_attn) greedy bit-exact vs single device: "
+          "OK (2x2 shard geometry, stacked layout)")
+
     # --- 2. shard locality ---------------------------------------------
     eng = engines["paged"]
     leaves = jax.tree_util.tree_leaves(eng.cache)

@@ -164,13 +164,25 @@ def test_spec_zero_draft_ticks_fall_back_to_plain_decode(gpt2_setup):
 
 
 def test_spec_requires_chunked_path():
-    """Replay-only stacks (no absolute-offset cache) cannot verify via a
-    chunked call: spec= must raise, not silently decode token-by-token."""
+    """Speculative decoding needs the chunked path (verification is one
+    chunked forward call): the explicit replay debug mode must raise, not
+    silently decode token-by-token.  Hybrid rotating-window/recurrent
+    stacks verify through the universal chunk body now, so the stack
+    itself no longer gates spec — their bit-exactness is asserted in
+    ``tests/test_hybrid_serving.py``."""
     cfg = get_config("recurrentgemma-9b").reduced()
     params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=32)
     with pytest.raises(ValueError, match="chunked"):
         ServeEngine(cfg, params, batch_slots=1, max_seq=32, eos_id=-1,
-                    spec=SpecConfig(k=2))
+                    prefill_mode="replay", spec=SpecConfig(k=2))
+    # auto selects chunked for the hybrid stack, and spec composes with it
+    eng = ServeEngine(cfg, params, batch_slots=1, max_seq=32, eos_id=-1,
+                      spec=SpecConfig(k=2))
+    assert eng.prefill_mode == "chunked"
+    # a verify writes k+1 ring positions: k+1 > W must refuse loudly
+    with pytest.raises(ValueError, match="ring"):
+        ServeEngine(cfg, params, batch_slots=1, max_seq=32, eos_id=-1,
+                    spec=SpecConfig(k=32))
 
 
 # ---------------------------------------------------------------------------
