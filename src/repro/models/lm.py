@@ -1020,6 +1020,128 @@ def sharded_prefill_into_slot(
     return fn(params, tokens, cache, slots, offsets, valids, actives)
 
 
+def sharded_verify_chunk(
+    params: Dict,
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    tokens: jax.Array,  # (D, Bs, C) i32 — [current, draft...] per slot
+    cache: Dict,  # leaves (D, ...) — shard axis leading everywhere
+    lengths: jax.Array,  # (D, Bs) i32 — verify base (max_seq parks a row)
+    *,
+    valids: Optional[jax.Array] = None,  # (D, Bs) i32 — real tokens/row
+    block_tables: Optional[jax.Array] = None,  # (D, Bs, n_pg) => paged
+    with_traj: bool = False,
+    axis: str = "shard",
+    gather_logits: bool = True,
+    dtype=jnp.bfloat16,
+):
+    """One speculative verify pass over every pool shard (per-device
+    :func:`verify_chunk` under ``shard_map``) — the distributed engine's
+    wave dispatch for ``spec`` mode.
+
+    Semantics per shard match the single-device entry point: rows flagged
+    inactive by ``lengths[b] >= max_seq`` write nothing (the other wave's
+    in-flight rows ride along parked), ``valids`` bounds ring/recurrent
+    writes for stacked hybrid stacks, and ``with_traj`` returns the
+    per-position state trajectory :func:`commit_verify` consumes.  With
+    ``gather_logits`` each shard's (Bs, C, V) verify logits ride the same
+    ring all-gather as decode, giving the replicated (D*Bs, C, V) batch
+    the host accept/reject step consumes.  K/V never leave their shard.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import collectives, compat
+
+    paged = block_tables is not None
+    has_valids = valids is not None
+    if paged and has_valids:
+        raise ValueError(
+            "sharded_verify_chunk: valids gating is not implemented for "
+            "the paged layout (paged stacks carry no ring/recurrent "
+            "state); park rows via lengths >= max_seq instead")
+
+    def body(p, toks, cache, lens, vals, bts):
+        out = verify_chunk(
+            p, cfg, toks[0], _shard_squeeze(cache), lens[0],
+            valids=(vals[0] if has_valids else None),
+            block_tables=(bts[0] if paged else None),
+            with_traj=with_traj, dtype=dtype)
+        if with_traj:
+            logits, new_cache, traj = out
+        else:
+            logits, new_cache = out
+        if gather_logits:
+            # ring all-gather concatenates the (Bs, C, V) blocks on the
+            # leading axis in shard order = the engine's global slot order
+            logits = collectives.ring_all_gather(logits, axis)
+        else:
+            logits = logits[None]
+        res = (logits, _shard_expand(new_cache))
+        if with_traj:
+            res = res + (_shard_expand(traj),)
+        return res
+
+    in_specs = [P(), P(axis), P(axis), P(axis)]
+    args = [params, tokens, cache, lengths]
+    if has_valids:
+        in_specs.append(P(axis))
+        args.append(valids)
+    if paged:
+        in_specs.append(P(axis))
+        args.append(block_tables)
+    out_specs = (P() if gather_logits else P(axis), P(axis))
+    if with_traj:
+        out_specs = out_specs + (P(axis),)
+
+    def wrapper(p, toks, c, lens, *rest):
+        i = 0
+        vals = None
+        if has_valids:
+            vals = rest[i]
+            i += 1
+        bts = rest[i] if paged else None
+        return body(p, toks, c, lens, vals, bts)
+
+    fn = compat.shard_map(wrapper, mesh=mesh, in_specs=tuple(in_specs),
+                          out_specs=out_specs)
+    return fn(*args)
+
+
+def sharded_commit_verify(
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    prev_cache: Dict,  # leaves (D, ...) — snapshot from before the verify
+    new_cache: Dict,  # leaves (D, ...) — current cache (post-verify)
+    traj: Dict,  # per-position trajectory from sharded_verify_chunk
+    lengths: jax.Array,  # (D, Bs) i32 — verify base lengths
+    counts: jax.Array,  # (D, Bs) i32 — accepted+1 per row (0 = untouched)
+    valids: jax.Array,  # (D, Bs) i32 — tokens the verify actually wrote
+    *,
+    chunk: int,
+    axis: str = "shard",
+):
+    """Per-shard :func:`commit_verify` under ``shard_map``: settle a
+    wave's speculative ring/recurrent writes without moving any state off
+    its shard.  Rows with ``counts == 0`` (the other wave, idle slots)
+    pass through ``new_cache`` untouched, so the commit may be applied
+    one tick late to a cache that other rows' dispatches have since
+    advanced."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import compat
+
+    def body(prev, new, tr, lens, cnts, vals):
+        out = commit_verify(
+            cfg, _shard_squeeze(prev), _shard_squeeze(new),
+            _shard_squeeze(tr), lens[0], cnts[0], vals[0], chunk=chunk)
+        return _shard_expand(out)
+
+    fn = compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis),) * 6, out_specs=P(axis))
+    return fn(prev_cache, new_cache, traj, lengths, counts, valids)
+
+
 def prefill(
     params: Dict,
     cfg: ModelConfig,

@@ -22,6 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.core.perfmodel import FPGAPerfModel
 
@@ -103,6 +105,68 @@ class ShardPlacement:
         if best > 0:  # commit to the copy-free link
             order = [i for i in order if hits[i] == best]
         return order
+
+
+class DecodeWaveScheduler:
+    """Wave-aware slot placement: assign decoding slots to ``n_waves``
+    phase-shifted decode waves — the paper's alternating dual-FPGA
+    batches, applied to the distributed engine's slot set.
+
+    The engine dispatches each wave's decode (or speculative verify)
+    separately within a tick, so one wave's logits fetch and input
+    staging always land while the *other* wave's device call is still in
+    flight — that shadow is what lifts the drain-phase overlap ratio to
+    ~1.  For the shadow to exist, membership must satisfy three host-side
+    invariants (pinned in ``tests/test_distributed_serving.py``):
+
+      * **waves never share a slot** — membership is a single array
+        ``wave[slot]``, and the engine only dispatches a slot in its own
+        wave once its previous results are consumed;
+      * **new decoding slots join the lightest wave** (ties break to the
+        lowest wave id, keeping assignment reproducible);
+      * **waves rebalance on completion** — when a wave runs out of
+        members while another still holds >= 2 movable slots, half of
+        them migrate over.  The moved slots idle for one tick (their old
+        wave already dispatched them this round), a bounded bubble that
+        buys back the dual-stream property for the rest of the drain;
+        only the final single-slot endgame runs unshadowed.
+    """
+
+    def __init__(self, n_slots: int, n_waves: int = 2):
+        assert n_waves >= 1 and n_slots >= 1
+        self.n_waves = n_waves
+        self.wave = np.full((n_slots,), -1, np.int64)  # -1 = unassigned
+
+    def counts(self) -> List[int]:
+        return [int((self.wave == w).sum()) for w in range(self.n_waves)]
+
+    def members(self, w: int) -> List[int]:
+        return [b for b in range(len(self.wave)) if self.wave[b] == w]
+
+    def release(self, slot: int) -> None:
+        """Drop a retired slot from its wave."""
+        self.wave[slot] = -1
+
+    def assign(self, movable: Sequence[int]) -> None:
+        """Place unassigned slots and rebalance emptied waves.
+
+        ``movable`` lists the decoding slots with no in-flight dispatch —
+        only these may join or change waves; a slot whose results are
+        still in flight stays put until consumed (the never-share-a-slot
+        invariant is enforced here, not patched up later).
+        """
+        movable = list(movable)
+        for b in movable:  # lightest wave first, lowest id on ties
+            if self.wave[b] < 0:
+                self.wave[b] = int(np.argmin(self.counts()))
+        for w in range(self.n_waves):
+            c = self.counts()
+            if c[w]:
+                continue
+            donor = int(np.argmax(c))
+            pool = [b for b in movable if self.wave[b] == donor]
+            for b in pool[:min(len(pool), c[donor] // 2)]:
+                self.wave[b] = w  # leave the donor its half
 
 
 class FIFOAdmission:

@@ -16,18 +16,29 @@ multi-FPGA LoopLynx deployment at shard_map level:
     double-buffered ring all-gather, the tick's activation collective);
     one :func:`repro.models.lm.sharded_prefill_into_slot` call per round
     prefills up to one chunk per shard.
+  * **Dual-stream decode waves** — the decoding slot set is split into
+    two phase-shifted waves (:class:`~repro.serving.admission.
+    DecodeWaveScheduler` — the paper's alternating dual-FPGA batches).
+    Each tick consumes and redispatches the waves in turn, so one wave's
+    ring-all-gather logits fetch and host-side sampling always land while
+    the *other* wave's device call is still in flight.  That shadow
+    exists in **pure-decode drain ticks too** — the phase where the
+    single-wave pipeline collapsed to exposed fetches (no prefill to hide
+    behind); only the final single-slot endgame runs unshadowed.
   * **Overlapped transfers** — the tick is software-pipelined so every
     host<->device transfer is staged behind in-flight compute
     (:class:`~repro.serving.distributed.transfer.TransferScheduler`
-    meters it as ``overlap_ratio``):
+    meters it as ``overlap_ratio``, attributed per phase):
 
-        phase A  dispatch this tick's prefill rounds
-                 (chunk shipping hides behind last tick's decode),
-        phase B  consume last tick's decode logits
-                 (the collective's fetch hides behind phase A's prefill),
-        phase C  dispatch this tick's decode,
-        phase D  consume this tick's prompt-completing prefill logits
-                 (hides behind phase C's decode).
+        phase A    dispatch this tick's prefill rounds (chunk shipping
+                   hides behind the waves' in-flight decodes),
+        phase B/C  per wave w in (0, 1):
+                     consume wave w's last results (the collective's
+                     fetch hides behind wave 1-w's in-flight call and
+                     phase A's prefills), then redispatch wave w (input
+                     staging hides the same way),
+        phase D    consume this tick's prompt-completing prefill logits
+                   (hides behind the waves' just-dispatched calls).
 
     Decode results are therefore emitted one tick after they are
     dispatched — a scheduling change only: greedy outputs are
@@ -35,6 +46,21 @@ multi-FPGA LoopLynx deployment at shard_map level:
     kv layouts; asserted in ``tests/subscripts/dist_serve_check.py``).
     Non-greedy sampling draws from the same per-request distributions but
     a differently-interleaved engine RNG stream.
+  * **Distributed speculative decode** — with ``spec=SpecConfig(...)``
+    every wave dispatch becomes one batched
+    :func:`repro.models.lm.sharded_verify_chunk` call: per-shard
+    proposals (n-gram tables or a draft model, keyed by global slot id =
+    shard-local state), accept/reject rides the same one-tick-delayed
+    result path, and rejection rolls each slot back on its own shard
+    (``kv.rewind`` releases paged draft pages; the hybrid stacked path
+    settles rings/states via ``StateStore.commit_sharded``).  Rows not in
+    the dispatched wave are parked (``lengths >= max_seq``, ``valids ==
+    0``): they write **nothing**, so a wave's verify can never corrupt
+    the other wave's in-flight draft positions.  In spec mode there is no
+    plain-decode fallback for that exact reason — a plain step's
+    full-shape tag-along write at the other wave's base position would
+    land inside its un-consumed verify.  Greedy spec streams stay
+    token-for-token identical to ``ServeEngine(spec=...)``.
 
 The admission policy remains host-local per shard (each pool shard prices
 requests in its own pages via ``FIFOAdmission.page_price``), exactly the
@@ -54,8 +80,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core import scheduler as sched
 from repro.models import blocks, lm
-from repro.serving import sampler as samplers
-from repro.serving.admission import FIFOAdmission, ShardPlacement
+from repro.serving import sampler as samplers, speculative
+from repro.serving.admission import (
+    DecodeWaveScheduler, FIFOAdmission, ShardPlacement)
 from repro.serving.distributed.sharded_kv import (
     ShardedPageAllocator, ShardedSlotAllocator)
 from repro.serving.distributed.transfer import TransferScheduler
@@ -86,6 +113,8 @@ class DistributedServeEngine:
         admission: Optional[FIFOAdmission] = None,
         placement: Optional[ShardPlacement] = None,
         act_dtype=None,
+        spec: Optional[speculative.SpecConfig] = None,
+        decode_waves: int = 2,
     ):
         if not blocks.chunk_capable(cfg):
             # ValueError, not assert: the tick is chunked-prefill-only
@@ -191,6 +220,46 @@ class DistributedServeEngine:
                     dtype=self.act_dtype))
         self._sample = jax.jit(samplers.sample_batch)
 
+        self.spec = spec
+        self.proposer: Optional[speculative.DraftProposer] = None
+        # hybrid stacked shards carry serving state with no length mask;
+        # their speculative commits go through the shard-local StateStore
+        # seam (None for paged / pure-attention stacks)
+        self._state_store = getattr(self.kv, "state", None)
+        if spec is not None:
+            if spec.k < 1:
+                raise ValueError(f"SpecConfig.k={spec.k} must be >= 1")
+            if "local_attn" in cfg.block_pattern:
+                W = min(cfg.window, max_seq)
+                if spec.k + 1 > W:
+                    raise ValueError(
+                        f"SpecConfig.k={spec.k}: a verify writes k+1 ring "
+                        f"positions but the rotating window holds {W} — "
+                        "state rewind needs k+1 <= W so an accepted write "
+                        "can never share a ring slot with a rejected one")
+            self.proposer = speculative.make_proposer(
+                spec, self.B, max_seq, chunk_size=self.chunk_size,
+                dtype=self.act_dtype)
+            if self.paged:
+                self._verify = jax.jit(
+                    lambda p, toks, cache, lens, bts:
+                    lm.sharded_verify_chunk(
+                        p, cfg, mesh, toks, cache, lens, block_tables=bts,
+                        dtype=self.act_dtype))
+            elif self._state_store is not None:
+                self._verify = jax.jit(
+                    lambda p, toks, cache, lens, valids:
+                    lm.sharded_verify_chunk(
+                        p, cfg, mesh, toks, cache, lens, valids=valids,
+                        with_traj=True, dtype=self.act_dtype))
+            else:
+                self._verify = jax.jit(
+                    lambda p, toks, cache, lens:
+                    lm.sharded_verify_chunk(
+                        p, cfg, mesh, toks, cache, lens,
+                        dtype=self.act_dtype))
+            self._accept = jax.jit(samplers.spec_accept_batch)
+
         self.slots: List[Optional[Request]] = [None] * self.B
         self.queue: deque = deque()
         self.finished: List[Request] = []
@@ -199,7 +268,16 @@ class DistributedServeEngine:
         self.model_calls = 0
         self.prefill_calls = 0
         self.stalled = 0  # unfinished requests when run() gave up
-        self._pending_decode = None  # (op, logits_dev, decoding mask)
+        self.spec_ticks = 0  # verify calls issued
+        self.spec_proposed = 0  # draft tokens submitted for verification
+        self.spec_accepted = 0  # draft tokens accepted
+        self.spec_emitted = 0  # tokens emitted off verify calls
+        self.n_waves = max(1, int(decode_waves))
+        self.waves = DecodeWaveScheduler(self.B, self.n_waves)
+        # per-wave in-flight dispatch: dicts made by _dispatch_wave, or
+        # None; the one-tick-delayed result path, one lane per wave
+        self._pending_wave: List[Optional[dict]] = [None] * self.n_waves
+        self.tick_wall: List[float] = []  # per-tick wall seconds
         self._busy_ticks = np.zeros((self.D,), np.int64)
         self.mdk_stats = sched.mdk_stats(cfg)
 
@@ -238,6 +316,8 @@ class DistributedServeEngine:
             self._topp[slot] = req.sampling.top_p
             s, ls = self.kv.shard_of(slot)
             self.cur_tok[s, ls, 0] = req.prompt[0]
+            if self.proposer is not None:
+                self.proposer.alloc(slot, req.prompt, shared_tokens)
 
     # ------------------------------------------------------------------
     def _emit(self, req: Request, tok: int, now: float) -> None:
@@ -255,6 +335,9 @@ class DistributedServeEngine:
             self.finished.append(req)
             self.slots[req.slot] = None
             self.kv.free(req.slot)
+            self.waves.release(req.slot)
+            if self.proposer is not None:
+                self.proposer.free(req.slot)
             self.cur_tok[s, ls, 0] = 0
         else:
             req.state = DECODE
@@ -344,19 +427,29 @@ class DistributedServeEngine:
             self.prefill_calls += 1
             req.filled += ch.n
             self.kv.advance(req.slot, ch.n)
+            if self.proposer is not None:
+                self.proposer.prefill_chunk(req.slot, toks[s], ch.start,
+                                            ch.n)
             if req.filled == len(req.prompt):
                 completions.append((s, req))
         return op, logits_d, completions
 
     # ------------------------------------------------------------------
     def tick(self) -> None:
-        """One pipelined engine tick (phases A-D, see module docstring)."""
+        """One pipelined engine tick (phases A, B/C per wave, D — see the
+        module docstring)."""
+        t0 = time.perf_counter()
         did = False
         tick_ops = []
 
-        # -- phase A: dispatch prefill rounds (hidden behind last decode)
+        # -- phase A: dispatch prefill rounds (hidden behind the waves'
+        #    in-flight decodes from last tick)
         self._admit()
         plans = self._plan_prefill()
+        # phase attribution for the transfer meter: a tick with prefill
+        # work is "prefill", a pure-decode tick is "drain" — the phase
+        # where the single-wave schedule used to collapse
+        self.xfer.set_phase("prefill" if any(plans) else "drain")
         pending_first = []  # (op, logits_dev, [(shard, req)])
         busy = np.zeros((self.D,), bool)
         while any(plans):
@@ -368,46 +461,16 @@ class DistributedServeEngine:
                 pending_first.append((op, logits_d, completions))
             did = True
 
-        # -- phase B: consume last tick's decode (hidden behind phase A) --
-        if self._pending_decode is not None:
-            op, logits_d, decoding = self._pending_decode
-            self._pending_decode = None
-            logits_h = self.xfer.fetch("decode.logits", logits_d, of=op)
-            sampled = self._sample_rows(logits_h)
-            now = time.monotonic()
-            for b, req in enumerate(self.slots):
-                if req is not None and req.state == DECODE and decoding[b]:
-                    self._emit(req, int(sampled[b]), now)
-            did = True
+        # -- phases B/C, once per wave: consume the wave's last results,
+        #    then redispatch it.  Wave w's fetch and input staging hide
+        #    behind wave 1-w's still-in-flight op (and phase A's prefill
+        #    ops) — the dual-stream shadow that holds in drain ticks too.
+        for w in range(self.n_waves):
+            did |= self._consume_wave(w)
+            did |= self._dispatch_wave(w, busy)
 
-        # -- phase C: dispatch this tick's decode step --------------------
-        decoding = [r is not None and r.state == DECODE for r in self.slots]
-        if any(decoding):
-            if self.paged:
-                self.kv.ensure_decode_room(decoding)
-                logits_d, self.cache = self._step(
-                    self.params,
-                    self._stage("decode.tokens", self.cur_tok), self.cache,
-                    self._stage("decode.lengths", self.kv.lengths_array()),
-                    self._stage("decode.block_tables",
-                                self.kv.block_tables_array()))
-            else:
-                logits_d, self.cache = self._step(
-                    self.params,
-                    self._stage("decode.tokens", self.cur_tok), self.cache,
-                    self._stage("decode.lengths", self.kv.lengths_array()),
-                    self._stage("decode.actives",
-                                np.asarray(decoding).reshape(
-                                    self.D, self.Bs)))
-            self.model_calls += 1
-            self.kv.advance_mask(decoding)
-            op = self.xfer.dispatch("decode", logits_d)
-            self._pending_decode = (op, logits_d, decoding)
-            busy |= np.asarray(decoding).reshape(
-                self.D, self.Bs).any(axis=1)
-            did = True
-
-        # -- phase D: first tokens off completed prefills (hidden behind C)
+        # -- phase D: first tokens off completed prefills (hidden behind
+        #    the waves' just-dispatched calls)
         for op, logits_d, completions in pending_first:
             logits_h = self.xfer.fetch("prefill.logits", logits_d, of=op)
             now = time.monotonic()
@@ -419,6 +482,190 @@ class DistributedServeEngine:
         if did:
             self._busy_ticks += busy
             self.ticks += 1
+            self.tick_wall.append(time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
+    def _consume_wave(self, w: int) -> bool:
+        """Phase B for wave ``w``: fetch its in-flight logits (hidden
+        behind the other wave's op), sample/accept, emit."""
+        pend = self._pending_wave[w]
+        if pend is None:
+            return False
+        self._pending_wave[w] = None
+        kind = pend["kind"]
+        logits_h = self.xfer.fetch(
+            f"{kind}.w{w}.logits", pend["logits"], of=pend["op"])
+        now = time.monotonic()
+        if kind == "decode":
+            sampled = self._sample_rows(logits_h)
+            for b, req in enumerate(self.slots):
+                if req is not None and req.state == DECODE and pend["mask"][b]:
+                    self._emit(req, int(sampled[b]), now)
+        else:
+            self._consume_verify(pend, logits_h, now)
+        return True
+
+    def _dispatch_wave(self, w: int, busy: np.ndarray) -> bool:
+        """Phase C for wave ``w``: assign/rebalance free decoding slots,
+        dispatch the wave's decode step (or speculative verify)."""
+        decoding = np.asarray(
+            [r is not None and r.state == DECODE for r in self.slots])
+        in_flight = np.zeros((self.B,), bool)
+        for pend in self._pending_wave:
+            if pend is not None:
+                in_flight |= np.asarray(pend["mask"])
+        # only slots with no un-consumed dispatch may join or change
+        # waves (waves never share a slot); rebalance-on-completion runs
+        # here, so a collapsed wave refills from the survivor's freed
+        # slots — the moved slots idle this round (bounded bubble)
+        free = decoding & ~in_flight
+        self.waves.assign(np.flatnonzero(free))
+        mask = free & (np.asarray(self.waves.wave) == w)
+        if not mask.any():
+            return False
+        if self.spec is not None:
+            self._dispatch_verify_wave(w, mask)
+        else:
+            self._dispatch_plain_wave(w, mask)
+        self.model_calls += 1
+        busy |= mask.reshape(self.D, self.Bs).any(axis=1)
+        return True
+
+    def _dispatch_plain_wave(self, w: int, mask: np.ndarray) -> None:
+        """One single-token sharded decode step over wave ``w``'s slots.
+
+        The call is full-shape: non-wave rows tag along.  Their writes
+        land at their *staged* length — one past any in-flight wave's
+        real write (lengths advance at dispatch), so the garbage is
+        overwritten by that row's own next dispatch and masked until then
+        (unallocated paged positions resolve to the null page)."""
+        if self.paged:
+            self.kv.ensure_decode_room(mask)
+            logits_d, self.cache = self._step(
+                self.params,
+                self._stage(f"decode.w{w}.tokens", self.cur_tok),
+                self.cache,
+                self._stage(f"decode.w{w}.lengths",
+                            self.kv.lengths_array()),
+                self._stage(f"decode.w{w}.block_tables",
+                            self.kv.block_tables_array()))
+        else:
+            logits_d, self.cache = self._step(
+                self.params,
+                self._stage(f"decode.w{w}.tokens", self.cur_tok),
+                self.cache,
+                self._stage(f"decode.w{w}.lengths",
+                            self.kv.lengths_array()),
+                self._stage(f"decode.w{w}.actives",
+                            mask.reshape(self.D, self.Bs)))
+        self.kv.advance_mask(mask)
+        op = self.xfer.dispatch(f"decode.w{w}", logits_d)
+        self._pending_wave[w] = {
+            "kind": "decode", "op": op, "logits": logits_d, "mask": mask}
+
+    def _dispatch_verify_wave(self, w: int, mask: np.ndarray) -> None:
+        """One sharded speculative verify over wave ``w``'s slots.
+
+        In spec mode EVERY wave dispatch is a verify — even when no slot
+        proposed anything (the zero-draft plain-step optimization of the
+        single-device engine is deliberately not taken): a plain step's
+        tag-along rows write at their base position, which for the other
+        wave's in-flight verify rows is a *draft* position that must
+        survive until its commit.  Verify parks non-wave rows completely
+        (``lengths >= max_seq`` drops every write; ``valids == 0`` gates
+        ring/state commits), so the waves cannot corrupt each other.
+
+        Host lengths do NOT advance at dispatch; the consume-side
+        ``kv.rewind(slot, L + accepted + 1)`` settles them (and returns
+        rejected paged pages to the slot's reservation)."""
+        k = self.spec.k
+        lengths_h = self.kv.lengths_array().reshape(self.B).copy()
+        caps = speculative.draft_caps(self.slots, lengths_h, mask, k,
+                                      self.seq_ceiling)
+        draft, counts = self.proposer.propose(
+            self.slots, self.cur_tok.reshape(self.B, 1), lengths_h, mask,
+            caps)
+        toks = np.zeros((self.B, k + 1), np.int32)
+        toks[:, 0] = self.cur_tok.reshape(self.B)
+        toks[:, 1:] = draft
+        vlen = np.where(mask, lengths_h, self.max_seq).astype(np.int32)
+        valids = np.where(mask, counts + 1, 0).astype(np.int32)
+        toks_d = toks.reshape(self.D, self.Bs, k + 1)
+        vlen_d = vlen.reshape(self.D, self.Bs)
+        prev_cache = None
+        traj = None
+        if self.paged:
+            self.kv.ensure_decode_room(mask, counts + 1)
+            logits_d, self.cache = self._verify(
+                self.params,
+                self._stage(f"verify.w{w}.tokens", toks_d), self.cache,
+                self._stage(f"verify.w{w}.lengths", vlen_d),
+                self._stage(f"verify.w{w}.block_tables",
+                            self.kv.block_tables_array()))
+        elif self._state_store is not None:
+            # the verify base IS the rewind snapshot (immutable arrays);
+            # its commit applies one tick later to whatever the cache has
+            # become — safe because commit is per-row identity for rows
+            # with counts == 0 and nothing else touches the wave's rows
+            # while it is in flight (the other wave's verify parks them)
+            prev_cache = self.cache
+            logits_d, self.cache, traj = self._verify(
+                self.params,
+                self._stage(f"verify.w{w}.tokens", toks_d), self.cache,
+                self._stage(f"verify.w{w}.lengths", vlen_d),
+                self._stage(f"verify.w{w}.valids",
+                            valids.reshape(self.D, self.Bs)))
+        else:
+            logits_d, self.cache = self._verify(
+                self.params,
+                self._stage(f"verify.w{w}.tokens", toks_d), self.cache,
+                self._stage(f"verify.w{w}.lengths", vlen_d))
+        self.spec_ticks += 1
+        op = self.xfer.dispatch(f"verify.w{w}", logits_d)
+        self._pending_wave[w] = {
+            "kind": "verify", "op": op, "logits": logits_d, "mask": mask,
+            "draft": draft, "counts": counts, "lengths": lengths_h,
+            "valids": valids, "prev_cache": prev_cache, "traj": traj}
+
+    def _consume_verify(self, pend: dict, logits_h: np.ndarray,
+                        now: float) -> None:
+        """Accept/reject a wave's verify results one tick after dispatch:
+        the standard spec settle (accept a draft prefix + one bonus or
+        corrective token per row), then per-shard length/page rewind and
+        — for hybrid stacked — the sharded StateStore commit."""
+        mask, draft = pend["mask"], pend["draft"]
+        counts, base = pend["counts"], pend["lengths"]
+        self.rng, sub = jax.random.split(self.rng)
+        n_acc, next_tok = jax.device_get(self._accept(
+            jnp.asarray(logits_h), jnp.asarray(draft),
+            jnp.asarray(counts), sub, jnp.asarray(self._temp),
+            jnp.asarray(self._topk), jnp.asarray(self._topp)))
+        if self._state_store is not None:
+            commit = np.where(mask, n_acc + 1, 0).astype(np.int32)
+            self.cache = self._state_store.commit_sharded(
+                self.mesh, pend["prev_cache"], self.cache, pend["traj"],
+                base.reshape(self.D, self.Bs),
+                commit.reshape(self.D, self.Bs),
+                pend["valids"].reshape(self.D, self.Bs),
+                chunk=self.spec.k + 1)
+        for b in range(self.B):
+            req = self.slots[b]
+            if not mask[b] or req is None:
+                continue
+            m = int(n_acc[b])
+            self.spec_proposed += int(counts[b])
+            self.spec_accepted += m
+            L = int(base[b])
+            for tok in list(draft[b, :m]) + [int(next_tok[b])]:
+                self._emit(req, int(tok), now)
+                self.spec_emitted += 1
+                if req.done:
+                    break
+            else:
+                # request lives on: commit cur_tok + the m accepted
+                # drafts on the slot's own shard
+                self.kv.rewind(b, L + m + 1)
+                self.proposer.commit(b, req.prompt + req.out, L + m + 1)
 
     # ------------------------------------------------------------------
     def run(self, max_ticks: int = 10_000, *,
@@ -431,7 +678,7 @@ class DistributedServeEngine:
                 self,
                 lambda: (self.queue
                          or any(s is not None for s in self.slots)
-                         or self._pending_decode is not None),
+                         or any(p is not None for p in self._pending_wave)),
                 max_ticks, on_stall)
         finally:
             self.xfer.sync()
@@ -447,8 +694,11 @@ class DistributedServeEngine:
         call between a jit warm-up run and the measured workload so ticks,
         model calls, utilization, and overlap cover the workload only).
         Only valid while drained (no in-flight tick state)."""
-        assert self._pending_decode is None
+        assert all(p is None for p in self._pending_wave)
         self.ticks = self.model_calls = self.prefill_calls = 0
+        self.spec_ticks = self.spec_proposed = 0
+        self.spec_accepted = self.spec_emitted = 0
+        self.tick_wall = []
         self._busy_ticks[:] = 0
         self.xfer.reset()
 
@@ -461,8 +711,28 @@ class DistributedServeEngine:
             "stalled": self.stalled,
             "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
             "n_shards": self.D,
+            "decode_waves": self.n_waves,
             "mean_device_utilization": float(np.mean(self.utilization())),
         })
+        if self.tick_wall:
+            wall = np.sort(np.asarray(self.tick_wall))
+            out["tick_p50_ms"] = float(
+                1e3 * wall[len(wall) // 2])
+            out["tick_p99_ms"] = float(
+                1e3 * wall[min(len(wall) - 1,
+                               int(np.ceil(0.99 * len(wall))) - 1)])
+        if self.spec is not None:
+            out.update({
+                "spec_ticks": self.spec_ticks,
+                "spec_proposed": self.spec_proposed,
+                "spec_accepted": self.spec_accepted,
+                "spec_emitted": self.spec_emitted,
+                "acceptance_rate": (
+                    self.spec_accepted / max(self.spec_proposed, 1)),
+                "tokens_per_verify_call": (
+                    self.spec_emitted / max(self.spec_ticks, 1)),
+                "draft_calls": getattr(self.proposer, "draft_calls", 0),
+            })
         out.update(self.xfer.stats())
         if self.paged:
             out.update(self.kv.stats())

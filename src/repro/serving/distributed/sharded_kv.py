@@ -77,6 +77,14 @@ class _ShardedBase:
         s, ls = self.shard_of(slot)
         self.shards[s].free(ls)
 
+    def rewind(self, slot: int, new_len: int) -> None:
+        """Roll a global slot back to ``new_len`` on its own shard — the
+        distributed speculative-decode rejection path.  The shard manager
+        enforces its own floor (a paged shard also returns wholly-rolled-
+        back pages to its local pool and re-credits the reservation)."""
+        s, ls = self.shard_of(slot)
+        self.shards[s].rewind(ls, new_len)
+
     # -- batched device-call views (D leading axis) ---------------------
     def lengths_array(self) -> np.ndarray:
         """(D, Bs) i32 — per-shard slot lengths, ready to stage."""
@@ -169,10 +177,16 @@ class ShardedPageAllocator(_ShardedBase):
                 "per shard or lower max_new")
         return None
 
-    def ensure_decode_room(self, mask) -> None:
+    def ensure_decode_room(self, mask, n=1) -> None:
+        """Per-shard decode-room guarantee; ``n`` may be a scalar or a
+        per-global-slot array (a speculative wave needs counts+1 slots of
+        growth per row)."""
         mask = np.asarray(mask).reshape(self.n_shards, self.slots_per_shard)
+        ns = np.broadcast_to(
+            np.asarray(n, np.int64), (self.n_shards * self.slots_per_shard,)
+        ).reshape(mask.shape)
         for s, m in enumerate(self.shards):
-            m.ensure_decode_room(mask[s])
+            m.ensure_decode_room(mask[s], ns[s])
 
     # -- batched device-call views --------------------------------------
     def block_tables_array(self) -> np.ndarray:
@@ -232,6 +246,14 @@ class ShardedSlotAllocator(_ShardedBase):
             SlotCacheManager(cfg, slots_per_shard, max_seq, with_cache=False)
             for _ in range(n_shards)
         ]
+
+    @property
+    def state(self):
+        """The stack's :class:`~repro.serving.kv_cache.StateStore` (None
+        for pure-attention stacks).  Shards are homogeneous, so shard 0's
+        store serves the whole pool — it holds only the config and a jit
+        cache; the distributed engine calls its ``commit_sharded``."""
+        return self.shards[0].state
 
     def alloc(self) -> Optional[int]:
         """Claim a slot on the least-loaded shard (the same

@@ -575,18 +575,11 @@ class ServeEngine:
         """
         B, k = self.B, self.spec.k
         lengths_h = np.asarray(self.kv.lengths).copy()
-        caps = np.zeros((B,), np.int32)
-        for b, req in enumerate(self.slots):
-            if decoding[b]:
-                # cap so every written position stays below the cache
-                # ceiling (window-capped stacks have none: rings wrap,
-                # states are O(1)) and prompt+max_new (the reservation
-                # bound)
-                cap = min(k, req.max_new - len(req.out))
-                if self.seq_ceiling is not None:
-                    cap = min(cap,
-                              self.seq_ceiling - 1 - int(lengths_h[b]))
-                caps[b] = max(0, cap)
+        # cap so every written position stays below the cache ceiling
+        # (window-capped stacks have none: rings wrap, states are O(1))
+        # and prompt+max_new (the reservation bound)
+        caps = speculative.draft_caps(self.slots, lengths_h, decoding, k,
+                                      self.seq_ceiling)
         draft, counts = self.proposer.propose(
             self.slots, self.cur_tok, lengths_h, decoding, caps)
         if not counts.any():

@@ -83,6 +83,7 @@ class StateStore:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self._commit: Dict[int, object] = {}  # chunk width -> jitted fn
+        self._commit_sharded: Dict[tuple, object] = {}  # (chunk, mesh id)
 
     def commit(self, prev_cache: Dict, new_cache: Dict, traj: Dict,
                lengths, counts, valids, *, chunk: int) -> Dict:
@@ -93,6 +94,25 @@ class StateStore:
             fn = jax.jit(functools.partial(
                 lm.commit_verify, self.cfg, chunk=chunk))
             self._commit[chunk] = fn
+        return fn(prev_cache, new_cache, traj,
+                  jnp.asarray(lengths, jnp.int32),
+                  jnp.asarray(counts, jnp.int32),
+                  jnp.asarray(valids, jnp.int32))
+
+    def commit_sharded(self, mesh, prev_cache: Dict, new_cache: Dict,
+                       traj: Dict, lengths, counts, valids, *,
+                       chunk: int) -> Dict:
+        """Distributed flavour of :meth:`commit`: every cache/traj leaf
+        carries a leading shard axis and the commit runs per shard under
+        ``shard_map`` (:func:`repro.models.lm.sharded_commit_verify`), so
+        rings and recurrent states never leave their device.  ``lengths``
+        / ``counts`` / ``valids`` are (D, Bs)."""
+        key = (chunk, id(mesh))
+        fn = self._commit_sharded.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                lm.sharded_commit_verify, self.cfg, mesh, chunk=chunk))
+            self._commit_sharded[key] = fn
         return fn(prev_cache, new_cache, traj,
                   jnp.asarray(lengths, jnp.int32),
                   jnp.asarray(counts, jnp.int32),

@@ -62,6 +62,26 @@ class SpecConfig:
     draft_params: Any = None
 
 
+def draft_caps(slots, lengths, active, k: int, seq_ceiling) -> np.ndarray:
+    """Per-slot draft-length caps shared by the single-device and
+    distributed engines: never draft past the request's remaining
+    generation budget (``max_new`` minus what it already emitted) or past
+    the cache ceiling (the verify writes ``counts+1`` positions starting
+    at ``lengths[b]``).  ``slots`` may index engine-global ids — proposer
+    state is keyed the same way, so in the distributed engine it is
+    effectively shard-local (slot ids are ``shard * slots_per_shard +
+    local``), with no cross-shard coupling."""
+    caps = np.zeros((len(slots),), np.int32)
+    for b, req in enumerate(slots):
+        if req is None or not active[b]:
+            continue
+        cap = min(k, req.max_new - len(req.out))
+        if seq_ceiling is not None:
+            cap = min(cap, seq_ceiling - 1 - int(lengths[b]))
+        caps[b] = max(0, cap)
+    return caps
+
+
 class DraftProposer:
     """Interface the engine drives.  ``propose`` is batched over slots;
     the lifecycle hooks mirror the target engine's slot lifecycle so

@@ -163,6 +163,46 @@ def test_lengths_and_block_tables_views(cfg):
 # ---------------------------------------------------------------------------
 
 
+def test_transfer_overlap_vacuous_is_one():
+    """Zero recorded events must read as 1.0 (vacuously all-hidden), not
+    divide by zero — the drain-phase ratio of a run with no drain ticks,
+    or a freshly reset scheduler, is 'nothing was exposed'."""
+    xf = TransferScheduler()
+    assert xf.overlap_ratio() == 1.0
+    assert xf.byte_overlap_ratio() == 1.0
+    s = xf.stats()
+    assert s["overlap_ratio"] == 1.0 and s["byte_overlap_ratio"] == 1.0
+    assert xf.phase_stats() == {}
+    xf.stage("a", np.zeros((4,), np.int32))
+    xf.reset()
+    assert xf.overlap_ratio() == 1.0  # reset returns to vacuous
+
+
+def test_transfer_phase_attribution():
+    import jax.numpy as jnp
+
+    xf = TransferScheduler()
+    xf.set_phase("prefill")
+    xf.stage("a", np.zeros((4,), np.int32))  # exposed, prefill
+    op = xf.dispatch("compute", jnp.zeros((2,)))
+    xf.set_phase("drain")
+    xf.stage("b", np.zeros((4,), np.int32))  # hidden, drain
+    xf.fetch("c", jnp.ones((3,)), of=op)  # exposed, drain
+    ps = xf.phase_stats()
+    assert set(ps) == {"prefill", "drain"}
+    assert ps["prefill"]["transfers"] == 1
+    assert ps["prefill"]["overlap_ratio"] == 0.0
+    assert ps["drain"]["transfers"] == 2
+    assert ps["drain"]["transfers_hidden"] == 1
+    assert ps["drain"]["overlap_ratio"] == 0.5
+    s = xf.stats()
+    assert s["overlap_ratio_drain"] == 0.5
+    assert s["overlap_ratio_prefill"] == 0.0
+    assert s["transfers_prefill"] == 1 and s["transfers_drain"] == 2
+    assert s["transfer_bytes_exposed"] == 16 + 12  # a + c
+    xf.sync()
+
+
 def test_transfer_overlap_accounting():
     import jax.numpy as jnp
 
@@ -182,6 +222,71 @@ def test_transfer_overlap_accounting():
     assert 0 < xf.overlap_ratio() < 1
     assert xf.stats()["max_transfer_bytes"] == 16
     xf.sync()
+
+
+# ---------------------------------------------------------------------------
+# decode-wave scheduler: host logic
+# ---------------------------------------------------------------------------
+
+
+def test_waves_never_share_a_slot():
+    from repro.serving.admission import DecodeWaveScheduler
+
+    ws = DecodeWaveScheduler(6, n_waves=2)
+    ws.assign(range(6))
+    members = [set(ws.members(w)) for w in range(2)]
+    assert members[0] & members[1] == set()
+    assert members[0] | members[1] == set(range(6))
+    # membership survives arbitrary assign() churn without overlap
+    for movable in ([0, 2], [5], [], list(range(6))):
+        ws.assign(movable)
+        members = [set(ws.members(w)) for w in range(2)]
+        assert members[0] & members[1] == set()
+
+
+def test_wave_assignment_joins_lightest():
+    from repro.serving.admission import DecodeWaveScheduler
+
+    ws = DecodeWaveScheduler(5, n_waves=2)
+    ws.assign([0])  # ties break to wave 0
+    assert ws.wave[0] == 0
+    ws.assign([1])  # wave 1 is now lighter
+    assert ws.wave[1] == 1
+    ws.assign([2, 3])  # alternate as counts even out
+    assert ws.counts() == [2, 2]
+    ws.release(0)
+    ws.assign([4])  # wave 0 lighter again after the release
+    assert ws.wave[4] == 0
+
+
+def test_wave_rebalance_on_completion():
+    from repro.serving.admission import DecodeWaveScheduler
+
+    ws = DecodeWaveScheduler(8, n_waves=2)
+    ws.assign(range(8))
+    assert ws.counts() == [4, 4]
+    for b in ws.members(1):
+        ws.release(b)  # wave 1 drains out entirely
+    assert ws.counts() == [4, 0]
+    survivors = ws.members(0)
+    ws.assign(survivors)  # rebalance: half of wave 0 migrates
+    assert ws.counts() == [2, 2]
+    assert set(ws.members(0)) | set(ws.members(1)) == set(survivors)
+    # in-flight (non-movable) slots never migrate
+    ws2 = DecodeWaveScheduler(4, n_waves=2)
+    ws2.assign(range(4))
+    for b in ws2.members(1):
+        ws2.release(b)
+    pinned = ws2.members(0)
+    ws2.assign([])  # nothing movable: wave 1 stays empty this tick
+    assert ws2.members(0) == pinned and ws2.counts()[1] == 0
+    # a lone movable survivor stays put (c[donor] // 2 == 0): the final
+    # single-slot endgame runs unshadowed rather than ping-ponging
+    ws3 = DecodeWaveScheduler(2, n_waves=2)
+    ws3.assign([0])
+    assert ws3.counts() == [1, 0]
+    ws3.assign([0])
+    assert ws3.counts() == [1, 0]
 
 
 # ---------------------------------------------------------------------------
