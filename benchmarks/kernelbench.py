@@ -53,6 +53,21 @@ def rows() -> List[Tuple[str, float, str]]:
     out.append((f"kernel/mha_decode_b{B}h{H}s{S}", _time(f, q, k, v, ln),
                 "jnp-path CPU"))
 
+    # Paged verify — k+1 query positions over block-table-addressed pages
+    # (the speculative-verify inner loop; jnp oracle gathers, the Pallas
+    # path streams live pages through the scalar-prefetch index map)
+    B, C, H, Hkv, D, ps, n_pg = 8, 4, 16, 16, 64, 16, 16
+    P = 1 + B * n_pg
+    qv = jnp.asarray(rng.normal(size=(B, C, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, Hkv, ps, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, Hkv, ps, D)), jnp.float32)
+    bt = jnp.asarray(1 + rng.permutation(B * n_pg).reshape(B, n_pg),
+                     jnp.int32)
+    base = jnp.asarray(rng.integers(0, n_pg * ps - C + 1, (B,)), jnp.int32)
+    f = jax.jit(lambda *a: ops.paged_verify(*a, backend="jnp"))
+    out.append((f"kernel/paged_verify_b{B}c{C}h{H}pg{n_pg}",
+                _time(f, qv, kp, vp, base, bt), "jnp-path CPU"))
+
     # Fused LN&Res
     x = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
     r = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)

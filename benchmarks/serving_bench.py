@@ -35,7 +35,14 @@ n-gram proposer).  Tokens must be identical, the speculative engine must
 finish with **fewer model calls**, and its **tokens-per-model-call** must
 exceed 1.5 (each verify call emits the accepted draft run + one
 bonus/corrective token per slot); acceptance rate comes from
-``stats()["acceptance_rate"]``.
+``stats()["acceptance_rate"]``.  The part also reports the verify-path
+copy traffic (live-page positions touched by the in-place paged verify
+vs the retired full-``max_seq`` gather/scatter), runs adaptive draft
+sizing (``SpecConfig(adaptive=True)``) on both the repetitive stream
+(tokens/model-call must not regress) and a low-acceptance draft-model
+stream (drafted-token waste must shrink and tokens per total call —
+target + draft forwards — must improve), and writes a
+``BENCH_spec.json`` artifact.
 
 Part "hybrid" (``--part hybrid``; also runs under ``--part all``) drives
 the mixed-length workload through a rotating-window + recurrent stack
@@ -43,7 +50,12 @@ the mixed-length workload through a rotating-window + recurrent stack
 The universal chunked path must generate exactly the replay tokens while
 spending **>= 2x fewer ticks** — the PR-5 acceptance gate: a P-token
 prompt costs ``ceil(P / chunk)`` chunked calls instead of P replay
-ticks, now for window/recurrent kinds too.
+ticks, now for window/recurrent kinds too.  A second section serves a
+MIXED stack (attn + local_attn + rglru) on the shared-system-prompt
+workload through the per-kind paged layout: all three layouts must be
+token-identical and prefix sharing must link shared attn prompt pages
+(>= 30% fewer page allocations — a saving that was structurally zero
+while paged refused hybrids).  Writes a ``BENCH_hybrid.json`` artifact.
 
 Part 3 (``--part dist``; auto-spawned in a forced 4-device subprocess
 when the main process has fewer devices) drives the mixed-length workload
@@ -156,8 +168,25 @@ def build_repetitive_workload(rng, n_requests, vocab, *, pattern_len=8,
             for i in range(n_requests)]
 
 
+def _finite_scalars(s):
+    return {k: s[k] for k in sorted(s)
+            if isinstance(s[k], (int, float)) and np.isfinite(s[k])}
+
+
 def run_spec_part(args) -> None:
-    """Part "spec": speculative decoding vs the plain engine."""
+    """Part "spec": speculative decoding vs the plain engine, adaptive
+    draft sizing, and the verify-path copy-traffic accounting.
+
+    Two workloads: the repetitive high-acceptance stream (n-gram
+    self-drafting; adaptive caps must NOT regress tokens/model-call) and
+    a low-acceptance stream (a differently-initialized draft model keeps
+    proposing, mostly wrong; adaptive caps must shrink the wasted draft
+    work and improve tokens per total call — target + draft forwards).
+    Writes a ``BENCH_spec.json`` artifact.
+    """
+    import json
+    import os
+
     from repro.serving.speculative import SpecConfig
 
     cfg = get_config("gpt2-345m").reduced()
@@ -171,45 +200,117 @@ def run_spec_part(args) -> None:
           f"tokens each, {args.slots} slots, k={args.spec_k} (n-gram "
           "self-drafting)")
 
-    rows = {}
-    for name, spec in (("plain", None), ("spec", SpecConfig(k=args.spec_k))):
+    def drive(spec, workload, m_new):
         eng = ServeEngine(cfg, params, batch_slots=args.slots,
                           max_seq=max_seq, eos_id=-1, chunk_size=args.chunk,
                           spec=spec)
-        for p in prompts:
-            eng.submit(list(p), max_new=max_new)
+        for p in workload:
+            eng.submit(list(p), max_new=m_new)
         t0 = time.time()
         eng.run(max_ticks=50_000)
-        wall = time.time() - t0
         s = eng.stats()
-        rows[name] = {
-            "outs": {r.rid: r.out for r in eng.finished},
-            "ticks": s["ticks"],
-            "calls": s["model_calls"],
-            "tok_per_call": s["tokens_per_model_call"],
-            "accept": s.get("acceptance_rate", float("nan")),
-            "tok_per_verify": s.get("tokens_per_verify_call", float("nan")),
-            "wall_s": wall,
-        }
+        s["wall_s"] = time.time() - t0
+        emitted = s["tokens_per_model_call"] * s["model_calls"]
+        s["tokens_per_total_call"] = emitted / max(
+            s["model_calls"] + s.get("draft_calls", 0), 1)
+        return {"outs": {r.rid: r.out for r in eng.finished}, "s": s}
 
-    print(f"\n{'engine':8s} {'ticks':>6s} {'calls':>6s} {'tok/call':>9s} "
+    rows = {
+        "plain": drive(None, prompts, max_new),
+        "spec": drive(SpecConfig(k=args.spec_k), prompts, max_new),
+        "spec+adapt": drive(SpecConfig(k=args.spec_k, adaptive=True),
+                            prompts, max_new),
+    }
+    print(f"\n{'engine':10s} {'ticks':>6s} {'calls':>6s} {'tok/call':>9s} "
           f"{'accept':>7s} {'tok/verify':>11s}")
     for name, r in rows.items():
-        print(f"{name:8s} {r['ticks']:6d} {r['calls']:6d} "
-              f"{r['tok_per_call']:9.2f} {r['accept']:7.2f} "
-              f"{r['tok_per_verify']:11.2f}")
+        s = r["s"]
+        print(f"{name:10s} {s['ticks']:6.0f} {s['model_calls']:6.0f} "
+              f"{s['tokens_per_model_call']:9.2f} "
+              f"{s.get('acceptance_rate', float('nan')):7.2f} "
+              f"{s.get('tokens_per_verify_call', float('nan')):11.2f}")
 
-    assert rows["spec"]["outs"] == rows["plain"]["outs"], (
+    # verify-path copy traffic: the in-place paged verify touches each
+    # row's live pages; "dense" is the retired full-max_seq gather/scatter
+    st = rows["spec"]["s"]
+    touched, dense = (st["verify_touched_positions"],
+                      st["verify_dense_positions"])
+    print(f"\nverify copy traffic: {touched} live-page positions vs "
+          f"{dense} dense-view positions "
+          f"({touched / max(dense, 1):.2f}x of the retired gather)")
+    assert 0 < touched < dense, (
+        "paged verify must touch only live pages, strictly less than the "
+        f"retired full-view gather ({touched} vs {dense})")
+
+    assert (rows["spec"]["outs"] == rows["plain"]["outs"]
+            == rows["spec+adapt"]["outs"]), (
         "speculative decoding changed the greedy stream")
-    assert rows["spec"]["calls"] < rows["plain"]["calls"], (
-        "speculation must reduce model calls "
-        f"({rows['spec']['calls']} vs {rows['plain']['calls']})")
-    assert rows["spec"]["tok_per_call"] > 1.5, (
-        "speculative decode must emit > 1.5 tokens per model call on the "
-        f"repetitive workload (got {rows['spec']['tok_per_call']:.2f})")
-    print(f"\nmodel-call reduction: {rows['plain']['calls']} -> "
-          f"{rows['spec']['calls']} "
-          f"({rows['plain']['calls'] / rows['spec']['calls']:.2f}x)")
+    assert rows["spec"]["s"]["model_calls"] < \
+        rows["plain"]["s"]["model_calls"], "speculation must reduce calls"
+    for name in ("spec", "spec+adapt"):
+        tpc = rows[name]["s"]["tokens_per_model_call"]
+        assert tpc > 1.5, (
+            f"{name} must emit > 1.5 tokens per model call on the "
+            f"repetitive workload (got {tpc:.2f})")
+    assert (rows["spec+adapt"]["s"]["tokens_per_model_call"]
+            >= 0.9 * rows["spec"]["s"]["tokens_per_model_call"]), (
+        "adaptive draft sizing regressed the high-acceptance workload")
+
+    # -- low-acceptance stream: adaptive caps cut the wasted draft work --
+    draft_params = lm.init(cfg, jax.random.PRNGKey(7), max_seq=max_seq)
+    low = build_workload(rng, 6, cfg.vocab_size)
+    mk = dict(proposer="model", draft_cfg=cfg, draft_params=draft_params)
+    low_rows = {
+        "plain": drive(None, low, 24),
+        "fixed": drive(SpecConfig(k=args.spec_k, **mk), low, 24),
+        "adapt": drive(SpecConfig(k=args.spec_k, adaptive=True, **mk),
+                       low, 24),
+    }
+    print(f"\nlow-acceptance stream (draft model != target, {len(low)} "
+          f"mixed prompts, 24 new tokens):")
+    print(f"{'engine':8s} {'proposed':>9s} {'accept':>7s} "
+          f"{'draft_calls':>12s} {'tok/total':>10s}")
+    for name in ("fixed", "adapt"):
+        s = low_rows[name]["s"]
+        print(f"{name:8s} {s['spec_proposed']:9.0f} "
+              f"{s['acceptance_rate']:7.2f} {s['draft_calls']:12.0f} "
+              f"{s['tokens_per_total_call']:10.2f}")
+    assert (low_rows["adapt"]["outs"] == low_rows["fixed"]["outs"]
+            == low_rows["plain"]["outs"]), (
+        "adaptive draft sizing changed the greedy stream")
+    assert (low_rows["adapt"]["s"]["spec_proposed"]
+            < low_rows["fixed"]["s"]["spec_proposed"]), (
+        "adaptive caps must shrink drafted tokens under heavy rejection")
+    assert (low_rows["adapt"]["s"]["tokens_per_total_call"]
+            > low_rows["fixed"]["s"]["tokens_per_total_call"]), (
+        "adaptive caps must improve tokens per total (target+draft) call "
+        "on the low-acceptance workload")
+
+    art = {
+        "bench": "serving_spec",
+        "config": {
+            "model": cfg.name, "slots": args.slots, "chunk": args.chunk,
+            "max_seq": max_seq, "seed": args.seed, "k": args.spec_k,
+            "repetitive": {"requests": len(prompts), "max_new": max_new},
+            "low_acceptance": {"requests": len(low), "max_new": 24,
+                               "proposer": "model"},
+        },
+        "metrics": {
+            "repetitive": {n: _finite_scalars(r["s"])
+                           for n, r in rows.items()},
+            "low_acceptance": {n: _finite_scalars(r["s"])
+                               for n, r in low_rows.items()},
+        },
+    }
+    out_path = os.path.abspath("BENCH_spec.json")
+    with open(out_path, "w") as f:
+        json.dump(art, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+    print(f"\nmodel-call reduction: {rows['plain']['s']['model_calls']:.0f}"
+          f" -> {rows['spec']['s']['model_calls']:.0f} "
+          f"({rows['plain']['s']['model_calls'] / rows['spec']['s']['model_calls']:.2f}x)")
     print("SERVING_BENCH_SPEC_OK")
 
 
@@ -251,6 +352,74 @@ def run_hybrid_part(args) -> None:
     assert tick_gain >= 2.0, (
         "chunked prefill must cut >= 2x the ticks replay spends on the "
         f"windowed/recurrent mixed-length workload (got {tick_gain:.2f}x)")
+
+    # -- per-kind paged layout: a MIXED stack (global attention beside a
+    # rotating window and a recurrent layer) pages its attn layers and
+    # links shared prompt pages — a saving that was structurally 0 when
+    # paged refused every hybrid stack
+    import dataclasses
+    import json
+    import os
+
+    mixed = dataclasses.replace(
+        cfg, name="hybrid-mixed-reduced",
+        block_pattern=("attn", "local_attn", "rglru"))
+    mparams = lm.init(mixed, jax.random.PRNGKey(0), max_seq=max_seq)
+    shared = build_shared_workload(rng, args.requests, mixed.vocab_size,
+                                   args.sys_len)
+    print(f"\nmixed-stack shared-prefix workload: {mixed.block_pattern}, "
+          f"{args.requests} requests, {args.sys_len}-token system prompt, "
+          f"page_size={args.page_size}")
+    variants = {
+        "stacked": dict(kv_layout="stacked"),
+        "paged": dict(kv_layout="paged", prefix_sharing=False),
+        "paged+share": dict(kv_layout="paged", prefix_sharing=True),
+    }
+    srows = {
+        name: run_mode(mixed, mparams, shared, mode="chunked",
+                       chunk=args.chunk, slots=args.slots,
+                       max_new=args.max_new, max_seq=max_seq,
+                       page_size=args.page_size, **kw)
+        for name, kw in variants.items()
+    }
+    print(f"\n{'layout':12s} {'ttft_ms':>9s} {'pages':>6s} {'hits':>6s}")
+    for name, r in srows.items():
+        print(f"{name:12s} {r['ttft_s']*1e3:9.2f} {r['pages']:6d} "
+              f"{r['hit_pages']:6d}")
+    souts = [r["outs"] for r in srows.values()]
+    assert souts[0] == souts[1] == souts[2], (
+        "per-kind KV layout changed the mixed stack's greedy stream")
+    assert srows["paged+share"]["hit_pages"] > 0, (
+        "a mixed stack must link shared prompt pages (previously 0)")
+    saved = 1 - srows["paged+share"]["pages"] / max(srows["paged"]["pages"],
+                                                    1)
+    print(f"mixed-stack pages saved vs no-sharing paged: {saved:.1%}")
+    assert saved >= 0.30, (
+        "per-kind prefix sharing must allocate >=30% fewer attn pages on "
+        f"the shared-system-prompt workload (got {saved:.1%})")
+
+    art = {
+        "bench": "serving_hybrid",
+        "config": {
+            "windowed_model": cfg.name, "mixed_pattern": mixed.block_pattern,
+            "requests": args.requests, "chunk": args.chunk,
+            "slots": args.slots, "max_new": args.max_new,
+            "max_seq": max_seq, "sys_len": args.sys_len,
+            "page_size": args.page_size, "seed": args.seed,
+        },
+        "metrics": {
+            "windowed": {m: _finite_scalars(r) for m, r in rows.items()},
+            "mixed_shared_prefix": {m: _finite_scalars(r)
+                                    for m, r in srows.items()},
+            "tick_gain": tick_gain,
+            "mixed_pages_saved_frac": saved,
+        },
+    }
+    out_path = os.path.abspath("BENCH_hybrid.json")
+    with open(out_path, "w") as f:
+        json.dump(art, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
     print("SERVING_BENCH_HYBRID_OK")
 
 

@@ -23,6 +23,8 @@ from repro.kernels.mha_kernel import mha_decode as _mha_pallas
 from repro.kernels.mp_kernel import mp_matmul as _mp_pallas
 from repro.kernels.paged_mha_kernel import \
     paged_mha_decode as _paged_mha_pallas
+from repro.kernels.paged_verify_kernel import \
+    paged_verify as _paged_verify_pallas
 
 
 def _on_tpu() -> bool:
@@ -145,6 +147,39 @@ def paged_mha_decode(
         k_pages,
         v_pages,
         lengths,
+        block_table,
+        window=window,
+        interpret=(backend == "interpret"),
+    )
+
+
+def paged_verify(
+    q,
+    k_pages,
+    v_pages,
+    base,
+    block_table,
+    *,
+    window: int = 0,
+    backend: str = "auto",
+):
+    """Chunked causal attention over a paged KV cache (verify/prefill).
+
+    ``q`` is ``(B, C, H, D)`` — C query positions per row, position ``j``
+    of row ``b`` at logical position ``base[b] + j`` — attending pages
+    the row's ``block_table`` names, whose contents already include the
+    chunk's own K/V (the in-place write).  The Pallas path streams only
+    the live pages through the scalar-prefetch index map; the jnp oracle
+    gathers a contiguous view first and is the semantic ground truth.
+    """
+    if not _use_pallas(backend):
+        return ref.paged_verify_ref(
+            q, k_pages, v_pages, base, block_table, window=window)
+    return _paged_verify_pallas(
+        q,
+        k_pages,
+        v_pages,
+        base,
         block_table,
         window=window,
         interpret=(backend == "interpret"),

@@ -1,0 +1,155 @@
+"""Paged verify Pallas kernel — k+1 query positions over paged K/V.
+
+The speculative-verify (and chunked-prefill) analogue of
+``paged_mha_kernel.py``: instead of one query token per row, a chunk of
+``C = k+1`` query positions attends **in place** against the row's
+block-table-addressed pages.  The chunk's own K/V have already been
+written into the pages (the in-place verify write), so the kernel is
+pure causal attention with a per-row offset: query ``j`` of row ``b``
+sits at logical position ``base[b] + j`` and sees every cached position
+``<= base[b] + j``.
+
+The block table and base offsets are **scalar-prefetch** operands
+(``PrefetchScalarGridSpec``): the K/V BlockSpec index maps read
+``bt[b, s]`` before the body runs, so grid step ``(b, h, s)`` DMAs
+exactly the page sequence ``b`` owns at logical block ``s``.  Traffic is
+therefore proportional to the *live pages* named by the table — the
+whole point of this kernel: the jnp fallback (and the retired
+``_paged_view_batch`` gather/scatter it replaces) materializes each
+row's full ``max_seq`` view per call.
+
+Online softmax runs per query row (axis-1 reductions over the page's
+``ps`` keys, a ``(C, 1)`` running max/denominator).  Rows the window
+leaves with no valid key finalize through the zero-denominator clamp
+(NaN-free, like an empty row in the decode kernel); rows parked past the
+pool (``base >= n_pg * ps``) produce output the caller's length
+accounting never reads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import compat
+
+_NEG_INF = -1e30
+
+
+def _paged_verify_kernel(
+    bt_ref,  # (B, n_pg) i32 scalar-prefetch (consumed by index maps)
+    base_ref,  # (B, 1) i32 scalar-prefetch — per-row first query position
+    q_ref,  # (1, C, 1, D)
+    k_ref,  # (1, 1, ps, D) — the page named by bt[b, s]
+    v_ref,  # (1, 1, ps, D)
+    o_ref,  # (1, C, 1, D)
+    acc_ref,  # (C, D) f32 scratch
+    m_ref,  # (C, 1) f32 scratch
+    l_ref,  # (C, 1) f32 scratch
+    *,
+    n_pg: int,
+    ps: int,
+    window: int,
+):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    c, d = q_ref.shape[1], q_ref.shape[3]
+    q = q_ref[0, :, 0].astype(jnp.float32)  # (C, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (ps, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (ps, D)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (1.0 / (d**0.5))  # (C, ps)
+
+    base = base_ref[b, 0]
+    pos = s * ps + jax.lax.broadcasted_iota(jnp.int32, (c, ps), 1)
+    qpos = base + jax.lax.broadcasted_iota(jnp.int32, (c, ps), 0)
+    valid = pos <= qpos
+    if window:
+        valid = jnp.logical_and(valid, pos > qpos - window)
+    scores = jnp.where(valid, scores, _NEG_INF)
+
+    m_prev = m_ref[...]  # (C, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)  # (C, 1)
+    p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (C, ps)
+
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_pg - 1)
+    def _final():
+        l = l_ref[...]  # (C, 1)
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)[None, :, None]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_verify(
+    q: jax.Array,  # (B, C, H, D)
+    k_pages: jax.Array,  # (P, Hkv, ps, D) page pool
+    v_pages: jax.Array,  # (P, Hkv, ps, D)
+    base: jax.Array,  # (B,) i32 — first query position per row
+    block_table: jax.Array,  # (B, n_pg) i32 page ids
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    B, C, H, D = q.shape
+    _, Hkv, ps, _ = k_pages.shape
+    n_pg = block_table.shape[1]
+    assert H % Hkv == 0, (q.shape, k_pages.shape)
+    group = H // Hkv
+    grid = (B, H, n_pg)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block table + bases feed the index maps
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, 1, D), lambda b, h, s, bt, bs: (b, 0, h, 0)),
+            pl.BlockSpec(
+                (1, 1, ps, D),
+                lambda b, h, s, bt, bs: (bt[b, s], h // group, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, ps, D),
+                lambda b, h, s, bt, bs: (bt[b, s], h // group, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, C, 1, D), lambda b, h, s, bt, bs: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, D), jnp.float32),
+            pltpu.VMEM((C, 1), jnp.float32),
+            pltpu.VMEM((C, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_verify_kernel, n_pg=n_pg, ps=ps, window=window),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        block_table.astype(jnp.int32),
+        base.reshape(B, 1).astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )

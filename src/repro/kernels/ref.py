@@ -121,6 +121,57 @@ def paged_mha_decode_ref(
 
 
 # ---------------------------------------------------------------------------
+# Paged verify oracle: k+1 query positions vs block-table-addressed pages
+# ---------------------------------------------------------------------------
+
+
+def paged_verify_ref(
+    q: jax.Array,  # (B, C, H, D) — C = k+1 chunk positions per row
+    k_pages: jax.Array,  # (P, Hkv, ps, D)
+    v_pages: jax.Array,  # (P, Hkv, ps, D)
+    base: jax.Array,  # (B,) i32 — row's first query position (its length)
+    block_table: jax.Array,  # (B, n_pg) i32
+    window: int = 0,
+) -> jax.Array:
+    """Chunked causal attention over a paged KV cache.
+
+    Query position ``j`` of row ``b`` sits at logical position
+    ``base[b] + j`` and attends every cached position ``<=`` itself — the
+    chunk's own K/V are assumed already written into the pages (the
+    in-place verify/prefill write), so the mask is pure causality plus
+    the optional sliding window.  Rows parked at ``base >= n_pg * ps``
+    attend only positions the caller's length accounting masks out — the
+    caller never reads their output; a row the window leaves with no
+    valid key at all yields the zero vector (NaN-free), mirroring the
+    kernel's zero-denominator clamp.
+    """
+    B, C, H, D = q.shape
+    Hkv = k_pages.shape[1]
+    group = H // Hkv
+    k = paged_gather_ref(k_pages, block_table)  # (B, Hkv, S, D)
+    v = paged_gather_ref(v_pages, block_table)
+    S = k.shape[2]
+    qg = q.reshape(B, C, Hkv, group, D)
+    scores = jnp.einsum(
+        "bchgd,bhsd->bhgcs", qg, k,
+        preferred_element_type=jnp.float32,
+    ) / jnp.sqrt(float(D))  # (B, Hkv, g, C, S)
+    pos = jnp.arange(S)[None, None, None, None, :]
+    qpos = (base[:, None] + jnp.arange(C)[None, :])[:, None, None, :, None]
+    valid = pos <= qpos
+    if window:
+        valid = valid & (pos > qpos - window)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(valid.any(axis=-1, keepdims=True), p, 0.0)
+    out = jnp.einsum(
+        "bhgcs,bhsd->bchgd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, C, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Fused LN&Res oracle: residual add + norm (+ per-token int8 quant epilogue)
 # ---------------------------------------------------------------------------
 

@@ -274,6 +274,7 @@ def paged_decode_attention(
     lengths: jax.Array,  # (B,) tokens already cached (position of new one)
     block_table: jax.Array,  # (B, n_pg) i32 page ids per sequence
     *,
+    active: Optional[jax.Array] = None,  # (B,) bool — rows really decoding
     name: str = "",
 ):
     """One-token cached attention against a paged KV cache.
@@ -283,25 +284,97 @@ def paged_decode_attention(
     prefix sharing only ever shares *full, immutable* prompt pages — so the
     batched scatter cannot collide between live requests; idle rows all
     target the reserved null page 0, where any write order is acceptable
-    because its content is never unmasked).  Attention then runs through
-    the paged Fused-MHA MDK (``ops.paged_mha_decode``), which is bit-exact
-    against :func:`decode_attention` on the same logical cache content.
+    because its content is never unmasked).  Rows the ``active`` mask
+    declares as tag-alongs (mid-prefill or empty slots riding the batched
+    engine step) park their write past the block table, which resolves to
+    the null page — NOT at ``lengths[b]``: with per-kind layouts a
+    prefilling sharer's length points INTO its linked prefix pages, and an
+    unparked tag-along write there would corrupt the prefix owner's live
+    K/V.  Attention then runs through the paged Fused-MHA MDK
+    (``ops.paged_mha_decode``), which is bit-exact against
+    :func:`decode_attention` on the same logical cache content.
 
     Returns (out (B,1,D), new_k_pages, new_v_pages).
     """
     B = x.shape[0]
     ps = k_pages.shape[2]
+    n_pg = block_table.shape[1]
     q, k, v = _project_qkv(p, cfg, x, name)  # (B,1,H,hd) / (B,1,Hkv,hd)
     if cfg.pos == "rope":
         pos = lengths[:, None]  # (B, 1) — position of the new token
         q = rope(q, pos, cfg.rope_theta)
         k = rope(k, pos, cfg.rope_theta)
-    page = block_table[jnp.arange(B), lengths // ps]  # (B,)
-    off = lengths % ps
+    wpos = (lengths if active is None
+            else jnp.where(active, lengths, n_pg * ps))
+    blk = wpos // ps
+    page = jnp.where(
+        blk < n_pg,
+        block_table[jnp.arange(B), jnp.minimum(blk, n_pg - 1)], 0)
+    off = wpos % ps
     k_pages = k_pages.at[page, :, off].set(k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[page, :, off].set(v[:, 0].astype(v_pages.dtype))
     out = ops.paged_mha_decode(
         q[:, 0], k_pages, v_pages, lengths + 1, block_table
     )  # (B, H, hd)
     out = out.reshape(B, 1, cfg.q_dim)
+    return linear(p["out"], out, name + ".out"), k_pages, v_pages
+
+
+def paged_chunk_attention(
+    p: Dict,
+    x: jax.Array,  # (B, C, D) chunk of prompt / draft tokens
+    cfg: ModelConfig,
+    k_pages: jax.Array,  # (P, Hkv, ps, hd) global page pool
+    v_pages: jax.Array,
+    positions: jax.Array,  # (B, C) absolute positions (contiguous per row)
+    block_tables: jax.Array,  # (B, n_pg) i32 page ids per sequence
+    *,
+    name: str = "",
+):
+    """Multi-token cached attention **in place** over a paged KV cache.
+
+    The chunked analogue of :func:`paged_decode_attention`, serving both
+    chunked prefill (``positions = offset + arange(C)``) and speculative
+    verify (``positions = lengths + arange(C)``): the chunk's K/V are
+    scattered directly into the pages the block table names for each
+    position, then the chunk queries attend through the paged verify MDK
+    (``ops.paged_verify``) with ``base = positions[:, 0]`` — no gathered
+    ``max_seq`` view exists at any point, so copy traffic is the chunk
+    write plus the live pages the kernel streams.
+
+    Write-collision safety is the decode-path invariant: positions at or
+    past a row's committed length live in decode-tail/prompt pages that
+    row uniquely owns (prefix sharing only links *full, immutable* prompt
+    pages below the rewind floor, and prefill resumes at the first
+    unshared page boundary), so the batched scatter cannot touch another
+    row's live content.  Positions whose logical block is out of range
+    (parked verify rows at ``max_seq``, a last chunk hanging past the
+    pool) or whose table entry is unallocated resolve to the null page 0,
+    whose content is never unmasked.  The block gather is masked
+    **explicitly**: jnp clamps out-of-range gather indices, which would
+    silently redirect a parked row's write into the table's *last* entry
+    — a real page — instead of the null page.
+
+    Returns (out (B,C,D), new_k_pages, new_v_pages).
+    """
+    B, C = x.shape[:2]
+    ps = k_pages.shape[2]
+    n_pg = block_tables.shape[1]
+    q, k, v = _project_qkv(p, cfg, x, name)  # (B,C,H,hd) / (B,C,Hkv,hd)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    blk = positions // ps  # (B, C)
+    page = jnp.where(
+        blk < n_pg,
+        jnp.take_along_axis(block_tables, jnp.clip(blk, 0, n_pg - 1),
+                            axis=1),
+        0)  # (B, C)
+    off = positions % ps
+    k_pages = k_pages.at[page, :, off].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[page, :, off].set(v.astype(v_pages.dtype))
+    out = ops.paged_verify(
+        q, k_pages, v_pages, positions[:, 0], block_tables
+    )  # (B, C, H, hd)
+    out = out.reshape(B, C, cfg.q_dim)
     return linear(p["out"], out, name + ".out"), k_pages, v_pages

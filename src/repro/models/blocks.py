@@ -135,15 +135,27 @@ def cross_kv(p_attn, encoder_out, cfg: ModelConfig):
 
 
 def page_addressable(cfg: ModelConfig) -> bool:
-    """Paged KV caches cover global-attention decoder-only stacks: a page
-    pool is addressed by absolute position, while rotating-window rings
-    (slot = pos % W) and carried recurrent states have no absolute-offset
-    layout.  The *chunked forward path* is universal — every block kind
-    prefills/verifies through :func:`block_apply_chunk`; only the paged
-    cache layout remains gated on this predicate."""
+    """True when EVERY layer's cache is addressed by absolute position —
+    a pure global-attention decoder-only stack.  The paged *layout* no
+    longer requires this (see :func:`paged_capable`: mixed stacks put
+    their ``attn`` layers on pages and keep rings/states slot-resident);
+    what still does is any path that rewinds by length mask alone, e.g.
+    the speculative draft model's cache."""
     return (not cfg.is_encoder_decoder) and all(
         k == "attn" for k in cfg.block_pattern
     )
+
+
+def paged_capable(cfg: ModelConfig) -> bool:
+    """True when the stack has at least one global-attention layer to put
+    on pages.  The per-kind paged layout serves each ``attn`` layer from
+    the refcounted page pool (prefix sharing, page-priced admission)
+    while rotating-window rings (slot = pos % W) and carried recurrent
+    states — which have no absolute-offset layout — stay slot-resident
+    beside it.  A stack with no ``attn`` layer at all has nothing to
+    page: it serves through the stacked layout (and, being
+    :func:`window_capped`, without a length ceiling)."""
+    return (not cfg.is_encoder_decoder) and "attn" in cfg.block_pattern
 
 
 def chunk_capable(cfg: ModelConfig) -> bool:
@@ -226,6 +238,7 @@ def block_apply_chunk(
     *,
     positions: jax.Array,  # (B, C) absolute positions
     valids: Optional[jax.Array] = None,  # (B,) real tokens per row (def C)
+    block_tables: Optional[jax.Array] = None,  # (B, n_pg) => paged attn
     moe_cf: Optional[float] = None,
     name: str = "",
 ) -> Tuple[jax.Array, Dict, Optional[Dict]]:
@@ -235,7 +248,12 @@ def block_apply_chunk(
 
       * ``attn`` — absolute-offset cache writes + causal chunk attention
         (:func:`repro.models.attention.chunk_attention`); padding above a
-        row's real tokens lands past the prompt and stays masked.
+        row's real tokens lands past the prompt and stays masked.  With
+        ``block_tables`` the layer's cache entry is the global page pool
+        and writes/attention go through
+        :func:`~repro.models.attention.paged_chunk_attention` in place —
+        no gathered view.  Non-``attn`` kinds of a mixed paged stack
+        ignore the table: their entries stay slot-resident.
       * ``local_attn`` — rotated ring writes at ``pos % W`` with the chunk
         attending over the live window
         (:func:`~repro.models.attention.chunk_attention_rotating`); ring
@@ -258,9 +276,14 @@ def block_apply_chunk(
     traj: Optional[Dict] = None
     h = apply_norm(p["ln1"], x, cfg.norm)
     if kind == "attn":
-        out, k_c, v_c = attention.chunk_attention(
-            p["attn"], h, cfg, cache["k"], cache["v"], positions,
-            name=name + ".attn")
+        if block_tables is not None:
+            out, k_c, v_c = attention.paged_chunk_attention(
+                p["attn"], h, cfg, cache["k"], cache["v"], positions,
+                block_tables, name=name + ".attn")
+        else:
+            out, k_c, v_c = attention.chunk_attention(
+                p["attn"], h, cfg, cache["k"], cache["v"], positions,
+                name=name + ".attn")
         new_cache: Dict = {"k": k_c, "v": v_c}
     elif kind == "local_attn":
         limits = positions[:, 0] + valids
@@ -333,25 +356,30 @@ def block_apply_step(
 
     ``active`` masks *state commits* for rows riding the batched call
     without really decoding (a serving engine steps every slot; rows
-    mid-chunked-prefill or empty just tag along).  Global-attention
-    writes need no mask — an inactive row's write at ``lengths[b]``
-    stays length-masked and is overwritten by the row's next real write
-    at that position — but rotating rings and recurrent states mutate
-    in place with no mask, so an unmasked tag-along step would consume
-    state the row's owner never produced.  ``None`` commits every row
-    (the replay/generate paths, where all rows step one real token).
+    mid-chunked-prefill or empty just tag along).  Slot-resident
+    global-attention writes need no mask — an inactive row's write at
+    ``lengths[b]`` stays length-masked and is overwritten by the row's
+    next real write at that position — but rotating rings and recurrent
+    states mutate in place with no mask, so an unmasked tag-along step
+    would consume state the row's owner never produced; and a *paged*
+    attention write must park on the null page instead (with per-kind
+    prefix sharing, a prefilling sharer's ``lengths[b]`` points into
+    pages another row owns — see
+    :func:`~repro.models.attention.paged_decode_attention`).  ``None``
+    commits every row (the replay/generate paths, where all rows step
+    one real token).
     """
     prev_cache = cache
     h = apply_norm(p["ln1"], x, cfg.norm)
     if kind in ("attn", "local_attn"):
-        if block_table is not None:
-            if kind != "attn":
-                raise NotImplementedError(
-                    "paged KV cache covers global-attention stacks only "
-                    f"(got block kind {kind!r})")
+        # per-kind cache layouts: in a paged (possibly mixed) stack only
+        # the global-attention layers live on pages — a rotating ring has
+        # no absolute-offset layout, so a local_attn layer keeps its
+        # slot-resident cache and simply ignores the block table
+        if block_table is not None and kind == "attn":
             out, k_c, v_c = attention.paged_decode_attention(
                 p["attn"], h, cfg, cache["k"], cache["v"], lengths,
-                block_table, name=name + ".attn",
+                block_table, active=active, name=name + ".attn",
             )
         elif kind == "local_attn":
             W = cache["k"].shape[2]

@@ -292,43 +292,63 @@ def loss_fn(
 # ---------------------------------------------------------------------------
 
 
+def _paged_gate(cfg: ModelConfig, what: str) -> None:
+    """Refuse the paged layout for stacks with no global-attention layer,
+    naming every offending layer (kind + index, not just the pattern
+    tuple) so mixed-stack misconfigurations are debuggable.  ValueError,
+    not assert: the guard is the last barrier between a non-pageable
+    stack and silent cache corruption under ``python -O``."""
+    if blocks.paged_capable(cfg):
+        return
+    bad = ", ".join(
+        f"layer {i} ({cfg.block_kind(i)})" for i in range(cfg.n_layers)
+        if cfg.block_kind(i) != "attn")
+    raise ValueError(
+        f"{what} requires at least one global-attention layer for the "
+        f"paged layout, but every layer of this stack is non-pageable "
+        f"({bad}) — serve it with the stacked layout")
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               layout: str = "stacked", dtype=jnp.bfloat16) -> Dict:
+               layout: str = "stacked", dtype=jnp.bfloat16, *,
+               slots: Optional[int] = None,
+               slot_seq: Optional[int] = None) -> Dict:
     """``layout="stacked"`` / ``"layers"``: contiguous per-slot regions —
     ``batch`` cache slots of ``max_seq`` positions each.  ``layout="paged"``:
-    the leading axis is a global *page pool* instead of the slot batch —
-    ``batch`` pages of ``max_seq``(= page_size) tokens each, addressed
-    through per-request block tables (see ``serving/kv_cache.py``).  The
-    paged layout is only defined for global-attention stacks
-    (:func:`repro.models.blocks.page_addressable`); rotating-window and
-    recurrent caches are not page-addressable (the chunked *forward* path
-    covers every kind — only this layout stays gated)."""
-    if layout == "paged" and not blocks.page_addressable(cfg):
-        # ValueError, not assert: the guard is the last barrier between a
-        # non-pageable stack and silent cache corruption under python -O
-        raise ValueError(
-            "paged KV cache requires a global-attention stack; "
-            f"{cfg.block_pattern} holds rotating-window/recurrent kinds — "
-            "serve it with the stacked layout")
+    per-kind cache layouts — every ``attn`` layer's leading axis is a
+    global *page pool* instead of the slot batch (``batch`` pages of
+    ``max_seq``(= page_size) tokens each, addressed through per-request
+    block tables; see ``serving/kv_cache.py``), while rotating-window
+    rings and recurrent states — which have no absolute-offset layout —
+    stay slot-resident with ``slots`` slots of ``slot_seq`` positions.
+    A mixed stack therefore needs ``slots``/``slot_seq``; a pure
+    global-attention stack ignores them.  Only stacks with no ``attn``
+    layer at all are refused (:func:`repro.models.blocks.paged_capable`)."""
+    if layout == "paged":
+        _paged_gate(cfg, "init_cache")
+        mixed = not blocks.page_addressable(cfg)
+        if mixed and (slots is None or slot_seq is None):
+            raise ValueError(
+                "a mixed paged stack keeps its non-attn state slot-resident"
+                " — pass slots= and slot_seq= alongside the page pool dims")
     period = _period(cfg)
     n_per, n_rest = _layer_counts(cfg)
     if layout == "layers":
         n_per, n_rest = 0, cfg.n_layers
 
+    def entry(kind):
+        if layout == "paged" and kind != "attn":
+            return blocks.block_init_cache(cfg, kind, slots, slot_seq, dtype)
+        return blocks.block_init_cache(cfg, kind, batch, max_seq, dtype)
+
     def one_period():
-        return tuple(
-            blocks.block_init_cache(cfg, cfg.block_pattern[i], batch,
-                                    max_seq, dtype)
-            for i in range(period)
-        )
+        return tuple(entry(cfg.block_pattern[i]) for i in range(period))
 
     cache: Dict = {
         "periods": _stack([one_period() for _ in range(n_per)])
         if n_per else (),
         "rest": [
-            blocks.block_init_cache(
-                cfg, cfg.block_kind(n_per * period + j), batch, max_seq, dtype)
-            for j in range(n_rest)
+            entry(cfg.block_kind(n_per * period + j)) for j in range(n_rest)
         ],
     }
     if cfg.is_encoder_decoder:
@@ -349,9 +369,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def init_cache_abstract(cfg, batch, max_seq, layout: str = "stacked",
-                        dtype=jnp.bfloat16):
+                        dtype=jnp.bfloat16, *, slots=None, slot_seq=None):
     return jax.eval_shape(
-        lambda: init_cache(cfg, batch, max_seq, layout=layout, dtype=dtype))
+        lambda: init_cache(cfg, batch, max_seq, layout=layout, dtype=dtype,
+                           slots=slots, slot_seq=slot_seq))
 
 
 def decode_step(
@@ -466,55 +487,54 @@ def _slot_scatter(cache: Dict, view: Dict, slot) -> Dict:
     return new_cache
 
 
-def _paged_view(cache: Dict, bt_row: jax.Array) -> Dict:
-    """Gather one request's pages into the contiguous slot-view shape the
-    chunk path expects: ``(1, Hkv, n_pg*ps, hd)`` per layer (with the
-    period stack keeping pages on axis 1, where the batch axis sits in the
-    contiguous layout).  The gathered view is value-identical to a
-    contiguous slot at every logical position, so the chunk attention math
-    is shared verbatim between layouts."""
-    n_pg = bt_row.shape[0]
+def _mixed_slot_view(cfg: ModelConfig, cache: Dict, slot) -> Dict:
+    """Per-kind prefill view of a paged cache: ``attn`` entries pass
+    through whole — the page pool is written *in place* through the block
+    table by :func:`repro.models.attention.paged_chunk_attention`, so no
+    gathered copy exists — while every slot-resident kind (rings,
+    recurrent states) gets its slot slice exactly like the stacked
+    layout's :func:`_slot_view`."""
+    period = _period(cfg)
+    n_per = _n_per_from(cache)
 
-    def g_rest(t):  # (P, Hkv, ps, hd) -> (1, Hkv, n_pg*ps, hd)
-        g = t[bt_row].transpose(1, 0, 2, 3)  # (Hkv, n_pg, ps, hd)
-        return g.reshape(t.shape[1], n_pg * t.shape[2], t.shape[3])[None]
-
-    def g_per(t):  # (n_per, P, Hkv, ps, hd) -> (n_per, 1, Hkv, n_pg*ps, hd)
-        g = t[:, bt_row].transpose(0, 2, 1, 3, 4)
-        return g.reshape(
-            t.shape[0], t.shape[2], n_pg * t.shape[3], t.shape[4])[:, None]
+    def slice_entry(e, axis):
+        return jax.tree_util.tree_map(
+            lambda t: jax.lax.dynamic_slice_in_dim(t, slot, 1, axis=axis), e)
 
     return {
-        "periods": jax.tree_util.tree_map(g_per, cache["periods"]),
-        "rest": jax.tree_util.tree_map(g_rest, cache["rest"]),
+        "periods": tuple(
+            e if cfg.block_pattern[i] == "attn" else slice_entry(e, 1)
+            for i, e in enumerate(cache["periods"])),
+        "rest": [
+            e if cfg.block_kind(n_per * period + j) == "attn"
+            else slice_entry(e, 0)
+            for j, e in enumerate(cache["rest"])],
     }
 
 
-def _paged_scatter(cache: Dict, view: Dict, bt_row: jax.Array) -> Dict:
-    """Scatter a request's updated contiguous view back onto its pages.
-    Pages the chunk did not write (including refcount-shared prefix pages)
-    get back their exact gathered bits, so shared pages are never mutated;
-    duplicate null-page entries in an unfilled block-table row all write
-    the null page, whose content is never unmasked."""
-    n_pg = bt_row.shape[0]
+def _mixed_slot_scatter(cfg: ModelConfig, cache: Dict, view: Dict,
+                        slot) -> Dict:
+    """Scatter a prefill chunk's updated per-kind view back: ``attn``
+    entries ARE the updated page pool (in-place paged writes), so they
+    replace the cache entry wholesale; slot-resident kinds scatter their
+    slot slice like :func:`_slot_scatter`."""
+    period = _period(cfg)
+    n_per = _n_per_from(cache)
 
-    def s_rest(full, v):  # v (1, Hkv, n_pg*ps, hd)
-        Hkv, ps, hd = full.shape[1], full.shape[2], full.shape[3]
-        pages = v[0].reshape(Hkv, n_pg, ps, hd).transpose(1, 0, 2, 3)
-        return full.at[bt_row].set(pages.astype(full.dtype))
-
-    def s_per(full, v):  # v (n_per, 1, Hkv, n_pg*ps, hd)
-        n_per, Hkv, ps, hd = (full.shape[0], full.shape[2], full.shape[3],
-                              full.shape[4])
-        pages = v[:, 0].reshape(n_per, Hkv, n_pg, ps, hd).transpose(
-            0, 2, 1, 3, 4)
-        return full.at[:, bt_row].set(pages.astype(full.dtype))
+    def scatter_entry(full_e, v_e, axis):
+        return jax.tree_util.tree_map(
+            lambda full, v: jax.lax.dynamic_update_slice_in_dim(
+                full, v.astype(full.dtype), slot, axis=axis), full_e, v_e)
 
     new_cache = dict(cache)
-    new_cache["periods"] = jax.tree_util.tree_map(
-        s_per, cache["periods"], view["periods"])
-    new_cache["rest"] = jax.tree_util.tree_map(
-        s_rest, cache["rest"], view["rest"])
+    new_cache["periods"] = tuple(
+        v if cfg.block_pattern[i] == "attn"
+        else scatter_entry(cache["periods"][i], v, 1)
+        for i, v in enumerate(view["periods"]))
+    new_cache["rest"] = [
+        v if cfg.block_kind(n_per * period + j) == "attn"
+        else scatter_entry(cache["rest"][j], v, 0)
+        for j, v in enumerate(view["rest"])]
     return new_cache
 
 
@@ -528,14 +548,18 @@ def _chunk_body(
     moe_cf: Optional[float],
     dtype,
     valids: Optional[jax.Array] = None,  # (B,) real tokens per row
+    block_tables: Optional[jax.Array] = None,  # (B, n_pg) => paged attn
 ) -> Tuple[jax.Array, Dict, Dict]:
     """Shared multi-token cached forward: embed the chunk rows, run every
     layer's :func:`repro.models.blocks.block_apply_chunk` against ``view``,
     and return (pre-final-norm hidden (B, C, d), new_view, traj).  Used by
     both chunked prefill (B=1, one slot view) and speculative verification
-    (B=slots, per-row offsets).  ``traj`` mirrors the layer structure with
-    the recurrent kinds' per-position state trajectories (None entries for
-    attention kinds) — :func:`commit_verify`'s input."""
+    (B=slots, per-row offsets).  With ``block_tables`` the ``attn``
+    entries of ``view`` are the global page pool, written in place
+    through the tables; other kinds ignore the tables (per-kind cache
+    layouts).  ``traj`` mirrors the layer structure with the recurrent
+    kinds' per-position state trajectories (None entries for attention
+    kinds) — :func:`commit_verify`'s input."""
     x = embed(params["embed"], tokens, dtype)  # (B, C, d)
     if cfg.pos == "learned":
         # clipped gather (not dynamic_slice, whose clamped start would
@@ -554,7 +578,8 @@ def _chunk_body(
         for i in range(period):
             x, c, tr = blocks.block_apply_chunk(
                 layer_p[i], x, layer_c[i], cfg, cfg.block_pattern[i],
-                positions=positions, valids=valids, moe_cf=moe_cf,
+                positions=positions, valids=valids,
+                block_tables=block_tables, moe_cf=moe_cf,
                 name=f"p{i}")
             new_c.append(c)
             trajs.append(tr)
@@ -572,7 +597,8 @@ def _chunk_body(
         li = n_per * period + j
         x, c, tr = blocks.block_apply_chunk(
             layer_p, x, view["rest"][j], cfg, cfg.block_kind(li),
-            positions=positions, valids=valids, moe_cf=moe_cf, name=f"r{j}")
+            positions=positions, valids=valids, block_tables=block_tables,
+            moe_cf=moe_cf, name=f"r{j}")
         new_rest.append(c)
         traj_rest.append(tr)
     return (x, {"periods": new_periods, "rest": new_rest},
@@ -607,19 +633,19 @@ def prefill_into_slot(
     intra-chunk scan, committing the state after ``valid`` tokens.
 
     With ``block_table`` (one request's ``(n_pg,)`` block-table row) the
-    cache is the paged layout — defined for global-attention stacks only
-    (:func:`repro.models.blocks.page_addressable`): the row's pages are
-    gathered into a contiguous view, the chunk runs the *same* attention
-    math, and the updated view scatters back onto the pages — ``slot`` is
-    ignored.
+    cache is the per-kind paged layout (any stack with at least one
+    ``attn`` layer, :func:`repro.models.blocks.paged_capable`): each
+    ``attn`` layer writes its chunk K/V *in place* into the pages the
+    table names and attends through the scalar-prefetch paged verify
+    kernel — no gathered ``max_seq``-wide view exists — while
+    rotating-window and recurrent layers keep their slot-resident caches
+    and use ``slot`` exactly like the stacked layout.
 
     Returns (last_logits (V,) f32 — logits at chunk position valid-1,
     new_cache).
     """
-    if block_table is not None and not blocks.page_addressable(cfg):
-        raise ValueError(
-            f"paged prefill requires a global-attention stack, got "
-            f"{cfg.block_pattern}")
+    if block_table is not None:
+        _paged_gate(cfg, "prefill_into_slot(block_table=...)")
     C = tokens.shape[-1]
     tokens = tokens.reshape(1, C)
     slot = jnp.asarray(slot, jnp.int32)
@@ -628,12 +654,15 @@ def prefill_into_slot(
     valid = jnp.asarray(valid, jnp.int32)
 
     if block_table is not None:
-        view = _paged_view(cache, block_table)
+        view = _mixed_slot_view(cfg, cache, slot)
     else:
         view = _slot_view(cache, slot)
     positions = (offset + jnp.arange(C, dtype=jnp.int32))[None]  # (1, C)
-    x, new_view, _ = _chunk_body(params, cfg, tokens, view, positions,
-                                 moe_cf, dtype, valids=valid[None])
+    x, new_view, _ = _chunk_body(
+        params, cfg, tokens, view, positions, moe_cf, dtype,
+        valids=valid[None],
+        block_tables=(block_table[None] if block_table is not None
+                      else None))
 
     x_last = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
     x_last = apply_norm(params["final_ln"], x_last, cfg.norm)
@@ -642,60 +671,10 @@ def prefill_into_slot(
     else:
         logits = linear(params["lm_head"], x_last, "lm_head")
     if block_table is not None:
-        new_cache = _paged_scatter(cache, new_view, block_table)
+        new_cache = _mixed_slot_scatter(cfg, cache, new_view, slot)
     else:
         new_cache = _slot_scatter(cache, new_view, slot)
     return logits[0, 0].astype(jnp.float32), new_cache
-
-
-def _paged_view_batch(cache: Dict, bts: jax.Array) -> Dict:
-    """Batched :func:`_paged_view`: gather every row's pages into
-    contiguous views — leaves shaped like the *stacked* cache
-    ((B, Hkv, n_pg*ps, hd); periods keep B on axis 1)."""
-    B, n_pg = bts.shape
-
-    def g_rest(t):  # (P, Hkv, ps, hd) -> (B, Hkv, n_pg*ps, hd)
-        g = t[bts].transpose(0, 2, 1, 3, 4)  # (B, Hkv, n_pg, ps, hd)
-        return g.reshape(B, t.shape[1], n_pg * t.shape[2], t.shape[3])
-
-    def g_per(t):  # (n_per, P, Hkv, ps, hd) -> (n_per, B, Hkv, n_pg*ps, hd)
-        g = t[:, bts].transpose(0, 1, 3, 2, 4, 5)
-        return g.reshape(
-            t.shape[0], B, t.shape[2], n_pg * t.shape[3], t.shape[4])
-
-    return {
-        "periods": jax.tree_util.tree_map(g_per, cache["periods"]),
-        "rest": jax.tree_util.tree_map(g_rest, cache["rest"]),
-    }
-
-
-def _paged_scatter_batch(cache: Dict, view: Dict, bts: jax.Array) -> Dict:
-    """Scatter every row's updated view back onto its pages.  Page ids
-    shared between rows receive identical bits from each (full prompt
-    pages are immutable below every sharer's write offset, so no row's
-    chunk touched them), and the null page 0 — named by every unfilled
-    block-table entry — may take writes in any order because its content
-    is never unmasked."""
-    B, n_pg = bts.shape
-
-    def s_rest(full, v):  # v (B, Hkv, n_pg*ps, hd)
-        Hkv, ps, hd = full.shape[1], full.shape[2], full.shape[3]
-        pages = v.reshape(B, Hkv, n_pg, ps, hd).transpose(0, 2, 1, 3, 4)
-        return full.at[bts].set(pages.astype(full.dtype))
-
-    def s_per(full, v):  # v (n_per, B, Hkv, n_pg*ps, hd)
-        n_per, Hkv, ps, hd = (full.shape[0], full.shape[2], full.shape[3],
-                              full.shape[4])
-        pages = v.reshape(n_per, B, Hkv, n_pg, ps, hd).transpose(
-            0, 1, 3, 2, 4, 5)
-        return full.at[:, bts].set(pages.astype(full.dtype))
-
-    new_cache = dict(cache)
-    new_cache["periods"] = jax.tree_util.tree_map(
-        s_per, cache["periods"], view["periods"])
-    new_cache["rest"] = jax.tree_util.tree_map(
-        s_rest, cache["rest"], view["rest"])
-    return new_cache
 
 
 def verify_chunk(
@@ -731,50 +710,46 @@ def verify_chunk(
     rejected or padded positions stay masked and are overwritten by later
     writes at those positions.
 
-    With ``block_tables`` the cache is the paged layout: every row gathers
-    its pages into a contiguous view, the same chunk math runs, and views
-    scatter back (see :func:`_paged_scatter_batch` for why concurrent rows
-    cannot corrupt shared or null pages).  Like paged chunked prefill,
-    the gather/scatter spans each row's full ``max_seq`` view rather than
-    only the pages below ``lengths + C`` — a fixed-shape simplification
-    whose copy traffic scales with ``max_seq``; a scalar-prefetch paged
-    verify kernel bounding it to live pages is the named ROADMAP seam.
+    With ``block_tables`` the cache is the per-kind paged layout: every
+    ``attn`` layer writes the chunk's K/V *in place* into the pages each
+    row's table names (concurrent rows cannot collide — decode-tail pages
+    are uniquely owned, shared prefix pages sit below every sharer's
+    write offset, and out-of-range positions are masked to the null
+    page), then attends through the scalar-prefetch paged verify kernel
+    (:func:`repro.kernels.ops.paged_verify`) whose traffic is bounded by
+    the live pages the tables name — the retired gather/scatter
+    materialized each row's full ``max_seq`` view per call.
 
     Stacks with rotating-window or recurrent layers verify through the
-    same chunk body (stacked layout only — such stacks are not
-    page-addressable).  ``valids`` bounds each row's real tokens
-    (``cur_tok`` + its draft count; 0 parks the row): ring writes past a
-    row's ``lengths + valids`` are dropped, and the recurrent carried
-    state commits at ``valids`` tokens.  With ``with_traj`` the call also
-    returns the per-layer per-position state trajectories, which
+    same chunk body (those entries are slot-resident in *both* layouts).
+    ``valids`` bounds each row's real tokens (``cur_tok`` + its draft
+    count; 0 parks the row): ring writes past a row's ``lengths +
+    valids`` are dropped, and the recurrent carried state commits at
+    ``valids`` tokens.  With ``with_traj`` the call also returns the
+    per-layer per-position state trajectories, which
     :func:`commit_verify` selects from after the accept/reject decision —
     the state-rewind seam (K/V rewind stays with the cache managers).
 
     Returns (logits (B, C, V) f32, new_cache[, traj]).
     """
-    if block_tables is not None and not blocks.page_addressable(cfg):
-        raise ValueError(
-            f"paged verification requires a global-attention stack, got "
-            f"{cfg.block_pattern}")
+    if block_tables is not None:
+        _paged_gate(cfg, "verify_chunk(block_tables=...)")
     B, C = tokens.shape
     lengths = jnp.asarray(lengths, jnp.int32)
     positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
-    if block_tables is not None:
-        view = _paged_view_batch(cache, block_tables)
-    else:
-        view = cache  # stacked: the cache batch axis IS the slot axis
-    x, new_view, traj = _chunk_body(params, cfg, tokens, view, positions,
-                                    moe_cf, dtype, valids=valids)
+    # both layouts share the cache as the view: the batch axis of every
+    # slot-resident entry IS the slot axis, and paged attn entries are
+    # the page pool, addressed per row through block_tables
+    x, new_view, traj = _chunk_body(params, cfg, tokens, cache, positions,
+                                    moe_cf, dtype, valids=valids,
+                                    block_tables=block_tables)
     x = apply_norm(params["final_ln"], x, cfg.norm)
     if cfg.tie_embeddings:
         logits = unembed(params["embed"], x)
     else:
         logits = linear(params["lm_head"], x, "lm_head")
-    if block_tables is not None:
-        new_cache = _paged_scatter_batch(cache, new_view, block_tables)
-    else:
-        new_cache = dict(cache)
-        new_cache.update(new_view)
+    new_cache = dict(cache)
+    new_cache.update(new_view)
     if with_traj:
         return logits.astype(jnp.float32), new_cache, traj
     return logits.astype(jnp.float32), new_cache
@@ -923,14 +898,6 @@ def sharded_decode_step(
 
     paged = block_tables is not None
     masked = actives is not None
-    if paged and masked:
-        # paged stacks are pure global-attention today (no maskable
-        # state), so the combination is unimplemented — refuse rather
-        # than silently dropping the mask if paged window pages ever land
-        raise ValueError(
-            "sharded_decode_step: actives masking is not implemented for "
-            "the paged layout (paged stacks carry no ring/recurrent "
-            "state)")
 
     def body(p, tok, cache, lengths, act, bt):
         logits, new_cache = decode_step(
@@ -943,25 +910,32 @@ def sharded_decode_step(
             logits = logits[None]
         return logits, _shard_expand(new_cache)
 
-    if paged:
-        fn = compat.shard_map(
-            lambda p, tok, c, ln, bt: body(p, tok, c, ln, None, bt),
-            mesh=mesh,
-            in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
-            out_specs=(P() if gather_logits else P(axis), P(axis)))
-        return fn(params, token, cache, lengths, block_tables)
+    # per-kind cache layouts make paged + actives a legal combination (a
+    # mixed stack pages its attn layers while rings/states stay
+    # slot-resident and need the mask), so the arg list is assembled
+    # dynamically instead of enumerating layout x mask variants
+    in_specs = [P(), P(axis), P(axis), P(axis)]
+    args = [params, token, cache, lengths]
     if masked:
-        fn = compat.shard_map(
-            lambda p, tok, c, ln, act: body(p, tok, c, ln, act, None),
-            mesh=mesh,
-            in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
-            out_specs=(P() if gather_logits else P(axis), P(axis)))
-        return fn(params, token, cache, lengths, actives)
+        in_specs.append(P(axis))
+        args.append(actives)
+    if paged:
+        in_specs.append(P(axis))
+        args.append(block_tables)
+
+    def wrapper(p, tok, c, ln, *rest):
+        i = 0
+        act = None
+        if masked:
+            act = rest[i]
+            i += 1
+        bt = rest[i] if paged else None
+        return body(p, tok, c, ln, act, bt)
+
     fn = compat.shard_map(
-        lambda p, tok, c, ln: body(p, tok, c, ln, None, None), mesh=mesh,
-        in_specs=(P(), P(axis), P(axis), P(axis)),
+        wrapper, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=(P() if gather_logits else P(axis), P(axis)))
-    return fn(params, token, cache, lengths)
+    return fn(*args)
 
 
 def sharded_prefill_into_slot(
@@ -1054,11 +1028,6 @@ def sharded_verify_chunk(
 
     paged = block_tables is not None
     has_valids = valids is not None
-    if paged and has_valids:
-        raise ValueError(
-            "sharded_verify_chunk: valids gating is not implemented for "
-            "the paged layout (paged stacks carry no ring/recurrent "
-            "state); park rows via lengths >= max_seq instead")
 
     def body(p, toks, cache, lens, vals, bts):
         out = verify_chunk(

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.perfmodel import FPGAPerfModel
+from repro.models import blocks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,6 +256,40 @@ class FIFOAdmission:
                 price = max(price, min(toks, cfg.window or max_seq,
                                        max_seq))
         return price
+
+    def combined_price(
+        self,
+        cfg: ModelConfig,
+        prompt_len: int,
+        max_new: int,
+        *,
+        page_size: int,
+        max_seq: int,
+        shared_tokens: int = 0,
+    ) -> int:
+        """Admission price of one request on the *per-kind* paged layout,
+        in pages: the max of its page cost and its slot cost.
+
+        A mixed stack stores global-attention K/V in the page pool
+        (:meth:`page_price` — the only part a prefix-sharing hit
+        discounts) while its rotating-window rings and recurrent states
+        stay slot-resident (:meth:`slot_price` positions, quantized to
+        pages here so the two sides are comparable).  The layers overlay
+        the same token range rather than concatenate, so the request's
+        footprint is the max, never the sum.  For a pure-attention stack
+        this reduces exactly to ``page_price``; the slot side can only
+        dominate when sharing discounts the page side below the
+        slot-resident footprint (the resident state is re-prefilled, not
+        shared — see ``PagedCacheManager.alloc``).
+        """
+        pages = self.page_price(
+            prompt_len, max_new, page_size=page_size, max_seq=max_seq,
+            shared_tokens=shared_tokens)
+        if blocks.page_addressable(cfg):
+            return pages
+        slot_pages = -(-self.slot_price(
+            cfg, prompt_len, max_new, max_seq=max_seq) // page_size)
+        return max(pages, slot_pages)
 
     def plan_chunks(
         self, prefilling: Sequence[Tuple[int, int, int]]

@@ -52,8 +52,9 @@ multi-FPGA LoopLynx deployment at shard_map level:
     proposals (n-gram tables or a draft model, keyed by global slot id =
     shard-local state), accept/reject rides the same one-tick-delayed
     result path, and rejection rolls each slot back on its own shard
-    (``kv.rewind`` releases paged draft pages; the hybrid stacked path
-    settles rings/states via ``StateStore.commit_sharded``).  Rows not in
+    (``kv.rewind`` releases paged draft pages; hybrid stacks — stacked
+    *or* per-kind paged, whose rings/states stay slot-resident beside
+    the page pool — settle them via ``StateStore.commit_sharded``).  Rows not in
     the dispatched wave are parked (``lengths >= max_seq``, ``valids ==
     0``): they write **nothing**, so a wave's verify can never corrupt
     the other wave's in-flight draft positions.  In spec mode there is no
@@ -148,14 +149,14 @@ class DistributedServeEngine:
             cfg, chunk_size=self.chunk_size)
         assert self.admission.chunk_size <= self.chunk_size
 
-        # the distributed tick is chunked end to end, so hybrid
-        # rotating-window/recurrent stacks serve through the sharded
-        # *stacked* layout (their rings/states are not page-addressable);
         # admission stays bounded per shard — shipping recurrent state
         # between shards for unbounded requests is a named next seam
         self.seq_ceiling: Optional[int] = max_seq
         if kv_layout == "auto":
-            kv_layout = ("paged" if blocks.page_addressable(cfg)
+            # per-kind cache layouts: any stack with a global-attention
+            # layer pages (mixed stacks keep rings/recurrent states
+            # slot-resident on their shard, beside the page pool)
+            kv_layout = ("paged" if blocks.paged_capable(cfg)
                          and max_seq % page_size == 0 else "stacked")
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
@@ -180,7 +181,8 @@ class DistributedServeEngine:
         pool = self.kv.n_pages if self.paged else slots_per_shard
         seq = page_size if self.paged else max_seq
         abstract = lm.init_cache_abstract(
-            cfg, pool, seq, layout=("paged" if self.paged else "stacked"))
+            cfg, pool, seq, layout=("paged" if self.paged else "stacked"),
+            slots=slots_per_shard, slot_seq=max_seq)
         self.kv_sharding = NamedSharding(mesh, P("shard"))
         self.cache = jax.tree_util.tree_map(
             lambda leaf: jax.device_put(
@@ -196,10 +198,14 @@ class DistributedServeEngine:
         self.rng = jax.random.PRNGKey(seed)
 
         if self.paged:
+            # the paged step carries the really-decoding mask too: mixed
+            # stacks keep slot-resident rings/states whose commits must
+            # not fire for tag-along rows (pure-attn shards ignore it)
             self._step = jax.jit(
-                lambda p, tok, cache, lengths, bt: lm.sharded_decode_step(
-                    p, cfg, mesh, tok, cache, lengths, block_tables=bt,
-                    dtype=self.act_dtype))
+                lambda p, tok, cache, lengths, bt, acts:
+                lm.sharded_decode_step(
+                    p, cfg, mesh, tok, cache, lengths, actives=acts,
+                    block_tables=bt, dtype=self.act_dtype))
             self._prefill = jax.jit(
                 lambda p, toks, cache, slots, offs, valids, acts, bts:
                 lm.sharded_prefill_into_slot(
@@ -222,9 +228,11 @@ class DistributedServeEngine:
 
         self.spec = spec
         self.proposer: Optional[speculative.DraftProposer] = None
-        # hybrid stacked shards carry serving state with no length mask;
-        # their speculative commits go through the shard-local StateStore
-        # seam (None for paged / pure-attention stacks)
+        self.adaptive: Optional[speculative.AdaptiveDraft] = None
+        # hybrid shards carry serving state with no length mask (slot-
+        # resident in both layouts under per-kind paging); their
+        # speculative commits go through the shard-local StateStore seam
+        # (None for pure-attention stacks)
         self._state_store = getattr(self.kv, "state", None)
         if spec is not None:
             if spec.k < 1:
@@ -240,7 +248,18 @@ class DistributedServeEngine:
             self.proposer = speculative.make_proposer(
                 spec, self.B, max_seq, chunk_size=self.chunk_size,
                 dtype=self.act_dtype)
-            if self.paged:
+            self.adaptive = speculative.AdaptiveDraft.from_spec(spec)
+            if self.paged and self._state_store is not None:
+                # mixed paged: block tables route the attn writes AND the
+                # slot-resident rings/states need valids + the trajectory
+                # for their sharded StateStore commit
+                self._verify = jax.jit(
+                    lambda p, toks, cache, lens, valids, bts:
+                    lm.sharded_verify_chunk(
+                        p, cfg, mesh, toks, cache, lens, valids=valids,
+                        block_tables=bts, with_traj=True,
+                        dtype=self.act_dtype))
+            elif self.paged:
                 self._verify = jax.jit(
                     lambda p, toks, cache, lens, bts:
                     lm.sharded_verify_chunk(
@@ -318,6 +337,8 @@ class DistributedServeEngine:
             self.cur_tok[s, ls, 0] = req.prompt[0]
             if self.proposer is not None:
                 self.proposer.alloc(slot, req.prompt, shared_tokens)
+            if self.adaptive is not None:
+                self.adaptive.alloc(slot)
 
     # ------------------------------------------------------------------
     def _emit(self, req: Request, tok: int, now: float) -> None:
@@ -338,6 +359,8 @@ class DistributedServeEngine:
             self.waves.release(req.slot)
             if self.proposer is not None:
                 self.proposer.free(req.slot)
+            if self.adaptive is not None:
+                self.adaptive.free(req.slot)
             self.cur_tok[s, ls, 0] = 0
         else:
             req.state = DECODE
@@ -548,7 +571,9 @@ class DistributedServeEngine:
                 self._stage(f"decode.w{w}.lengths",
                             self.kv.lengths_array()),
                 self._stage(f"decode.w{w}.block_tables",
-                            self.kv.block_tables_array()))
+                            self.kv.block_tables_array()),
+                self._stage(f"decode.w{w}.actives",
+                            mask.reshape(self.D, self.Bs)))
         else:
             logits_d, self.cache = self._step(
                 self.params,
@@ -581,7 +606,8 @@ class DistributedServeEngine:
         k = self.spec.k
         lengths_h = self.kv.lengths_array().reshape(self.B).copy()
         caps = speculative.draft_caps(self.slots, lengths_h, mask, k,
-                                      self.seq_ceiling)
+                                      self.seq_ceiling,
+                                      adaptive=self.adaptive)
         draft, counts = self.proposer.propose(
             self.slots, self.cur_tok.reshape(self.B, 1), lengths_h, mask,
             caps)
@@ -596,12 +622,28 @@ class DistributedServeEngine:
         traj = None
         if self.paged:
             self.kv.ensure_decode_room(mask, counts + 1)
-            logits_d, self.cache = self._verify(
-                self.params,
-                self._stage(f"verify.w{w}.tokens", toks_d), self.cache,
-                self._stage(f"verify.w{w}.lengths", vlen_d),
-                self._stage(f"verify.w{w}.block_tables",
-                            self.kv.block_tables_array()))
+            if self._state_store is not None:
+                # mixed paged: snapshot + trajectory settle the slot-
+                # resident rings/states one tick later (consume side);
+                # kv.rewind releases the attn side's rejected pages
+                prev_cache = self.cache
+                logits_d, self.cache, traj = self._verify(
+                    self.params,
+                    self._stage(f"verify.w{w}.tokens", toks_d),
+                    self.cache,
+                    self._stage(f"verify.w{w}.lengths", vlen_d),
+                    self._stage(f"verify.w{w}.valids",
+                                valids.reshape(self.D, self.Bs)),
+                    self._stage(f"verify.w{w}.block_tables",
+                                self.kv.block_tables_array()))
+            else:
+                logits_d, self.cache = self._verify(
+                    self.params,
+                    self._stage(f"verify.w{w}.tokens", toks_d),
+                    self.cache,
+                    self._stage(f"verify.w{w}.lengths", vlen_d),
+                    self._stage(f"verify.w{w}.block_tables",
+                                self.kv.block_tables_array()))
         elif self._state_store is not None:
             # the verify base IS the rewind snapshot (immutable arrays);
             # its commit applies one tick later to whatever the cache has
@@ -655,6 +697,8 @@ class DistributedServeEngine:
             m = int(n_acc[b])
             self.spec_proposed += int(counts[b])
             self.spec_accepted += m
+            if self.adaptive is not None:
+                self.adaptive.observe(b, int(counts[b]), m)
             L = int(base[b])
             for tok in list(draft[b, :m]) + [int(next_tok[b])]:
                 self._emit(req, int(tok), now)
@@ -733,6 +777,8 @@ class DistributedServeEngine:
                     self.spec_emitted / max(self.spec_ticks, 1)),
                 "draft_calls": getattr(self.proposer, "draft_calls", 0),
             })
+            if self.adaptive is not None:
+                out.update(self.adaptive.stats())
         out.update(self.xfer.stats())
         if self.paged:
             out.update(self.kv.stats())

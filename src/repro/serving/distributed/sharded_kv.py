@@ -131,6 +131,17 @@ class ShardedPageAllocator(_ShardedBase):
         self.pages_per_seq = self.shards[0].pages_per_seq
         self.n_pages = self.shards[0].n_pages  # per shard
 
+    @property
+    def state(self):
+        """The stack's :class:`~repro.serving.kv_cache.StateStore` (None
+        for pure-attention stacks).  Per-kind layouts: a mixed paged
+        stack keeps rings/recurrent states slot-resident, and their
+        speculative commits run through this seam exactly as in the
+        stacked flavour.  Shards are homogeneous, so shard 0's store
+        serves the whole pool (it holds only the config and a jit
+        cache)."""
+        return self.shards[0].state
+
     # -- admission ------------------------------------------------------
     def probe_pending(self, prompt: Sequence[int]) -> bool:
         """True if any shard holds a not-yet-ready registration of this

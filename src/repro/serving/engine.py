@@ -13,14 +13,21 @@ every tick, and *admission work rides along without stalling it*.
     the analytic stage program (``core/scheduler.model_program`` via
     ``core/perfmodel.py``) — the temporal-reuse analogue of the paper's
     hidden ring transmissions.
-  * **Paged KV cache** — by default (``kv_layout="auto"``) global-attention
-    stacks store K/V in :class:`repro.serving.kv_cache.PagedCacheManager`'s
-    page pool: page-granular alloc/free through per-request block tables,
-    admission priced in pages (``FIFOAdmission.page_price``) instead of
-    whole slots, and copy-free prefix sharing of full prompt pages between
-    requests with a common prompt prefix.  ``kv_layout="stacked"`` keeps
-    the contiguous per-slot layout; both produce bit-exact identical
-    tokens (asserted in ``tests/test_paged_kv.py``).
+  * **Paged KV cache** — by default (``kv_layout="auto"``) every stack
+    with at least one global-attention layer stores that K/V in
+    :class:`repro.serving.kv_cache.PagedCacheManager`'s page pool:
+    page-granular alloc/free through per-request block tables, admission
+    priced in pages (``FIFOAdmission.page_price``; mixed stacks max it
+    against the slot cost, ``FIFOAdmission.combined_price``) instead of
+    whole slots, and copy-free prefix sharing of full prompt pages
+    between requests with a common prompt prefix.  The layout is *per
+    kind*: a mixed stack's rotating-window rings and recurrent states
+    stay slot-resident beside the page pool, so hybrid stacks page too
+    (their sharing saves pages, not prefill compute — see
+    ``PagedCacheManager.alloc``).  ``kv_layout="stacked"`` keeps the
+    contiguous per-slot layout; both produce bit-exact identical tokens
+    (asserted in ``tests/test_paged_kv.py`` and
+    ``tests/test_hybrid_serving.py``).
   * **Slot management** — allocation, free, and per-slot length accounting
     live behind the manager seam (alloc/free/advance/lengths); freeing is
     mask-only (lengths gate attention; pages additionally refcounted), so
@@ -265,13 +272,14 @@ class ServeEngine:
             None if probe <= max_seq and cfg.pos != "learned" else max_seq)
 
         if kv_layout == "auto":
-            # paged needs an absolute-offset (pure global-attention) stack
-            # AND a page size that divides max_seq (bit-exactness
-            # invariant); auto picks the contiguous layout otherwise
-            # rather than degrade page_size
+            # per-kind cache layouts: any stack with at least one global-
+            # attention layer pages (mixed stacks keep rings/recurrent
+            # states slot-resident beside the page pool); auto still
+            # requires a page size that divides max_seq (bit-exactness
+            # invariant) rather than degrade page_size
             kv_layout = (
                 "paged"
-                if blocks.page_addressable(cfg) and max_seq % page_size == 0
+                if blocks.paged_capable(cfg) and max_seq % page_size == 0
                 else "stacked")
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
@@ -313,13 +321,19 @@ class ServeEngine:
             return wrapped
 
         if self.paged:
+            # the paged step carries the really-decoding mask too: mixed
+            # stacks keep slot-resident rings/states whose commits must
+            # not fire for tag-along rows (pure-attn stacks ignore it —
+            # their writes are length-masked either way)
             self._step = jax.jit(_traced(
-                lambda p, tok, cache, lengths, bt: lm.decode_step(
-                    p, cfg, tok, cache, lengths, block_table=bt,
-                    dtype=self.act_dtype)))
+                lambda p, tok, cache, lengths, bt, active: lm.decode_step(
+                    p, cfg, tok, cache, lengths, active=active,
+                    block_table=bt, dtype=self.act_dtype)))
+            # slot routes the slot-resident entries of a mixed stack; the
+            # block-table row routes the paged attn writes
             self._prefill = jax.jit(_traced(
-                lambda p, toks, cache, bt_row, offset, valid:
-                lm.prefill_into_slot(p, cfg, toks, cache, 0, offset,
+                lambda p, toks, cache, slot, bt_row, offset, valid:
+                lm.prefill_into_slot(p, cfg, toks, cache, slot, offset,
                                      valid=valid, block_table=bt_row,
                                      dtype=self.act_dtype)))
         else:
@@ -338,6 +352,7 @@ class ServeEngine:
 
         self.spec = spec
         self.proposer: Optional[speculative.DraftProposer] = None
+        self.adaptive: Optional[speculative.AdaptiveDraft] = None
         # hybrid stacks carry serving state with no length mask (rotating
         # rings, recurrent states): their speculative verify goes through
         # the StateStore rewind seam owned by the slot manager
@@ -361,7 +376,18 @@ class ServeEngine:
             self.proposer = speculative.make_proposer(
                 spec, batch_slots, max_seq, chunk_size=self.chunk_size,
                 dtype=self.act_dtype)
-            if self.paged:
+            self.adaptive = speculative.AdaptiveDraft.from_spec(spec)
+            if self.paged and self._state_store is not None:
+                # mixed paged: block tables route the attn writes AND the
+                # slot-resident rings/states need valids + the trajectory
+                # for their StateStore commit
+                self._verify = jax.jit(_traced(
+                    lambda p, toks, cache, lens, valids, bts:
+                    lm.verify_chunk(
+                        p, cfg, toks, cache, lens, valids=valids,
+                        block_tables=bts, with_traj=True,
+                        dtype=self.act_dtype)))
+            elif self.paged:
                 self._verify = jax.jit(_traced(
                     lambda p, toks, cache, lens, bts: lm.verify_chunk(
                         p, cfg, toks, cache, lens, block_tables=bts,
@@ -391,6 +417,12 @@ class ServeEngine:
         self.spec_proposed = 0  # draft tokens submitted for verification
         self.spec_accepted = 0  # draft tokens accepted
         self.spec_emitted = 0  # tokens emitted off verify calls
+        # verify-path copy traffic, in K/V positions per layer: the
+        # in-place paged verify touches each row's live pages only;
+        # "dense" is what the retired _paged_view_batch gather/scatter
+        # would have moved (a full max_seq view per active row, twice)
+        self.verify_touched_positions = 0
+        self.verify_dense_positions = 0
         self.mdk_stats = sched.mdk_stats(cfg)
 
     # ------------------------------------------------------------------
@@ -435,6 +467,8 @@ class ServeEngine:
             self.slots[slot] = req
             if self.proposer is not None:
                 self.proposer.alloc(slot, req.prompt, shared_tokens)
+            if self.adaptive is not None:
+                self.adaptive.alloc(slot)
             self._temp[slot] = req.sampling.temperature
             self._topk[slot] = req.sampling.top_k
             self._topp[slot] = req.sampling.top_p
@@ -458,6 +492,8 @@ class ServeEngine:
             self.kv.free(req.slot)
             if self.proposer is not None:
                 self.proposer.free(req.slot)
+            if self.adaptive is not None:
+                self.adaptive.free(req.slot)
             self.cur_tok[req.slot, 0] = 0
         else:
             req.state = DECODE
@@ -509,7 +545,7 @@ class ServeEngine:
             if self.paged:
                 logits, self.kv.cache = self._prefill(
                     self.params, jnp.asarray(chunk), self.kv.cache,
-                    jnp.asarray(self.kv.block_tables[ch.slot]),
+                    ch.slot, jnp.asarray(self.kv.block_tables[ch.slot]),
                     ch.start, ch.n)
             else:
                 logits, self.kv.cache = self._prefill(
@@ -546,7 +582,8 @@ class ServeEngine:
             self.kv.ensure_decode_room(decoding)
             logits, self.kv.cache = self._step(
                 self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                self.kv.lengths, jnp.asarray(self.kv.block_tables))
+                self.kv.lengths, jnp.asarray(self.kv.block_tables),
+                jnp.asarray(decoding, bool))
         else:
             logits, self.kv.cache = self._step(
                 self.params, jnp.asarray(self.cur_tok), self.kv.cache,
@@ -579,7 +616,8 @@ class ServeEngine:
         # (window-capped stacks have none: rings wrap, states are O(1))
         # and prompt+max_new (the reservation bound)
         caps = speculative.draft_caps(self.slots, lengths_h, decoding, k,
-                                      self.seq_ceiling)
+                                      self.seq_ceiling,
+                                      adaptive=self.adaptive)
         draft, counts = self.proposer.propose(
             self.slots, self.cur_tok, lengths_h, decoding, caps)
         if not counts.any():
@@ -602,9 +640,24 @@ class ServeEngine:
         traj = None
         if self.paged:
             self.kv.ensure_decode_room(decoding, counts + 1)
-            logits, self.kv.cache = self._verify(
-                self.params, jnp.asarray(toks), self.kv.cache,
-                jnp.asarray(vlen), jnp.asarray(self.kv.block_tables))
+            mask = np.asarray(decoding, bool)
+            live = -(-(lengths_h + counts + 1) // self.kv.page_size)
+            self.verify_touched_positions += int(
+                (live[mask] * self.kv.page_size).sum())
+            self.verify_dense_positions += 2 * int(mask.sum()) * self.max_seq
+            if self._state_store is not None:
+                # mixed paged: the snapshot/trajectory commit settles the
+                # slot-resident rings/states; kv.rewind below releases
+                # the attn side's rejected pages
+                prev_cache = self.kv.cache
+                logits, self.kv.cache, traj = self._verify(
+                    self.params, jnp.asarray(toks), self.kv.cache,
+                    jnp.asarray(vlen), jnp.asarray(valids),
+                    jnp.asarray(self.kv.block_tables))
+            else:
+                logits, self.kv.cache = self._verify(
+                    self.params, jnp.asarray(toks), self.kv.cache,
+                    jnp.asarray(vlen), jnp.asarray(self.kv.block_tables))
         elif self._state_store is not None:
             # the verify base IS the rewind snapshot (JAX arrays are
             # immutable — holding the reference costs nothing)
@@ -640,6 +693,8 @@ class ServeEngine:
             m = int(n_acc[b])
             self.spec_proposed += int(counts[b])
             self.spec_accepted += m
+            if self.adaptive is not None:
+                self.adaptive.observe(b, int(counts[b]), m)
             L = int(lengths_h[b])
             for tok in list(draft[b, :m]) + [int(next_tok[b])]:
                 self._emit(req, int(tok), now)
@@ -669,7 +724,8 @@ class ServeEngine:
             self.kv.ensure_decode_room(occupied)
             logits, self.kv.cache = self._step(
                 self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                self.kv.lengths, jnp.asarray(self.kv.block_tables))
+                self.kv.lengths, jnp.asarray(self.kv.block_tables),
+                jnp.asarray(occupied, bool))
         else:
             logits, self.kv.cache = self._step(
                 self.params, jnp.asarray(self.cur_tok), self.kv.cache,
@@ -730,7 +786,11 @@ class ServeEngine:
                 # the cost side tokens_per_model_call excludes, so a
                 # proposer="model" benchmark can't read as a free win
                 "draft_calls": getattr(self.proposer, "draft_calls", 0),
+                "verify_touched_positions": self.verify_touched_positions,
+                "verify_dense_positions": self.verify_dense_positions,
             })
+            if self.adaptive is not None:
+                out.update(self.adaptive.stats())
         if self.paged:
             out.update(self.kv.stats())
         return out

@@ -15,6 +15,22 @@ lengths / has_room), so the rest of the serving stack is layout-agnostic:
     requests with a common token prefix (keyed by a chained
     token-prefix hash, the vLLM prefix-caching scheme).
 
+The paged layout is **per kind**: only a stack's global-attention layers
+store K/V in the page pool (they are the absolute-offset-addressable
+ones).  In a mixed stack the rotating-window rings and recurrent states
+stay *slot-resident* — per-slot fixed-size buffers exactly as in the
+stacked layout (``lm.init_cache(..., layout="paged", slots=, slot_seq=)``
+builds the combined pytree) — and the paged manager fronts both: pages
+are priced/refcounted as always, while the slot axis of the resident
+entries is the manager's slot id.  ``FIFOAdmission.combined_price`` is
+the matching admission formula (max of page and slot costs).  Prefix
+sharing in a mixed stack saves *pages only*: the shared pages are linked
+into the new request's table, but slot-resident state cannot be shared,
+so ``alloc`` returns ``shared_tokens=0`` and the engine prefills the
+whole prompt — the attention writes land in the shared pages with
+bit-identical content (same tokens, same rope'd positions), and the page
+pool is charged once.
+
 Correctness model for pages: a slot's *length* remains the single source
 of truth for what the model may attend to, exactly as in the contiguous
 layout — but validity is now two-level.  (1) Position-to-page mapping:
@@ -74,10 +90,12 @@ class StateStore:
     :func:`repro.models.lm.verify_chunk` returns (``with_traj=True``) —
     see :func:`repro.models.lm.commit_verify` for the exact rule.
 
-    Owned by :class:`SlotCacheManager` (``.state``) whenever the stack
-    holds a non-global-attention kind; pure-attention stacks (and the
-    paged manager, which only they may use) have no carried state and no
-    store.
+    Owned by *both* managers (``.state``) whenever the stack holds a
+    non-global-attention kind: under the per-kind paged layout rings and
+    recurrent states stay slot-resident, so a mixed paged stack commits
+    its verifies through exactly this seam while ``rewind`` releases the
+    attention side's rejected pages.  Pure-attention stacks have no
+    carried state and no store.
     """
 
     def __init__(self, cfg: ModelConfig):
@@ -251,16 +269,22 @@ class PagedCacheManager:
         dtype=jnp.bfloat16,
         with_cache: bool = True,
     ):
-        if not blocks.page_addressable(cfg):
-            # ValueError, not assert: the last barrier between a stack
-            # whose cache is not absolute-offset-addressable (rotating
-            # rings, carried states) and silent page corruption — it must
-            # survive ``python -O``.  The chunked *forward* path covers
-            # every kind; only this layout stays gated.
+        if not blocks.paged_capable(cfg):
+            # ValueError, not assert: the barrier between a stack with
+            # nothing absolute-offset-addressable and silent page math on
+            # an empty pool — it must survive ``python -O``.  Mixed
+            # stacks are served (their attn layers page, rings/states
+            # stay slot-resident); only all-window/recurrent stacks,
+            # which have no layer to page, stay gated.
+            bad = ", ".join(
+                f"layer {i} ({cfg.block_kind(i)})"
+                for i in range(cfg.n_layers)
+                if cfg.block_kind(i) != "attn")
             raise ValueError(
-                "paged KV cache requires a global-attention stack; "
-                f"{cfg.block_pattern} holds rotating-window/recurrent "
-                "kinds — serve them with kv_layout='stacked'")
+                "paged KV cache requires at least one global-attention "
+                f"layer to page, but every layer of {cfg.name} is "
+                f"non-pageable ({bad}) — serve it with "
+                "kv_layout='stacked'")
         assert max_seq % page_size == 0, (
             "max_seq must be a page multiple so the gathered paged view has "
             f"exactly the contiguous layout's width ({max_seq} % {page_size})"
@@ -276,11 +300,19 @@ class PagedCacheManager:
         assert n_pages >= 2, "need at least the null page and one real page"
         self.n_pages = n_pages
         self.prefix_sharing = prefix_sharing
-        # pool axis = pages, "seq" axis = one page's tokens.
+        # per-kind layouts: a mixed stack keeps rings/recurrent states
+        # slot-resident, and their speculative commits go through the
+        # same StateStore seam as the stacked layout
+        self.state: Optional[StateStore] = (
+            StateStore(cfg)
+            if any(k != "attn" for k in cfg.block_pattern) else None)
+        # pool axis = pages, "seq" axis = one page's tokens; slot-resident
+        # entries of a mixed stack get the (batch_slots, max_seq) dims.
         # with_cache=False: host metadata only (see SlotCacheManager)
         self.cache: Optional[Dict] = (
             lm.init_cache(cfg, n_pages, page_size, layout="paged",
-                          dtype=dtype)
+                          dtype=dtype, slots=batch_slots,
+                          slot_seq=max_seq)
             if with_cache else None)
         # host-side, like block_tables (see SlotCacheManager.__init__)
         self.lengths = np.zeros((batch_slots,), np.int32)
@@ -460,7 +492,16 @@ class PagedCacheManager:
         fresh pages for the rest of the prompt, and reserve decode-growth
         pages.  Returns ``(slot, shared_tokens)`` — the engine starts
         prefill at ``shared_tokens`` — or None when slots or pages are
-        short (the caller retries next tick)."""
+        short (the caller retries next tick).
+
+        Mixed stacks (slot-resident rings/recurrent state) always return
+        ``shared_tokens=0``: the resident state of the shared region
+        cannot be linked, so the engine must prefill the whole prompt.
+        Shared pages are still linked (the page saving is real); the
+        prefill rewrites them with bit-identical attention K/V — same
+        params, same tokens, same rope'd absolute positions — so a
+        refcount > 1 page is only ever written with the content it
+        already holds."""
         plen = len(prompt)
         if plen > self.max_seq:
             raise ValueError(
@@ -517,8 +558,11 @@ class PagedCacheManager:
         row = np.zeros((self.pages_per_seq,), np.int32)
         row[:len(pages)] = pages
         self.block_tables[slot] = row
-        self.lengths[slot] = n_shared * ps
-        return slot, n_shared * ps
+        # per-kind layouts: slot-resident state can't skip the shared
+        # region, so the engine prefills from 0 (see the docstring)
+        shared_tokens = 0 if self.state is not None else n_shared * ps
+        self.lengths[slot] = shared_tokens
+        return slot, shared_tokens
 
     def free(self, slot: int) -> None:
         """Release a slot: decref every page in its table (shared pages

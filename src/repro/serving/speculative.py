@@ -52,7 +52,17 @@ class SpecConfig:
     ``k`` is the maximum draft length per tick (the engine emits 1..k+1
     tokens per verify call).  ``proposer`` picks the draft source:
     ``"ngram"`` (default, free self-drafting) or ``"model"`` (requires
-    ``draft_cfg``/``draft_params`` — a small chunk-capable model)."""
+    ``draft_cfg``/``draft_params`` — a small chunk-capable model).
+
+    ``adaptive=True`` turns on per-slot adaptive draft sizing
+    (:class:`AdaptiveDraft`): an EWMA of each slot's acceptance ratio
+    scales its draft cap between ``k_min`` and ``k``, so slots on
+    rejection streaks stop paying for drafts that never land while slots
+    with landing drafts keep the full budget.  Adaptive sizing only ever
+    *shrinks* the proposal budget — the accept/reject rule is untouched
+    — so greedy streams stay token-for-token identical to plain decode
+    (and to non-adaptive speculation up to how many drafts ride each
+    verify)."""
 
     k: int = 4
     proposer: str = "ngram"  # "ngram" | "model"
@@ -60,26 +70,100 @@ class SpecConfig:
     ngram_min: int = 1
     draft_cfg: Optional[ModelConfig] = None
     draft_params: Any = None
+    adaptive: bool = False  # per-slot EWMA acceptance -> draft caps
+    k_min: int = 1  # adaptive floor (never shrink below this cap)
+    ewma_decay: float = 0.5  # weight of the newest acceptance ratio
 
 
-def draft_caps(slots, lengths, active, k: int, seq_ceiling) -> np.ndarray:
+def draft_caps(slots, lengths, active, k: int, seq_ceiling,
+               adaptive: Optional["AdaptiveDraft"] = None) -> np.ndarray:
     """Per-slot draft-length caps shared by the single-device and
     distributed engines: never draft past the request's remaining
     generation budget (``max_new`` minus what it already emitted) or past
     the cache ceiling (the verify writes ``counts+1`` positions starting
-    at ``lengths[b]``).  ``slots`` may index engine-global ids — proposer
-    state is keyed the same way, so in the distributed engine it is
-    effectively shard-local (slot ids are ``shard * slots_per_shard +
-    local``), with no cross-shard coupling."""
+    at ``lengths[b]``).  ``adaptive`` (if given) further shrinks each
+    slot's cap to its :meth:`AdaptiveDraft.cap` — shrink-only, so every
+    safety bound above still holds.  ``slots`` may index engine-global
+    ids — proposer state is keyed the same way, so in the distributed
+    engine it is effectively shard-local (slot ids are ``shard *
+    slots_per_shard + local``), with no cross-shard coupling."""
     caps = np.zeros((len(slots),), np.int32)
     for b, req in enumerate(slots):
         if req is None or not active[b]:
             continue
-        cap = min(k, req.max_new - len(req.out))
+        top = k if adaptive is None else adaptive.cap(b)
+        cap = min(top, req.max_new - len(req.out))
         if seq_ceiling is not None:
             cap = min(cap, seq_ceiling - 1 - int(lengths[b]))
         caps[b] = max(0, cap)
     return caps
+
+
+class AdaptiveDraft:
+    """Per-slot adaptive draft sizing: EWMA acceptance -> draft caps.
+
+    Speculation's cost scales with the draft length (a k-token draft
+    rides k extra verify positions and, for ``proposer="model"``, k
+    draft-model steps) while its payoff scales with the *accepted*
+    length.  This tracker keeps a per-slot EWMA of the acceptance ratio
+    of each verify (``accepted / proposed``) and converts it into that
+    slot's next draft cap, ``ceil(ewma * k)`` clamped to ``[k_min, k]``:
+    a rejection streak halves the estimate each observation (with the
+    default ``decay=0.5``) until the slot drafts only ``k_min`` tokens,
+    and a single fully-accepted verify pulls it back up — recovery costs
+    at most a few short-draft ticks.
+
+    The tracker only ever shrinks *proposals*; acceptance itself is
+    untouched, so greedy output streams are bit-identical with or
+    without it.  New slots start optimistic (EWMA 1.0 => cap ``k``) —
+    the first verify is the first evidence.  Zero-token proposals
+    (``proposed == 0``: the n-gram table had no match, or the cap
+    bounded to 0 by the request's remaining budget) are not evidence of
+    rejection and leave the estimate untouched.
+    """
+
+    def __init__(self, k: int, k_min: int = 1, decay: float = 0.5):
+        if not 0 <= k_min <= k:
+            raise ValueError(f"k_min={k_min} must be in [0, k={k}]")
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"ewma_decay={decay} must be in (0, 1]")
+        self.k = k
+        self.k_min = k_min
+        self.decay = decay
+        self._ewma: Dict[int, float] = {}
+
+    @classmethod
+    def from_spec(cls, spec: "SpecConfig") -> Optional["AdaptiveDraft"]:
+        if not spec.adaptive:
+            return None
+        return cls(spec.k, k_min=spec.k_min, decay=spec.ewma_decay)
+
+    def alloc(self, slot: int) -> None:
+        self._ewma[slot] = 1.0
+
+    def free(self, slot: int) -> None:
+        self._ewma.pop(slot, None)
+
+    def observe(self, slot: int, proposed: int, accepted: int) -> None:
+        """Fold one verify's outcome into the slot's estimate."""
+        if proposed <= 0 or slot not in self._ewma:
+            return
+        ratio = min(1.0, accepted / proposed)
+        self._ewma[slot] += self.decay * (ratio - self._ewma[slot])
+
+    def cap(self, slot: int) -> int:
+        """The slot's current draft cap, in [k_min, k]."""
+        e = self._ewma.get(slot, 1.0)
+        # ceil: a slot is only ever denied a draft position its estimate
+        # has fully given up on (cap k requires ewma > (k-1)/k)
+        return max(self.k_min, min(self.k, -int(-e * self.k // 1)))
+
+    def stats(self) -> Dict[str, float]:
+        caps = [self.cap(b) for b in self._ewma]
+        return {
+            "adaptive_slots": len(caps),
+            "adaptive_cap_mean": float(np.mean(caps)) if caps else 0.0,
+        }
 
 
 class DraftProposer:
@@ -182,8 +266,10 @@ class NgramProposer(DraftProposer):
 
 
 class ModelDraft(DraftProposer):
-    """Small-model draft: k batched greedy decode steps per tick against
-    the draft model's own contiguous KV cache (one row per engine slot).
+    """Small-model draft: up to k batched greedy decode steps per tick —
+    one per position of the batch's largest per-slot cap, so adaptive
+    caps cut draft forwards too — against the draft model's own
+    contiguous KV cache (one row per engine slot).
 
     The draft cache mirrors the target slot-for-slot: admission resets the
     row, target prefill chunks replay through the draft model (plus a
@@ -271,7 +357,10 @@ class ModelDraft(DraftProposer):
         pos = np.where(active, lengths, self.lengths).astype(np.int32)
         pos = np.minimum(pos, self.max_seq - 1)
         toks = np.array(cur_tok, np.int32).reshape(B, 1).copy()
-        for j in range(k):
+        # steps past every row's cap would only re-freeze already-frozen
+        # rows: stop at the batch's largest cap, so shrunken (adaptive)
+        # caps cut draft-model forwards, not just proposed tokens
+        for j in range(int(counts.max(initial=0))):
             logits, self.cache = self._step(
                 self.params, jnp.asarray(toks), self.cache,
                 jnp.asarray(pos))

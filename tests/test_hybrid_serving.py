@@ -60,10 +60,10 @@ def _prompts(cfg, seed=3):
 
 
 def _serve(cfg, params, prompts, *, mode="auto", max_new=8, spec=None,
-           slots=2):
+           slots=2, layout="auto", **kw):
     eng = ServeEngine(cfg, params, batch_slots=slots, max_seq=MAX_SEQ,
                       eos_id=-1, chunk_size=CHUNK, prefill_mode=mode,
-                      spec=spec)
+                      spec=spec, kv_layout=layout, **kw)
     for p in prompts:
         eng.submit(list(p), max_new=max_new)
     eng.run(max_ticks=50_000)
@@ -136,6 +136,70 @@ def test_spec_greedy_bit_exact_with_rejections(setup, request):
 
 
 # ---------------------------------------------------------------------------
+# per-kind paged layout: attn layers page, rings/states stay slot-resident
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_auto_routes_paged(mixed_setup, windowed_setup):
+    """auto flips a mixed stack (has a global-attention layer) to the
+    per-kind paged layout; an attention-free stack stays stacked — it
+    has nothing to page."""
+    cfg_m, params_m = mixed_setup
+    eng = ServeEngine(cfg_m, params_m, batch_slots=1, max_seq=MAX_SEQ,
+                      eos_id=-1)
+    assert eng.paged
+    cfg_w, params_w = windowed_setup
+    eng = ServeEngine(cfg_w, params_w, batch_slots=1, max_seq=MAX_SEQ,
+                      eos_id=-1)
+    assert not eng.paged
+
+
+@pytest.mark.parametrize("spec", [None, SpecConfig(k=4)],
+                         ids=["plain", "spec"])
+def test_mixed_paged_bitexact_vs_stacked(mixed_setup, spec):
+    """Greedy streams through the per-kind paged layout are token-for-
+    token identical to the contiguous layout — plain decode and
+    speculative (the rejection path exercises page rewind AND the
+    slot-resident StateStore commit in one stack)."""
+    cfg, params = mixed_setup
+    rng = np.random.default_rng(7)
+    pat = list(rng.integers(1, cfg.vocab_size, 6))
+    prompts = [pat * 4,
+               list(rng.integers(1, cfg.vocab_size, 40)),
+               list(rng.integers(1, cfg.vocab_size, 9))]
+    eng_p, paged = _serve(cfg, params, prompts, max_new=10, spec=spec,
+                          layout="paged")
+    eng_s, stacked = _serve(cfg, params, prompts, max_new=10, spec=spec,
+                            layout="stacked")
+    assert eng_p.paged and not eng_s.paged
+    assert eng_p._state_store is not None  # slot-resident kinds rode along
+    if spec is not None:
+        assert eng_p.spec_accepted < eng_p.spec_proposed  # rejections ran
+    assert paged == stacked
+
+
+def test_mixed_paged_prefix_sharing_saves_pages(mixed_setup):
+    """Prefix sharing on a mixed stack links the attention layers' prompt
+    pages (a real page saving, previously 0 for hybrids) even though the
+    slot-resident state forces a full re-prefill; outputs are identical
+    to the unshared run."""
+    cfg, params = mixed_setup
+    ps = 16
+    sys_prompt = list(np.random.default_rng(13).integers(
+        1, cfg.vocab_size, 2 * ps))
+    prompts = [sys_prompt + [3], sys_prompt + [4]]
+    eng, shared = _serve(cfg, params, prompts, max_new=4, layout="paged",
+                         page_size=ps)
+    assert eng.kv.prefix_hit_pages == 2  # second prompt linked 2 pages
+    solo, unshared = _serve(cfg, params, prompts, max_new=4,
+                            layout="paged", page_size=ps,
+                            prefix_sharing=False)
+    assert solo.kv.prefix_hit_pages == 0
+    assert eng.kv.pages_allocated_total < solo.kv.pages_allocated_total
+    assert shared == unshared
+
+
+# ---------------------------------------------------------------------------
 # window-capped stacks: admission without a max_seq ceiling
 # ---------------------------------------------------------------------------
 
@@ -171,9 +235,11 @@ def test_bounded_stack_keeps_ceiling(mixed_setup):
 # ---------------------------------------------------------------------------
 
 
-def test_paged_layout_refuses_hybrid(windowed_setup):
-    """Rings and carried state are not page-addressable: every paged
-    entry point must refuse the stack with ValueError."""
+def test_paged_layout_refuses_attention_free(windowed_setup):
+    """A stack with no global-attention layer has nothing to page —
+    rings and carried state are slot-resident by construction — so every
+    paged entry point must refuse it with ValueError (naming the
+    non-pageable layers), not serve a pool nothing would ever use."""
     cfg, params = windowed_setup
     with pytest.raises(ValueError, match="global-attention"):
         PagedCacheManager(cfg, 2, MAX_SEQ)

@@ -363,6 +363,150 @@ def test_paged_oracle_bitexact_vs_contiguous_oracle():
     np.testing.assert_array_equal(np.asarray(paged), np.asarray(contiguous))
 
 
+def test_decode_step_tag_along_write_parks_on_null_page(gpt2_setup):
+    """An inactive row riding the batched decode step must NOT write at
+    its own length: with per-kind prefix sharing a prefilling sharer's
+    length points into pages the prefix OWNER still reads, so the
+    tag-along write parks on the null page instead.  Regression test for
+    a live-prefix corruption the serving bench caught: the owner's
+    stream diverged once a sharer was admitted mid-decode."""
+    cfg, params = gpt2_setup
+    ps, n_pg = 16, 4
+    P = 1 + 2 * n_pg
+    cache = lm.init_cache(cfg, P, ps, layout="paged")
+    # row 1 (mid-prefill, length 0) links row 0's prompt page 1 — the
+    # per-kind sharing shape.  Row 0 actively decodes at position 20.
+    bt = jnp.asarray([[1, 2, 3, 4], [1, 6, 7, 8]], jnp.int32)
+    lengths = jnp.asarray([20, 0], jnp.int32)
+    toks = jnp.asarray([[5], [9]], jnp.int32)
+    shared_before = jax.tree_util.tree_map(lambda t: t[:, 1], cache)
+    _, new_cache = lm.decode_step(
+        params, cfg, toks, cache, lengths,
+        active=jnp.asarray([True, False]), block_table=bt)
+    shared_after = jax.tree_util.tree_map(lambda t: t[:, 1], new_cache)
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.array_equal(a, b)),
+        shared_before, shared_after)), (
+        "tag-along row wrote into a linked (shared) prompt page")
+    # the active row's write did land: its page 1 content is the page
+    # named for position 20 -> block 1 -> page id 2
+    own = jax.tree_util.tree_map(lambda t: t[:, 2], new_cache)
+    own_before = jax.tree_util.tree_map(lambda t: t[:, 2], cache)
+    assert not jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.array_equal(a, b)), own, own_before))
+
+
+# ---------------------------------------------------------------------------
+# paged verify kernel vs oracle (interpret mode; hypothesis-free sweeps)
+# ---------------------------------------------------------------------------
+
+
+def _verify_case(rng, B, H, Hkv, D, ps, n_pg, C):
+    """Random paged-verify operands: pool with a null page, scrambled
+    block tables, per-row bases anywhere the chunk still fits the pool."""
+    P = 1 + B * n_pg
+    q = jnp.asarray(rng.normal(size=(B, C, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, Hkv, ps, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, Hkv, ps, D)), jnp.float32)
+    bt = jnp.asarray(
+        1 + rng.permutation(B * n_pg).reshape(B, n_pg), jnp.int32)
+    base = jnp.asarray(rng.integers(0, n_pg * ps - C + 1, (B,)), jnp.int32)
+    return q, kp, vp, base, bt
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,D,ps,n_pg,C,window",
+    [
+        (2, 4, 4, 64, 16, 4, 4, 0),   # MHA, k+1 = 4
+        (2, 8, 2, 64, 16, 4, 6, 0),   # GQA
+        (1, 4, 1, 128, 8, 6, 3, 0),   # MQA, small pages
+        (3, 2, 2, 32, 32, 2, 8, 0),   # wide chunk, page == two blocks
+        (2, 4, 4, 64, 16, 4, 4, 24),  # sliding window < live length
+        (1, 4, 2, 64, 8, 6, 5, 8),    # window == page size
+    ],
+)
+def test_paged_verify_kernel_matches_oracle(B, H, Hkv, D, ps, n_pg, C,
+                                            window):
+    """The scalar-prefetch verify kernel matches the gather-first oracle
+    across page-size / window / chunk-width grids with per-row bases
+    drawn anywhere in the pool (mid-page and page-edge landings)."""
+    rng = np.random.default_rng(B * 977 + H * 31 + ps + C + window)
+    q, kp, vp, base, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, C)
+    out = ops.paged_verify(q, kp, vp, base, bt, window=window,
+                           backend="interpret")
+    want = ops.paged_verify(q, kp, vp, base, bt, window=window,
+                            backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("base0", [0, 7, 8, 15, 16, 28])
+def test_paged_verify_kernel_page_edge_offsets(base0):
+    """Deterministic base offsets at and around page boundaries: chunk
+    entirely in page 0, straddling the first boundary, starting exactly
+    on a boundary, and ending flush with the pool."""
+    B, H, Hkv, D, ps, n_pg, C = 1, 2, 2, 32, 8, 4, 4
+    rng = np.random.default_rng(base0)
+    q, kp, vp, _, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, C)
+    base = jnp.asarray([base0], jnp.int32)
+    out = ops.paged_verify(q, kp, vp, base, bt, backend="interpret")
+    want = ops.paged_verify(q, kp, vp, base, bt, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_paged_verify_single_position_matches_decode_oracle():
+    """A C=1 verify chunk is a decode step: the verify oracle at base =
+    len-1 must agree with the decode oracle at lengths = len (the page
+    already holds the position's own K/V in both framings)."""
+    rng = np.random.default_rng(5)
+    B, H, Hkv, D, ps, n_pg = 2, 4, 2, 32, 8, 3
+    q, kp, vp, _, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, 1)
+    lengths = jnp.asarray(rng.integers(1, n_pg * ps + 1, (B,)), jnp.int32)
+    ver = ref.paged_verify_ref(q, kp, vp, lengths - 1, bt)
+    dec = ref.paged_mha_decode_ref(q[:, 0], kp, vp, lengths, bt)
+    np.testing.assert_allclose(
+        np.asarray(ver[:, 0]), np.asarray(dec), rtol=3e-5, atol=3e-5)
+
+
+try:  # mirror the decode sweeps: property-test only where hypothesis exists
+    import importlib.util as _ilu
+    _HAS_HYPOTHESIS = _ilu.find_spec("hypothesis") is not None
+except Exception:  # pragma: no cover
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        data=st.data(),
+        ps=st.sampled_from([8, 16]),
+        n_pg=st.integers(2, 4),
+        c=st.integers(1, 6),
+        window=st.sampled_from([0, 8, 24]),
+    )
+    def test_paged_verify_kernel_property(data, ps, n_pg, c, window):
+        """Property sweep: for any page size / page count / chunk width /
+        window and any in-pool bases, kernel == oracle."""
+        B, H, Hkv, D = 2, 4, 2, 32
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        q, kp, vp, base, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, c)
+        out = ops.paged_verify(q, kp, vp, base, bt, window=window,
+                               backend="interpret")
+        want = ops.paged_verify(q, kp, vp, base, bt, window=window,
+                                backend="jnp")
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; parametrized "
+                      "sweeps above cover the same grid deterministically")
+    def test_paged_verify_kernel_property():
+        pass
+
+
 # ---------------------------------------------------------------------------
 # prefill overrun guard
 # ---------------------------------------------------------------------------

@@ -394,3 +394,107 @@ def test_paged_rewind_refuses_prompt_and_preserves_sharing():
     kv.free(s3)
     kv.free(s1)
     assert kv.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# adaptive draft sizing: EWMA acceptance -> per-slot caps
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_draft_shrinks_and_recovers():
+    """A rejection streak walks the cap down to k_min; full acceptance
+    pulls it back to k within a few observations.  Shrink is monotone
+    under sustained rejection (no oscillation)."""
+    from repro.serving.speculative import AdaptiveDraft
+
+    ad = AdaptiveDraft(k=4, k_min=1, decay=0.5)
+    ad.alloc(0)
+    assert ad.cap(0) == 4  # optimistic start: first verify is evidence
+    caps = []
+    for _ in range(6):
+        ad.observe(0, 4, 0)
+        caps.append(ad.cap(0))
+    assert caps == sorted(caps, reverse=True)
+    assert ad.cap(0) == 1  # floored at k_min, never 0
+    for _ in range(4):
+        ad.observe(0, ad.cap(0), ad.cap(0))
+    assert ad.cap(0) == 4  # recovered the full draft length
+
+
+def test_adaptive_draft_bounds_and_evidence_rules():
+    """Caps stay inside [k_min, k] under any observation mix; zero-token
+    proposals are not rejection evidence; free() drops the slot; the
+    SpecConfig gate returns None unless adaptive=True."""
+    from repro.serving.speculative import AdaptiveDraft
+
+    ad = AdaptiveDraft(k=6, k_min=2, decay=0.5)
+    ad.alloc(3)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        p = int(rng.integers(0, 7))
+        ad.observe(3, p, int(rng.integers(0, p + 1)))
+        assert 2 <= ad.cap(3) <= 6
+    ad.alloc(4)
+    for _ in range(10):
+        ad.observe(4, 0, 0)  # no-match ticks: estimate untouched
+    assert ad.cap(4) == 6
+    ad.free(4)
+    assert ad.stats()["adaptive_slots"] == 1
+    assert AdaptiveDraft.from_spec(SpecConfig(k=4)) is None
+    got = AdaptiveDraft.from_spec(SpecConfig(k=4, adaptive=True, k_min=2))
+    assert got is not None and got.k_min == 2
+    with pytest.raises(ValueError, match="k_min"):
+        AdaptiveDraft(k=4, k_min=5)
+    with pytest.raises(ValueError, match="ewma_decay"):
+        AdaptiveDraft(k=4, decay=0.0)
+
+
+def test_adaptive_draft_caps_compose_with_safety_bounds():
+    """draft_caps still enforces the generation budget and the cache
+    ceiling; the adaptive cap only ever shrinks the result."""
+    import types
+
+    from repro.serving.speculative import AdaptiveDraft, draft_caps
+
+    ad = AdaptiveDraft(k=6, k_min=1, decay=0.5)
+    ad.alloc(0)
+    ad.alloc(1)
+    ad.observe(1, 6, 0)  # slot 1's estimate halves -> cap 3
+    slots = [types.SimpleNamespace(max_new=10, out=[]),
+             types.SimpleNamespace(max_new=2, out=[])]
+    lengths = np.asarray([60, 10])
+    fixed = draft_caps(slots, lengths, [True, True], 6, 64)
+    adapt = draft_caps(slots, lengths, [True, True], 6, 64, adaptive=ad)
+    assert fixed.tolist() == [3, 2]  # ceiling 64-1-60=3; budget 2
+    assert adapt.tolist() == [3, 2]  # adaptive cap 3 never loosens either
+    ad.observe(1, 2, 0)  # ewma 0.25 -> cap ceil(1.5) = 2: budget still binds
+    assert draft_caps(slots, lengths, [True, True], 6, 64,
+                      adaptive=ad).tolist() == [3, 2]
+    ad.observe(1, 2, 0)  # ewma 0.125 -> cap 1: now below the budget
+    assert draft_caps(slots, lengths, [True, True], 6, 64,
+                      adaptive=ad).tolist() == [3, 1]
+
+
+@pytest.mark.parametrize("kv_layout", ["stacked", "paged"])
+def test_adaptive_spec_bitexact_and_reduces_waste(gpt2_setup, kv_layout):
+    """With a low-acceptance draft model, adaptive sizing leaves the
+    greedy stream bit-identical (shrink-only) while proposing strictly
+    fewer draft tokens than the fixed-k engine — the wasted-verify-work
+    reduction the knob exists for."""
+    cfg, params = gpt2_setup
+    draft_params = lm.init(cfg, jax.random.PRNGKey(7), max_seq=64)
+    prompts = _mixed_prompts(cfg.vocab_size, seed=2)
+    _, plain = _run(cfg, params, prompts, kv_layout=kv_layout)
+    eng_f, fixed = _run(cfg, params, prompts, kv_layout=kv_layout,
+                        spec=SpecConfig(k=3, proposer="model",
+                                        draft_cfg=cfg,
+                                        draft_params=draft_params))
+    eng_a, adapt = _run(cfg, params, prompts, kv_layout=kv_layout,
+                        spec=SpecConfig(k=3, proposer="model",
+                                        draft_cfg=cfg,
+                                        draft_params=draft_params,
+                                        adaptive=True))
+    assert adapt == fixed == plain
+    assert eng_a.adaptive is not None
+    assert eng_f.spec_accepted < eng_f.spec_proposed  # low acceptance
+    assert eng_a.spec_proposed < eng_f.spec_proposed  # less drafted waste
