@@ -71,8 +71,12 @@ slot set into two phase-shifted decode waves, so each wave's fetch hides
 behind the other wave's in-flight call even after prefill traffic dries
 up).  With ``--spec`` both engines also run speculative decoding and the
 distributed stream must still match single-device token-for-token.  A
-``BENCH_dist[_spec].json`` artifact (config + every scalar metric) is
-written to the working directory for in-repo perf tracking.
+``BENCH_dist[_spec].json`` artifact (config + every scalar metric,
+through the versioned ``write_bench_artifact`` schema like every other
+part) is written to the working directory for in-repo perf tracking,
+next to a ``TRACE_dist[_spec].json`` Perfetto timeline dumped from the
+engine's recording telemetry — validated structurally, and its exposed
+transfer spans must match ``stats()["transfers_exposed"]`` one-for-one.
 
 On CPU the wall-clock gap understates the paper's pipeline argument (no
 weight-streaming overlap here), so the headline columns are the *schedule*
@@ -94,6 +98,11 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import lm
 from repro.serving.engine import ServeEngine
+from repro.serving.telemetry import (
+    Telemetry,
+    validate_chrome_trace,
+    write_bench_artifact,
+)
 
 
 def build_workload(rng: np.random.Generator, n_requests: int, vocab: int):
@@ -184,7 +193,6 @@ def run_spec_part(args) -> None:
     work and improve tokens per total call — target + draft forwards).
     Writes a ``BENCH_spec.json`` artifact.
     """
-    import json
     import os
 
     from repro.serving.speculative import SpecConfig
@@ -286,26 +294,27 @@ def run_spec_part(args) -> None:
         "adaptive caps must improve tokens per total (target+draft) call "
         "on the low-acceptance workload")
 
-    art = {
-        "bench": "serving_spec",
-        "config": {
+    out_path = write_bench_artifact(
+        os.path.abspath("BENCH_spec.json"),
+        bench="serving_spec",
+        config={
             "model": cfg.name, "slots": args.slots, "chunk": args.chunk,
             "max_seq": max_seq, "seed": args.seed, "k": args.spec_k,
             "repetitive": {"requests": len(prompts), "max_new": max_new},
             "low_acceptance": {"requests": len(low), "max_new": 24,
                                "proposer": "model"},
         },
-        "metrics": {
+        metrics={
             "repetitive": {n: _finite_scalars(r["s"])
                            for n, r in rows.items()},
             "low_acceptance": {n: _finite_scalars(r["s"])
                                for n, r in low_rows.items()},
         },
-    }
-    out_path = os.path.abspath("BENCH_spec.json")
-    with open(out_path, "w") as f:
-        json.dump(art, f, indent=1, sort_keys=True)
-        f.write("\n")
+        gates={
+            "tokens_per_model_call_min": 1.5,
+            "adaptive_tokens_per_model_call_frac_min": 0.9,
+            "low_acceptance_tokens_per_total_call_improves": True,
+        })
     print(f"wrote {out_path}")
 
     print(f"\nmodel-call reduction: {rows['plain']['s']['model_calls']:.0f}"
@@ -358,7 +367,6 @@ def run_hybrid_part(args) -> None:
     # links shared prompt pages — a saving that was structurally 0 when
     # paged refused every hybrid stack
     import dataclasses
-    import json
     import os
 
     mixed = dataclasses.replace(
@@ -398,27 +406,27 @@ def run_hybrid_part(args) -> None:
         "per-kind prefix sharing must allocate >=30% fewer attn pages on "
         f"the shared-system-prompt workload (got {saved:.1%})")
 
-    art = {
-        "bench": "serving_hybrid",
-        "config": {
+    out_path = write_bench_artifact(
+        os.path.abspath("BENCH_hybrid.json"),
+        bench="serving_hybrid",
+        config={
             "windowed_model": cfg.name, "mixed_pattern": mixed.block_pattern,
             "requests": args.requests, "chunk": args.chunk,
             "slots": args.slots, "max_new": args.max_new,
             "max_seq": max_seq, "sys_len": args.sys_len,
             "page_size": args.page_size, "seed": args.seed,
         },
-        "metrics": {
+        metrics={
             "windowed": {m: _finite_scalars(r) for m, r in rows.items()},
             "mixed_shared_prefix": {m: _finite_scalars(r)
                                     for m, r in srows.items()},
             "tick_gain": tick_gain,
             "mixed_pages_saved_frac": saved,
         },
-    }
-    out_path = os.path.abspath("BENCH_hybrid.json")
-    with open(out_path, "w") as f:
-        json.dump(art, f, indent=1, sort_keys=True)
-        f.write("\n")
+        gates={
+            "tick_gain_min": 2.0,
+            "mixed_pages_saved_frac_min": 0.30,
+        })
     print(f"wrote {out_path}")
     print("SERVING_BENCH_HYBRID_OK")
 
@@ -466,12 +474,15 @@ def run_distributed_part(args) -> None:
     eng = DistributedServeEngine(
         cfg, params, n_shards=n_shards, slots_per_shard=1,
         max_seq=args.max_seq, eos_id=-1, chunk_size=args.chunk,
-        page_size=args.page_size, spec=spec)
+        page_size=args.page_size, spec=spec,
+        telemetry=Telemetry(trace=True))
     eng.submit(list(range(1, args.chunk + 2)), max_new=2)  # warm the jits
     eng.run()
     warm = len(eng.finished)
     # measure the workload only (ticks, calls, utilization, overlap), as
-    # run_mode does for the single-device baseline
+    # run_mode does for the single-device baseline; reset_counters also
+    # clears the trace, so the dumped timeline covers exactly the ticks
+    # the transfer counters aggregate
     eng.reset_counters()
     for p in prompts:
         eng.submit(p, max_new=args.max_new)
@@ -492,8 +503,14 @@ def run_distributed_part(args) -> None:
           f"{toks / max(wall, 1e-9):8.1f}")
     print(f"\nper-device utilization: {np.round(util, 2).tolist()} "
           f"(mean {np.mean(util):.2f})")
-    print(f"tick latency: p50 {s.get('tick_p50_ms', 0):.1f}ms / "
-          f"p99 {s.get('tick_p99_ms', 0):.1f}ms over {s['ticks']} ticks")
+    print(f"tick latency: p50 {s['tick_p50_ms']:.1f}ms / "
+          f"p99 {s['tick_p99_ms']:.1f}ms over {s['ticks']} ticks")
+    print(f"request latency: TTFT p50 {s['p50_ttft_s']*1e3:.1f}ms / "
+          f"p99 {s['p99_ttft_s']*1e3:.1f}ms, TPOT p50 "
+          f"{s['p50_tpot_s']*1e3:.1f}ms / p99 {s['p99_tpot_s']*1e3:.1f}ms "
+          f"over {s['requests']} requests")
+    print(f"wave occupancy: mean {s['wave_occupancy_mean']:.2f} slots/"
+          f"dispatch, imbalance {s['wave_imbalance']:.2f}")
     print(f"transfers: {s['transfers']} total, {s['transfers_hidden']} "
           f"hidden behind compute, largest {s['max_transfer_bytes']}B "
           "(metadata/logits only — K/V pages never move)")
@@ -506,9 +523,49 @@ def run_distributed_part(args) -> None:
               f"{s['tokens_per_verify_call']:.2f} tokens/verify over "
               f"{s['spec_ticks']} verify dispatches")
 
-    art = {
-        "bench": "serving_dist",
-        "config": {
+    # -- the dumped timeline must agree with the aggregate counters -----
+    # every exposed transfer the scheduler counted is one visible
+    # unoverlapped span on the trace's transfer track (reset_counters
+    # cleared both at the same boundary, so the sets are comparable)
+    trace_path = os.path.abspath(
+        f"TRACE_dist{'_spec' if args.spec else ''}.json")
+    eng.dump_trace(trace_path)
+    with open(trace_path) as f:
+        trace = json.load(f)
+    counts = validate_chrome_trace(trace)
+    exposed_spans = sum(
+        1 for ev in trace["traceEvents"]
+        if ev.get("ph") == "X" and ev.get("cat") == "transfer.exposed")
+    hidden_spans = sum(
+        1 for ev in trace["traceEvents"]
+        if ev.get("ph") == "X" and ev.get("cat") == "transfer.hidden")
+    print(f"trace: {sum(counts.values())} events -> {trace_path} "
+          f"({hidden_spans} hidden + {exposed_spans} exposed transfer "
+          "spans)")
+    assert exposed_spans == s["transfers_exposed"], (
+        "trace/counter divergence: every exposed transfer must be a "
+        f"visible unoverlapped span ({exposed_spans} spans vs "
+        f"{s['transfers_exposed']} counted)")
+    assert hidden_spans == s["transfers_hidden"], (
+        f"{hidden_spans} hidden spans vs {s['transfers_hidden']} counted")
+
+    # p50/p99 TTFT/TPOT come from the shared registry's histograms, not
+    # per-benchmark list math
+    assert s["requests"] == len(prompts), (s["requests"], len(prompts))
+    for k in ("p50_ttft_s", "p99_ttft_s", "p50_tpot_s", "p99_tpot_s"):
+        assert s[k] > 0, f"{k} must be positive with completed requests"
+    assert s["p50_ttft_s"] <= s["p99_ttft_s"]
+    assert s["p50_tpot_s"] <= s["p99_tpot_s"]
+
+    metrics = {
+        k: s[k] for k in sorted(s)
+        if isinstance(s[k], (int, float)) and np.isfinite(s[k])
+    }
+    metrics["tok_per_s"] = toks / max(wall, 1e-9)
+    out_path = write_bench_artifact(
+        os.path.abspath(f"BENCH_dist{'_spec' if args.spec else ''}.json"),
+        bench="serving_dist",
+        config={
             "model": cfg.name, "n_shards": n_shards, "slots_per_shard": 1,
             "decode_waves": int(s["decode_waves"]),
             "requests": len(prompts), "chunk": args.chunk,
@@ -516,21 +573,19 @@ def run_distributed_part(args) -> None:
             "page_size": args.page_size, "seed": args.seed,
             "spec_k": args.spec_k if args.spec else None,
         },
-        "metrics": {
-            k: s[k] for k in sorted(s)
-            if isinstance(s[k], (int, float)) and np.isfinite(s[k])
+        metrics=metrics,
+        gates={
+            "overlap_ratio_min": 0.85,
+            "overlap_ratio_drain_min": 0.85,
         },
-        "baseline_single_device": {
-            "ticks": base["ticks"], "model_calls": base["model_calls"],
-            "tok_per_s": base["tok_per_s"],
-        },
-    }
-    art["metrics"]["tok_per_s"] = toks / max(wall, 1e-9)
-    out_path = os.path.abspath(
-        f"BENCH_dist{'_spec' if args.spec else ''}.json")
-    with open(out_path, "w") as f:
-        json.dump(art, f, indent=1, sort_keys=True)
-        f.write("\n")
+        extra={
+            "baseline_single_device": {
+                "ticks": base["ticks"], "model_calls": base["model_calls"],
+                "tok_per_s": base["tok_per_s"],
+            },
+            "trace": {"path": trace_path,
+                      "events": {k: counts[k] for k in sorted(counts)}},
+        })
     print(f"wrote {out_path}")
 
     assert outs == base["outs"], (
@@ -686,6 +741,29 @@ def main() -> None:
     assert saved >= 0.30, (
         "prefix sharing must allocate >=30% fewer pages on the "
         f"shared-system-prompt workload (got {saved:.1%})")
+
+    # -- trace smoke: the single-device engine's recorded timeline ------
+    import json
+    import os
+    eng = ServeEngine(cfg, params, batch_slots=args.slots,
+                      max_seq=args.max_seq, eos_id=-1,
+                      chunk_size=args.chunk,
+                      telemetry=Telemetry(trace=True))
+    for p in prompts[:3]:
+        eng.submit(list(p), max_new=4)
+    eng.run()
+    s = eng.stats()
+    for k in ("p50_ttft_s", "p99_ttft_s", "p50_tpot_s", "p99_tpot_s"):
+        assert s[k] > 0, f"{k} must be positive with completed requests"
+    trace_path = os.path.abspath("TRACE_core.json")
+    eng.dump_trace(trace_path)
+    with open(trace_path) as f:
+        counts = validate_chrome_trace(json.load(f))
+    assert counts.get("X", 0) > 0 and counts.get("b", 0) == counts.get(
+        "e", 0) > 0, counts
+    print(f"trace smoke: {sum(counts.values())} events -> {trace_path} "
+          f"(TTFT p50 {s['p50_ttft_s']*1e3:.1f}ms / "
+          f"p99 {s['p99_ttft_s']*1e3:.1f}ms)")
     print("SERVING_BENCH_OK")
 
     # -- part "spec": speculative decode vs plain on repetitive text --

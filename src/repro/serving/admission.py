@@ -141,6 +141,16 @@ class DecodeWaveScheduler:
     def counts(self) -> List[int]:
         return [int((self.wave == w).sum()) for w in range(self.n_waves)]
 
+    def imbalance(self) -> float:
+        """Membership spread, 0 (perfectly balanced) to 1: the gap
+        between the heaviest and lightest wave over the assigned total.
+        This is the wave-imbalance bubble signal — a persistently high
+        value means one wave's dispatch is undersized and its shadow is
+        too short to hide the other wave's fetch."""
+        c = self.counts()
+        total = sum(c)
+        return (max(c) - min(c)) / total if total else 0.0
+
     def members(self, w: int) -> List[int]:
         return [b for b in range(len(self.wave)) if self.wave[b] == w]
 

@@ -80,6 +80,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import scheduler as sched
+from repro.core.perfmodel import FPGAPerfModel
 from repro.models import blocks, lm
 from repro.serving import sampler as samplers, speculative
 from repro.serving.admission import (
@@ -90,9 +91,23 @@ from repro.serving.distributed.transfer import TransferScheduler
 from repro.serving.engine import (
     DECODE, PREFILL, Request, drain_engine, latency_stats, submit_request)
 from repro.serving.quantize import calibrate, quantize_model_params
+from repro.serving.telemetry import (
+    TID_ENGINE, TID_REQUEST, Telemetry, linear_edges, registry_counter)
 
 
 class DistributedServeEngine:
+    # schedule counters backed by the telemetry registry (the single
+    # store stats() reads), same attribute spelling as before — see
+    # repro.serving.telemetry.registry_counter
+    ticks = registry_counter("ticks")
+    model_calls = registry_counter("model_calls")
+    prefill_calls = registry_counter("prefill_calls")
+    stalled = registry_counter("stalled")
+    spec_ticks = registry_counter("spec_ticks")
+    spec_proposed = registry_counter("spec_proposed")
+    spec_accepted = registry_counter("spec_accepted")
+    spec_emitted = registry_counter("spec_emitted")
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -116,7 +131,11 @@ class DistributedServeEngine:
         act_dtype=None,
         spec: Optional[speculative.SpecConfig] = None,
         decode_waves: int = 2,
+        telemetry: Optional[Telemetry] = None,
     ):
+        # must exist before any counter attribute is assigned: the
+        # registry_counter descriptors dereference self.tel
+        self.tel = telemetry or Telemetry()
         if not blocks.chunk_capable(cfg):
             # ValueError, not assert: the tick is chunked-prefill-only
             # and must refuse encoder-decoder stacks under python -O too
@@ -190,7 +209,9 @@ class DistributedServeEngine:
                 self.kv_sharding),
             abstract)
 
-        self.xfer = TransferScheduler()
+        # the transfer meter re-emits its events as trace spans on the
+        # same timeline when tracing is on (hidden vs exposed visible)
+        self.xfer = TransferScheduler(tracer=self.tel.tracer)
         self.cur_tok = np.zeros((self.D, self.Bs, 1), np.int32)
         self._temp = np.zeros((self.B,), np.float32)
         self._topk = np.zeros((self.B,), np.int32)
@@ -296,9 +317,39 @@ class DistributedServeEngine:
         # per-wave in-flight dispatch: dicts made by _dispatch_wave, or
         # None; the one-tick-delayed result path, one lane per wave
         self._pending_wave: List[Optional[dict]] = [None] * self.n_waves
-        self.tick_wall: List[float] = []  # per-tick wall seconds
         self._busy_ticks = np.zeros((self.D,), np.int64)
         self.mdk_stats = sched.mdk_stats(cfg)
+        self.stalled_detail: Dict[str, List[int]] = {
+            "queued": [], "in_flight": []}
+
+        # telemetry: cached histogram/gauge handles (hot paths record
+        # without name lookups) + the perf model's per-call predictions
+        # that compute spans carry for the modeled-vs-measured check
+        reg = self.tel.registry
+        self._h_ttft = reg.histogram("ttft_s")
+        self._h_tpot = reg.histogram("tpot_s")
+        self._h_tick = reg.histogram("tick_wall_s")
+        # per-wave decode occupancy in rows-per-dispatch: the
+        # wave-imbalance bubble signal (ROADMAP item 2) as a histogram,
+        # plus a live gauge per wave with its high-water mark
+        self._h_wave_occ = reg.histogram(
+            "wave_occupancy", edges=linear_edges(0.0, self.B + 1,
+                                                 self.B + 1))
+        self._g_wave = [reg.gauge(f"wave{w}_slots")
+                        for w in range(self.n_waves)]
+        self._h_accept = (
+            reg.histogram("spec_accept_len",
+                          edges=linear_edges(0.0, spec.k + 2, spec.k + 2))
+            if spec is not None else None)
+        pm = FPGAPerfModel(cfg, nodes=self.D)
+        self._modeled_decode_s = pm.token_latency()["total"]
+        self._modeled_prefill_tok_s = pm.prefill_token_latency()
+        self._c_pref_mod = reg.counter("prefill_modeled_s")
+        self._c_pref_meas = reg.counter("prefill_measured_s")
+        self._c_dec_mod = reg.counter("decode_modeled_s")
+        self._c_dec_meas = reg.counter("decode_measured_s")
+        if self.proposer is not None:
+            self.proposer.tracer = self.tel.tracer
 
     # ------------------------------------------------------------------
     def submit(
@@ -339,12 +390,23 @@ class DistributedServeEngine:
                 self.proposer.alloc(slot, req.prompt, shared_tokens)
             if self.adaptive is not None:
                 self.adaptive.alloc(slot)
+            tr = self.tel.tracer
+            if tr.enabled:
+                tr.instant("req.admitted", "request", TID_REQUEST,
+                           {"rid": req.rid, "slot": slot, "shard": s,
+                            "shared_tokens": shared_tokens})
 
     # ------------------------------------------------------------------
     def _emit(self, req: Request, tok: int, now: float) -> None:
         """Record one generated token and retire the request if finished."""
+        tr = self.tel.tracer
         if req.t_first is None:
             req.t_first = now
+            self._h_ttft.record(now - req.t_submit)
+            if tr.enabled:
+                tr.instant("req.first_token", "request", TID_REQUEST,
+                           {"rid": req.rid,
+                            "ttft_s": now - req.t_submit})
         req.out.append(tok)
         s, ls = self.kv.shard_of(req.slot)
         if (
@@ -353,6 +415,14 @@ class DistributedServeEngine:
             or len(req.prompt) + len(req.out) >= self.max_seq
         ):
             req.t_done = now
+            if len(req.out) > 1:
+                # one TPOT sample per request (see ServeEngine._emit)
+                self._h_tpot.record(
+                    (req.t_done - req.t_first) / (len(req.out) - 1))
+            if tr.enabled:
+                tr.instant("req.done", "request", TID_REQUEST,
+                           {"rid": req.rid, "tokens": len(req.out)})
+                tr.async_end("request", req.rid)
             self.finished.append(req)
             self.slots[req.slot] = None
             self.kv.free(req.slot)
@@ -433,16 +503,31 @@ class DistributedServeEngine:
                 bts[s] = self.kv.shards[s].block_tables[ch.slot]
             live.append((s, req, ch))
 
-        args = [self.params,
-                self._stage("prefill.tokens", toks), self.cache,
-                self._stage("prefill.slots", slots),
-                self._stage("prefill.offsets", offs),
-                self._stage("prefill.valids", valids),
-                self._stage("prefill.actives", acts)]
-        if self.paged:
-            args.append(self._stage("prefill.block_tables", bts))
-        logits_d, self.cache = self._prefill(*args)
-        op = self.xfer.dispatch("prefill", logits_d)
+        tr = self.tel.tracer
+        n_tok = int(valids.sum())
+        t0 = time.perf_counter()
+        with tr.span("prefill.round", "stage", TID_ENGINE,
+                     ({"shards": len(live), "tokens": n_tok,
+                       # per-shard chunks run in parallel across the
+                       # mesh: the round's modeled cost is the widest
+                       # shard's chunk, not the sum
+                       "modeled_s": (int(valids.max())
+                                     * self._modeled_prefill_tok_s)}
+                      if tr.enabled else None)), \
+                tr.annotation("prefill.round"):
+            args = [self.params,
+                    self._stage("prefill.tokens", toks), self.cache,
+                    self._stage("prefill.slots", slots),
+                    self._stage("prefill.offsets", offs),
+                    self._stage("prefill.valids", valids),
+                    self._stage("prefill.actives", acts)]
+            if self.paged:
+                args.append(self._stage("prefill.block_tables", bts))
+            logits_d, self.cache = self._prefill(*args)
+            op = self.xfer.dispatch("prefill", logits_d)
+        self._c_pref_mod.value += (int(valids.max(initial=0))
+                                   * self._modeled_prefill_tok_s)
+        self._c_pref_meas.value += time.perf_counter() - t0
 
         completions = []
         for s, req, ch in live:
@@ -464,48 +549,58 @@ class DistributedServeEngine:
         t0 = time.perf_counter()
         did = False
         tick_ops = []
+        tr = self.tel.tracer
 
-        # -- phase A: dispatch prefill rounds (hidden behind the waves'
-        #    in-flight decodes from last tick)
-        self._admit()
-        plans = self._plan_prefill()
-        # phase attribution for the transfer meter: a tick with prefill
-        # work is "prefill", a pure-decode tick is "drain" — the phase
-        # where the single-wave schedule used to collapse
-        self.xfer.set_phase("prefill" if any(plans) else "drain")
-        pending_first = []  # (op, logits_dev, [(shard, req)])
-        busy = np.zeros((self.D,), bool)
-        while any(plans):
-            chunks = [p.popleft() if p else None for p in plans]
-            op, logits_d, completions = self._dispatch_prefill_round(chunks)
-            tick_ops.append(op)
-            busy |= np.asarray([c is not None for c in chunks])
-            if completions:
-                pending_first.append((op, logits_d, completions))
-            did = True
+        with tr.span("tick", "engine"):
+            # -- phase A: dispatch prefill rounds (hidden behind the
+            #    waves' in-flight decodes from last tick)
+            with tr.span("admit"):
+                self._admit()
+            plans = self._plan_prefill()
+            # phase attribution for the transfer meter: a tick with
+            # prefill work is "prefill", a pure-decode tick is "drain" —
+            # the phase where the single-wave schedule used to collapse
+            self.xfer.set_phase("prefill" if any(plans) else "drain")
+            pending_first = []  # (op, logits_dev, [(shard, req)])
+            busy = np.zeros((self.D,), bool)
+            while any(plans):
+                chunks = [p.popleft() if p else None for p in plans]
+                op, logits_d, completions = self._dispatch_prefill_round(
+                    chunks)
+                tick_ops.append(op)
+                busy |= np.asarray([c is not None for c in chunks])
+                if completions:
+                    pending_first.append((op, logits_d, completions))
+                did = True
 
-        # -- phases B/C, once per wave: consume the wave's last results,
-        #    then redispatch it.  Wave w's fetch and input staging hide
-        #    behind wave 1-w's still-in-flight op (and phase A's prefill
-        #    ops) — the dual-stream shadow that holds in drain ticks too.
-        for w in range(self.n_waves):
-            did |= self._consume_wave(w)
-            did |= self._dispatch_wave(w, busy)
+            # -- phases B/C, once per wave: consume the wave's last
+            #    results, then redispatch it.  Wave w's fetch and input
+            #    staging hide behind wave 1-w's still-in-flight op (and
+            #    phase A's prefill ops) — the dual-stream shadow that
+            #    holds in drain ticks too.
+            for w in range(self.n_waves):
+                did |= self._consume_wave(w)
+                did |= self._dispatch_wave(w, busy)
 
-        # -- phase D: first tokens off completed prefills (hidden behind
-        #    the waves' just-dispatched calls)
-        for op, logits_d, completions in pending_first:
-            logits_h = self.xfer.fetch("prefill.logits", logits_d, of=op)
-            now = time.monotonic()
-            for s, req in completions:
-                self._emit(req, self._sample_one(logits_h[s], req), now)
+            # -- phase D: first tokens off completed prefills (hidden
+            #    behind the waves' just-dispatched calls)
+            if pending_first:
+                with tr.span("first_tokens"):
+                    for op, logits_d, completions in pending_first:
+                        logits_h = self.xfer.fetch("prefill.logits",
+                                                   logits_d, of=op)
+                        now = time.monotonic()
+                        for s, req in completions:
+                            self._emit(req,
+                                       self._sample_one(logits_h[s], req),
+                                       now)
 
-        for op in tick_ops:  # a prefill op cannot shadow beyond its tick
-            self.xfer.retire(op)
+            for op in tick_ops:  # prefill ops cannot shadow past the tick
+                self.xfer.retire(op)
         if did:
             self._busy_ticks += busy
             self.ticks += 1
-            self.tick_wall.append(time.perf_counter() - t0)
+            self._h_tick.record(time.perf_counter() - t0)
 
     # ------------------------------------------------------------------
     def _consume_wave(self, w: int) -> bool:
@@ -516,16 +611,23 @@ class DistributedServeEngine:
             return False
         self._pending_wave[w] = None
         kind = pend["kind"]
-        logits_h = self.xfer.fetch(
-            f"{kind}.w{w}.logits", pend["logits"], of=pend["op"])
-        now = time.monotonic()
-        if kind == "decode":
-            sampled = self._sample_rows(logits_h)
-            for b, req in enumerate(self.slots):
-                if req is not None and req.state == DECODE and pend["mask"][b]:
-                    self._emit(req, int(sampled[b]), now)
-        else:
-            self._consume_verify(pend, logits_h, now)
+        tr = self.tel.tracer
+        with tr.span("wave.consume", "wave", TID_ENGINE,
+                     ({"wave": w, "kind": kind,
+                       "rows": int(np.asarray(pend["mask"]).sum())}
+                      if tr.enabled else None)), \
+                tr.annotation("wave.consume"):
+            logits_h = self.xfer.fetch(
+                f"{kind}.w{w}.logits", pend["logits"], of=pend["op"])
+            now = time.monotonic()
+            if kind == "decode":
+                sampled = self._sample_rows(logits_h)
+                for b, req in enumerate(self.slots):
+                    if (req is not None and req.state == DECODE
+                            and pend["mask"][b]):
+                        self._emit(req, int(sampled[b]), now)
+            else:
+                self._consume_verify(pend, logits_h, now)
         return True
 
     def _dispatch_wave(self, w: int, busy: np.ndarray) -> bool:
@@ -546,10 +648,26 @@ class DistributedServeEngine:
         mask = free & (np.asarray(self.waves.wave) == w)
         if not mask.any():
             return False
-        if self.spec is not None:
-            self._dispatch_verify_wave(w, mask)
-        else:
-            self._dispatch_plain_wave(w, mask)
+        rows = int(mask.sum())
+        # per-wave decode occupancy: rows riding this dispatch, the
+        # wave-imbalance bubble signal (histogram + live gauge w/ peak)
+        self._h_wave_occ.record(rows)
+        self._g_wave[w].set(rows)
+        tr = self.tel.tracer
+        t0 = time.perf_counter()
+        with tr.span("wave.dispatch", "wave", TID_ENGINE,
+                     ({"wave": w, "rows": rows,
+                       "kind": ("verify" if self.spec is not None
+                                else "decode"),
+                       "modeled_s": self._modeled_decode_s}
+                      if tr.enabled else None)), \
+                tr.annotation("wave.dispatch"):
+            if self.spec is not None:
+                self._dispatch_verify_wave(w, mask)
+            else:
+                self._dispatch_plain_wave(w, mask)
+        self._c_dec_mod.value += self._modeled_decode_s
+        self._c_dec_meas.value += time.perf_counter() - t0
         self.model_calls += 1
         busy |= mask.reshape(self.D, self.Bs).any(axis=1)
         return True
@@ -695,6 +813,7 @@ class DistributedServeEngine:
             if not mask[b] or req is None:
                 continue
             m = int(n_acc[b])
+            self._h_accept.record(m)
             self.spec_proposed += int(counts[b])
             self.spec_accepted += m
             if self.adaptive is not None:
@@ -734,37 +853,51 @@ class DistributedServeEngine:
         return self._busy_ticks / max(self.ticks, 1)
 
     def reset_counters(self) -> None:
-        """Zero the schedule counters and the transfer log (benchmarks:
-        call between a jit warm-up run and the measured workload so ticks,
-        model calls, utilization, and overlap cover the workload only).
-        Only valid while drained (no in-flight tick state)."""
+        """Zero the schedule counters, latency histograms, recorded
+        trace events, and the transfer log (benchmarks: call between a
+        jit warm-up run and the measured workload so ticks, model calls,
+        utilization, overlap — and the dumped trace — cover the workload
+        only; trace events and exposed-transfer counts stay in one-to-one
+        correspondence because both clear at the same boundary).  Only
+        valid while drained (no in-flight tick state)."""
         assert all(p is None for p in self._pending_wave)
-        self.ticks = self.model_calls = self.prefill_calls = 0
-        self.spec_ticks = self.spec_proposed = 0
-        self.spec_accepted = self.spec_emitted = 0
-        self.tick_wall = []
+        self.tel.reset()  # registry counters + histograms + trace events
         self._busy_ticks[:] = 0
         self.xfer.reset()
 
+    # ------------------------------------------------------------------
+    def dump_trace(self, path: str) -> str:
+        """Write the recorded span timeline as Chrome/Perfetto trace
+        JSON (requires ``telemetry=Telemetry(trace=True)``)."""
+        return self.tel.dump_trace(path)
+
     def stats(self) -> Dict[str, float]:
-        out = latency_stats(self.finished)
+        out = latency_stats(self)
         out.update({
             "ticks": self.ticks,
             "model_calls": self.model_calls,
             "prefill_calls": self.prefill_calls,
             "stalled": self.stalled,
+            "stalled_queued": len(self.stalled_detail["queued"]),
+            "stalled_in_flight": len(self.stalled_detail["in_flight"]),
             "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
             "n_shards": self.D,
             "decode_waves": self.n_waves,
             "mean_device_utilization": float(np.mean(self.utilization())),
+            "tick_p50_ms": self._h_tick.quantile(0.5) * 1e3,
+            "tick_p99_ms": self._h_tick.quantile(0.99) * 1e3,
+            # per-wave decode occupancy (rows per dispatch) and the
+            # membership imbalance bubble signal
+            "wave_occupancy_mean": self._h_wave_occ.mean(),
+            "wave_occupancy_p50": self._h_wave_occ.quantile(0.5),
+            "wave_imbalance": self.waves.imbalance(),
+            # modeled-vs-measured (core/perfmodel at nodes=n_shards):
+            # host wall per dispatch vs the analytic prediction
+            "decode_modeled_s": self._c_dec_mod.value,
+            "decode_measured_s": self._c_dec_meas.value,
+            "prefill_modeled_s": self._c_pref_mod.value,
+            "prefill_measured_s": self._c_pref_meas.value,
         })
-        if self.tick_wall:
-            wall = np.sort(np.asarray(self.tick_wall))
-            out["tick_p50_ms"] = float(
-                1e3 * wall[len(wall) // 2])
-            out["tick_p99_ms"] = float(
-                1e3 * wall[min(len(wall) - 1,
-                               int(np.ceil(0.99 * len(wall))) - 1)])
         if self.spec is not None:
             out.update({
                 "spec_ticks": self.spec_ticks,
@@ -776,10 +909,11 @@ class DistributedServeEngine:
                 "tokens_per_verify_call": (
                     self.spec_emitted / max(self.spec_ticks, 1)),
                 "draft_calls": getattr(self.proposer, "draft_calls", 0),
+                "spec_accept_len_p50": self._h_accept.quantile(0.5),
+                "spec_accept_len_p99": self._h_accept.quantile(0.99),
             })
             if self.adaptive is not None:
                 out.update(self.adaptive.stats())
         out.update(self.xfer.stats())
-        if self.paged:
-            out.update(self.kv.stats())
+        out.update(self.kv.stats())
         return out

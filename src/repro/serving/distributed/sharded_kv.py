@@ -275,3 +275,7 @@ class ShardedSlotAllocator(_ShardedBase):
             if local is not None:
                 return s * self.slots_per_shard + local
         return None
+
+    def stats(self) -> Dict[str, int]:
+        per_shard = [m.stats() for m in self.shards]
+        return {k: sum(d[k] for d in per_shard) for k in per_shard[0]}

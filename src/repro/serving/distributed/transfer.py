@@ -41,9 +41,18 @@ for ticks with prefill work and ``"drain"`` for pure-decode ticks), so
 the drain-phase collapse the dual-wave schedule fixes is a metric
 (``stats()["overlap_ratio_drain"]``), not an inference from the
 aggregate.
+
+With a recording tracer injected (``TransferScheduler(tracer=...)`` or
+``xfer.tracer = engine.tel.tracer``), every event is additionally
+re-emitted as a span on the trace's transfer track, cat
+``transfer.hidden`` / ``transfer.exposed`` — the dumped Perfetto
+timeline shows exactly the events the counters aggregate, so each
+``transfers_exposed`` increment corresponds to one visible unoverlapped
+span (asserted in ``benchmarks/serving_bench.py --part dist``).
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -51,9 +60,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.telemetry import NULL_TRACER
+
 
 class TransferScheduler:
-    def __init__(self):
+    def __init__(self, tracer=None):
+        #: span recorder; the no-op default keeps stand-alone schedulers
+        #: (and tracing-off engines) allocation-free in this layer
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._in_flight: Dict[int, List] = {}  # op id -> output leaves
         self._next_op = 0
         # recent events only (bounded ring — a long-lived engine logs a
@@ -130,11 +144,16 @@ class TransferScheduler:
         the copy rode a compute shadow."""
         value = np.asarray(value)
         hidden = bool(self._in_flight)
+        tr = self.tracer
+        t0 = time.perf_counter() if tr.enabled else 0.0
         # one hop: device_put straight to the target sharding (asarray
         # first would commit to the default device and pay a second copy)
         arr = (jax.device_put(value, sharding) if sharding is not None
                else jnp.asarray(value))
         self._record(name, int(value.nbytes), hidden)
+        if tr.enabled:
+            tr.transfer(name, t0, int(value.nbytes), hidden, self._phase,
+                        "stage")
         return arr
 
     def fetch(self, name: str, array, of: Optional[int] = None) -> np.ndarray:
@@ -144,8 +163,13 @@ class TransferScheduler:
         if of is not None:
             self._in_flight.pop(of, None)
         hidden = bool(self._in_flight)
+        tr = self.tracer
+        t0 = time.perf_counter() if tr.enabled else 0.0
         out = np.asarray(array)
         self._record(name, int(out.nbytes), hidden)
+        if tr.enabled:
+            tr.transfer(name, t0, int(out.nbytes), hidden, self._phase,
+                        "fetch")
         return out
 
     # -- metrics ---------------------------------------------------------

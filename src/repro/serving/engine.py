@@ -79,6 +79,18 @@ cache are admitted and served from the same fixed-size slots.
 Per-request accounting records TTFT (submit -> first token) and TPOT
 (steady-state decode latency); ``mdk_stats`` exposes the temporal-reuse
 counters for the Fig 3(c) argument.
+
+**Telemetry** — every schedule counter and latency aggregate is backed
+by :mod:`repro.serving.telemetry` (one registry per engine: counters
+via :func:`~repro.serving.telemetry.registry_counter` descriptors,
+TTFT/TPOT/tick-wall as fixed-bucket histograms, so ``stats()`` reports
+p50/p99 next to the means).  Constructing the engine with
+``telemetry=Telemetry(trace=True)`` additionally records a span
+timeline — tick/stage spans with the perf model's predicted cost
+attached, request lifecycle events, speculative propose/verify/accept
+phases — exportable with :meth:`ServeEngine.dump_trace` as
+Chrome/Perfetto JSON.  The default recorder is a no-op: tracing
+disabled adds zero per-tick allocations and no device syncs.
 """
 from __future__ import annotations
 
@@ -93,12 +105,15 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import scheduler as sched
+from repro.core.perfmodel import FPGAPerfModel
 from repro.models import blocks, lm
 from repro.models.layers import tp_context
 from repro.serving import sampler as samplers, speculative
 from repro.serving.admission import FIFOAdmission
 from repro.serving.kv_cache import PagedCacheManager, SlotCacheManager
 from repro.serving.quantize import calibrate, quantize_model_params
+from repro.serving.telemetry import (
+    TID_ENGINE, TID_REQUEST, Telemetry, linear_edges, registry_counter)
 
 PREFILL = "prefill"
 DECODE = "decode"
@@ -155,7 +170,24 @@ def submit_request(engine, prompt, max_new, sampling) -> int:
         Request(rid=rid, prompt=list(prompt), max_new=max_new,
                 sampling=sampling or samplers.GREEDY,
                 t_submit=time.monotonic()))
+    tr = engine.tel.tracer
+    if tr.enabled:
+        # request lifecycle timeline: async span rid-wide, instants at
+        # each state change (queued here; admitted / first_token / done
+        # are emitted where those transitions happen)
+        tr.async_begin("request", rid)
+        tr.instant("req.queued", "request", TID_REQUEST,
+                   {"rid": rid, "prompt_len": len(prompt),
+                    "max_new": max_new})
     return rid
+
+
+def _fmt_rids(rids: List[int], limit: int = 8) -> str:
+    """Compact rid list for stall diagnostics: first ``limit``, then a
+    +N tail."""
+    if len(rids) <= limit:
+        return str(rids)
+    return f"{rids[:limit]} +{len(rids) - limit} more"
 
 
 def drain_engine(engine, pending, max_ticks: int,
@@ -166,7 +198,14 @@ def drain_engine(engine, pending, max_ticks: int,
     then surface leftovers.  Exhausting ``max_ticks`` with requests still
     queued or in flight raises (``finished`` would silently read as the
     complete result otherwise); ``on_stall="ignore"`` returns the partial
-    list instead, with the leftover count in ``stats()["stalled"]``."""
+    list instead, with the leftover count in ``stats()["stalled"]``.
+
+    The stall surface carries a per-state breakdown — queued vs
+    in-flight rids in the ``RuntimeError`` message and on
+    ``engine.stalled_detail`` (counts mirrored as
+    ``stats()["stalled_queued"]`` / ``["stalled_in_flight"]``) — so
+    stall triage names the stuck requests instead of requiring a
+    debugger."""
     if on_stall not in ("raise", "ignore"):
         raise ValueError(
             f"on_stall={on_stall!r} must be 'raise' or 'ignore'")
@@ -174,35 +213,58 @@ def drain_engine(engine, pending, max_ticks: int,
     while pending() and spent < max_ticks:
         engine.tick()
         spent += 1
-    engine.stalled = len(engine.queue) + sum(
-        s is not None for s in engine.slots)
+    queued = [r.rid for r in engine.queue]
+    in_flight = [r.rid for r in engine.slots if r is not None]
+    engine.stalled = len(queued) + len(in_flight)
+    engine.stalled_detail = {"queued": queued, "in_flight": in_flight}
     if engine.stalled and on_stall == "raise":
         raise RuntimeError(
             f"engine stalled: max_ticks={max_ticks} exhausted with "
-            f"{len(engine.queue)} queued and "
-            f"{engine.stalled - len(engine.queue)} in-flight requests "
-            "(the finished list is partial; raise max_ticks or pass "
-            "on_stall='ignore')")
+            f"{len(queued)} queued (rids {_fmt_rids(queued)}) and "
+            f"{len(in_flight)} in-flight (rids {_fmt_rids(in_flight)}) "
+            "requests (the finished list is partial; raise max_ticks or "
+            "pass on_stall='ignore')")
     return engine.finished
 
 
-def latency_stats(finished: List[Request]) -> Dict[str, float]:
-    """Per-request latency aggregates (TTFT / TPOT), shared by both
-    engines' ``stats()``."""
-    ttft = [r.ttft for r in finished if r.ttft is not None]
-    tpot = [
-        (r.t_done - r.t_first) / max(1, len(r.out) - 1)
-        for r in finished
-        if r.t_done and r.t_first and len(r.out) > 1
-    ]
+def latency_stats(engine) -> Dict[str, float]:
+    """Per-request latency aggregates (TTFT / TPOT with p50/p99), shared
+    by both engines' ``stats()``.  Read from the telemetry registry's
+    fixed-bucket histograms — the single backing store ``_emit`` records
+    into — so every key covers exactly the window since the last
+    registry reset (the whole run unless ``reset_counters`` trimmed the
+    warm-up), with no unbounded per-request lists.  ``requests`` is the
+    TTFT sample count: requests that produced a first token in the
+    window, which is what the quantiles aggregate over."""
+    reg = engine.tel.registry
+    th, ph = reg.histogram("ttft_s"), reg.histogram("tpot_s")
     return {
-        "requests": len(finished),
-        "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
-        "mean_tok_latency_s": float(np.mean(tpot)) if tpot else 0.0,
+        "requests": th.count,
+        "mean_ttft_s": th.mean(),
+        "mean_tok_latency_s": ph.mean(),
+        "p50_ttft_s": th.quantile(0.5),
+        "p99_ttft_s": th.quantile(0.99),
+        "p50_tpot_s": ph.quantile(0.5),
+        "p99_tpot_s": ph.quantile(0.99),
     }
 
 
 class ServeEngine:
+    # schedule counters live in the telemetry registry (the single
+    # backing store stats() reads and reset() zeroes); the descriptor
+    # keeps the attribute spelling, so hot paths still write
+    # ``self.ticks += 1``
+    ticks = registry_counter("ticks")
+    model_calls = registry_counter("model_calls")
+    prefill_calls = registry_counter("prefill_calls")
+    stalled = registry_counter("stalled")
+    spec_ticks = registry_counter("spec_ticks")
+    spec_proposed = registry_counter("spec_proposed")
+    spec_accepted = registry_counter("spec_accepted")
+    spec_emitted = registry_counter("spec_emitted")
+    verify_touched_positions = registry_counter("verify_touched_positions")
+    verify_dense_positions = registry_counter("verify_dense_positions")
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -224,7 +286,11 @@ class ServeEngine:
         mesh: Optional[jax.sharding.Mesh] = None,
         act_dtype=None,
         spec: Optional[speculative.SpecConfig] = None,
+        telemetry: Optional[Telemetry] = None,
     ):
+        # the telemetry bundle must exist before any counter attribute is
+        # assigned: the registry_counter descriptors dereference self.tel
+        self.tel = telemetry or Telemetry()
         self.cfg = cfg
         self.max_seq = max_seq
         self.eos_id = eos_id
@@ -424,6 +490,34 @@ class ServeEngine:
         self.verify_touched_positions = 0
         self.verify_dense_positions = 0
         self.mdk_stats = sched.mdk_stats(cfg)
+        self.stalled_detail: Dict[str, List[int]] = {
+            "queued": [], "in_flight": []}
+
+        # telemetry: pre-create the latency histograms (hot paths record
+        # through cached handles, no name lookup) and the perf model's
+        # predicted per-call costs that compute spans carry for the
+        # modeled-vs-measured check (core/perfmodel, the Fig-3(c)
+        # temporal-reuse program)
+        reg = self.tel.registry
+        self._h_ttft = reg.histogram("ttft_s")
+        self._h_tpot = reg.histogram("tpot_s")
+        self._h_tick = reg.histogram("tick_wall_s")
+        self._h_accept = (
+            reg.histogram("spec_accept_len",
+                          edges=linear_edges(0.0, spec.k + 2, spec.k + 2))
+            if spec is not None else None)
+        pm = FPGAPerfModel(cfg)
+        self._modeled_decode_s = pm.token_latency()["total"]
+        self._modeled_prefill_tok_s = pm.prefill_token_latency()
+        # modeled-vs-measured accumulates in the registry too (cheap
+        # perf_counter pairs), so stats() reports the divergence even
+        # with tracing off
+        self._c_pref_mod = reg.counter("prefill_modeled_s")
+        self._c_pref_meas = reg.counter("prefill_measured_s")
+        self._c_dec_mod = reg.counter("decode_modeled_s")
+        self._c_dec_meas = reg.counter("decode_measured_s")
+        if self.proposer is not None:
+            self.proposer.tracer = self.tel.tracer
 
     # ------------------------------------------------------------------
     def submit(
@@ -465,6 +559,11 @@ class ServeEngine:
             # their K/V are already in the pool, rope'd at these positions
             req.filled = shared_tokens
             self.slots[slot] = req
+            tr = self.tel.tracer
+            if tr.enabled:
+                tr.instant("req.admitted", "request", TID_REQUEST,
+                           {"rid": req.rid, "slot": slot,
+                            "shared_tokens": shared_tokens})
             if self.proposer is not None:
                 self.proposer.alloc(slot, req.prompt, shared_tokens)
             if self.adaptive is not None:
@@ -477,8 +576,14 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def _emit(self, req: Request, tok: int, now: float) -> None:
         """Record one generated token and retire the request if finished."""
+        tr = self.tel.tracer
         if req.t_first is None:
             req.t_first = now
+            self._h_ttft.record(now - req.t_submit)
+            if tr.enabled:
+                tr.instant("req.first_token", "request", TID_REQUEST,
+                           {"rid": req.rid,
+                            "ttft_s": now - req.t_submit})
         req.out.append(tok)
         if (
             tok == self.eos_id
@@ -487,6 +592,16 @@ class ServeEngine:
                 and len(req.prompt) + len(req.out) >= self.seq_ceiling)
         ):
             req.t_done = now
+            if len(req.out) > 1:
+                # one TPOT sample per request (steady-state decode
+                # latency), matching the per-request mean latency_stats
+                # always reported
+                self._h_tpot.record(
+                    (req.t_done - req.t_first) / (len(req.out) - 1))
+            if tr.enabled:
+                tr.instant("req.done", "request", TID_REQUEST,
+                           {"rid": req.rid, "tokens": len(req.out)})
+                tr.async_end("request", req.rid)
             self.finished.append(req)
             self.slots[req.slot] = None
             self.kv.free(req.slot)
@@ -519,75 +634,106 @@ class ServeEngine:
         """One engine tick: a prefill-chunk budget, then one decode step."""
         if self.prefill_mode == "replay":
             return self._tick_replay()
-        self._admit()
-        did = False
+        t_tick = time.perf_counter()
+        tr = self.tel.tracer
+        with tr.span("tick", "engine"):
+            with tr.span("admit"):
+                self._admit()
+            did = False
 
-        # -- chunked prefill within this tick's token budget (FIFO) --
-        prefilling = sorted(
-            (r for r in self.slots if r is not None and r.state == PREFILL),
-            key=lambda r: r.rid)
-        plan = self.admission.plan_chunks(
-            [(r.slot, len(r.prompt), r.filled) for r in prefilling])
-        for ch in plan:
-            req = self.slots[ch.slot]
-            if not self.kv.has_room(ch.slot, ch.n):
-                # a buggy admission plan (or a prompt that slipped past
-                # submit) would silently corrupt the slot's mask: the
-                # chunk writes past max_seq get dropped while the length
-                # accounting still advances.  Fail loudly instead.
-                raise ValueError(
-                    f"prefill chunk ({ch.n} tokens at offset {ch.start}) "
-                    f"overruns slot {ch.slot}'s cache "
-                    f"(len={self.kv.length_of(ch.slot)}, "
-                    f"max_seq={self.max_seq})")
-            chunk = np.zeros((self.chunk_size,), np.int32)
-            chunk[:ch.n] = req.prompt[ch.start:ch.start + ch.n]
-            if self.paged:
-                logits, self.kv.cache = self._prefill(
-                    self.params, jnp.asarray(chunk), self.kv.cache,
-                    ch.slot, jnp.asarray(self.kv.block_tables[ch.slot]),
-                    ch.start, ch.n)
-            else:
-                logits, self.kv.cache = self._prefill(
-                    self.params, jnp.asarray(chunk), self.kv.cache,
-                    ch.slot, ch.start, ch.n)
-            self.model_calls += 1
-            self.prefill_calls += 1
-            req.filled += ch.n
-            self.kv.advance(ch.slot, ch.n)
-            if self.proposer is not None:
-                self.proposer.prefill_chunk(ch.slot, chunk, ch.start, ch.n)
-            if req.filled == len(req.prompt):
-                # first generated token comes straight off the prefill
-                # logits — this is the TTFT the chunked path buys
-                self._emit(req, self._sample_one(logits, req),
-                           time.monotonic())
-            did = True
+            # -- chunked prefill within this tick's token budget (FIFO) --
+            prefilling = sorted(
+                (r for r in self.slots
+                 if r is not None and r.state == PREFILL),
+                key=lambda r: r.rid)
+            plan = self.admission.plan_chunks(
+                [(r.slot, len(r.prompt), r.filled) for r in prefilling])
+            for ch in plan:
+                req = self.slots[ch.slot]
+                if not self.kv.has_room(ch.slot, ch.n):
+                    # a buggy admission plan (or a prompt that slipped
+                    # past submit) would silently corrupt the slot's
+                    # mask: the chunk writes past max_seq get dropped
+                    # while the length accounting still advances.  Fail
+                    # loudly instead.
+                    raise ValueError(
+                        f"prefill chunk ({ch.n} tokens at offset "
+                        f"{ch.start}) overruns slot {ch.slot}'s cache "
+                        f"(len={self.kv.length_of(ch.slot)}, "
+                        f"max_seq={self.max_seq})")
+                chunk = np.zeros((self.chunk_size,), np.int32)
+                chunk[:ch.n] = req.prompt[ch.start:ch.start + ch.n]
+                t0 = time.perf_counter()
+                with tr.span(
+                        "prefill.chunk", "stage", TID_ENGINE,
+                        ({"rid": req.rid, "slot": ch.slot,
+                          "start": ch.start, "n": ch.n,
+                          "modeled_s":
+                          ch.n * self._modeled_prefill_tok_s}
+                         if tr.enabled else None)), \
+                        tr.annotation("prefill.chunk"):
+                    if self.paged:
+                        logits, self.kv.cache = self._prefill(
+                            self.params, jnp.asarray(chunk),
+                            self.kv.cache, ch.slot,
+                            jnp.asarray(self.kv.block_tables[ch.slot]),
+                            ch.start, ch.n)
+                    else:
+                        logits, self.kv.cache = self._prefill(
+                            self.params, jnp.asarray(chunk),
+                            self.kv.cache, ch.slot, ch.start, ch.n)
+                self._c_pref_mod.value += ch.n * self._modeled_prefill_tok_s
+                self._c_pref_meas.value += time.perf_counter() - t0
+                self.model_calls += 1
+                self.prefill_calls += 1
+                req.filled += ch.n
+                self.kv.advance(ch.slot, ch.n)
+                if self.proposer is not None:
+                    self.proposer.prefill_chunk(ch.slot, chunk, ch.start,
+                                                ch.n)
+                if req.filled == len(req.prompt):
+                    # first generated token comes straight off the
+                    # prefill logits — this is the TTFT the chunked path
+                    # buys
+                    self._emit(req, self._sample_one(logits, req),
+                               time.monotonic())
+                did = True
 
-        # -- one batched decode step over all decoding slots --
-        decoding = [r is not None and r.state == DECODE for r in self.slots]
-        if any(decoding):
-            if self.spec is not None:
-                self._spec_decode(np.asarray(decoding))
-            else:
-                self._plain_decode(decoding)
-            did = True
+            # -- one batched decode step over all decoding slots --
+            decoding = [r is not None and r.state == DECODE
+                        for r in self.slots]
+            if any(decoding):
+                if self.spec is not None:
+                    self._spec_decode(np.asarray(decoding))
+                else:
+                    self._plain_decode(decoding)
+                did = True
 
         if did:
             self.ticks += 1
+            self._h_tick.record(time.perf_counter() - t_tick)
 
     def _plain_decode(self, decoding: List[bool]) -> None:
         """One single-token batched decode step (the non-speculative path)."""
-        if self.paged:
-            self.kv.ensure_decode_room(decoding)
-            logits, self.kv.cache = self._step(
-                self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                self.kv.lengths, jnp.asarray(self.kv.block_tables),
-                jnp.asarray(decoding, bool))
-        else:
-            logits, self.kv.cache = self._step(
-                self.params, jnp.asarray(self.cur_tok), self.kv.cache,
-                self.kv.lengths, jnp.asarray(decoding, bool))
+        tr = self.tel.tracer
+        t0 = time.perf_counter()
+        with tr.span("decode.step", "stage", TID_ENGINE,
+                     ({"rows": sum(decoding),
+                       "modeled_s": self._modeled_decode_s}
+                      if tr.enabled else None)), \
+                tr.annotation("decode.step"):
+            if self.paged:
+                self.kv.ensure_decode_room(decoding)
+                logits, self.kv.cache = self._step(
+                    self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                    self.kv.lengths, jnp.asarray(self.kv.block_tables),
+                    jnp.asarray(decoding, bool))
+            else:
+                logits, self.kv.cache = self._step(
+                    self.params, jnp.asarray(self.cur_tok), self.kv.cache,
+                    self.kv.lengths, jnp.asarray(decoding, bool))
+        self._c_dec_mod.value += self._modeled_decode_s
+        self._c_dec_meas.value += time.perf_counter() - t0
         self.model_calls += 1
         sampled = self._sample_rows(logits)
         self.kv.advance_mask(np.asarray(decoding))
@@ -611,6 +757,7 @@ class ServeEngine:
         masked and are overwritten by the next write at those positions.
         """
         B, k = self.B, self.spec.k
+        tr = self.tel.tracer
         lengths_h = np.asarray(self.kv.lengths).copy()
         # cap so every written position stays below the cache ceiling
         # (window-capped stacks have none: rings wrap, states are O(1))
@@ -618,8 +765,9 @@ class ServeEngine:
         caps = speculative.draft_caps(self.slots, lengths_h, decoding, k,
                                       self.seq_ceiling,
                                       adaptive=self.adaptive)
-        draft, counts = self.proposer.propose(
-            self.slots, self.cur_tok, lengths_h, decoding, caps)
+        with tr.span("spec.propose", "spec"):
+            draft, counts = self.proposer.propose(
+                self.slots, self.cur_tok, lengths_h, decoding, caps)
         if not counts.any():
             # no slot proposed anything: a (k+1)-wide verify would pay
             # ~(k+1)x a decode step's position-axis compute (and, paged,
@@ -638,44 +786,58 @@ class ServeEngine:
         valids = np.where(decoding, counts + 1, 0).astype(np.int32)
         prev_cache = None
         traj = None
-        if self.paged:
-            self.kv.ensure_decode_room(decoding, counts + 1)
-            mask = np.asarray(decoding, bool)
-            live = -(-(lengths_h + counts + 1) // self.kv.page_size)
-            self.verify_touched_positions += int(
-                (live[mask] * self.kv.page_size).sum())
-            self.verify_dense_positions += 2 * int(mask.sum()) * self.max_seq
-            if self._state_store is not None:
-                # mixed paged: the snapshot/trajectory commit settles the
-                # slot-resident rings/states; kv.rewind below releases
-                # the attn side's rejected pages
+        t0 = time.perf_counter()
+        with tr.span("spec.verify", "spec", TID_ENGINE,
+                     ({"rows": int(decoding.sum()),
+                       "proposed": int(counts.sum()),
+                       # the ride-along claim: one verify streams the
+                       # weights once, like one decode step
+                       "modeled_s": self._modeled_decode_s}
+                      if tr.enabled else None)), \
+                tr.annotation("spec.verify"):
+            if self.paged:
+                self.kv.ensure_decode_room(decoding, counts + 1)
+                mask = np.asarray(decoding, bool)
+                live = -(-(lengths_h + counts + 1) // self.kv.page_size)
+                self.verify_touched_positions += int(
+                    (live[mask] * self.kv.page_size).sum())
+                self.verify_dense_positions += (
+                    2 * int(mask.sum()) * self.max_seq)
+                if self._state_store is not None:
+                    # mixed paged: the snapshot/trajectory commit settles
+                    # the slot-resident rings/states; kv.rewind below
+                    # releases the attn side's rejected pages
+                    prev_cache = self.kv.cache
+                    logits, self.kv.cache, traj = self._verify(
+                        self.params, jnp.asarray(toks), self.kv.cache,
+                        jnp.asarray(vlen), jnp.asarray(valids),
+                        jnp.asarray(self.kv.block_tables))
+                else:
+                    logits, self.kv.cache = self._verify(
+                        self.params, jnp.asarray(toks), self.kv.cache,
+                        jnp.asarray(vlen),
+                        jnp.asarray(self.kv.block_tables))
+            elif self._state_store is not None:
+                # the verify base IS the rewind snapshot (JAX arrays are
+                # immutable — holding the reference costs nothing)
                 prev_cache = self.kv.cache
                 logits, self.kv.cache, traj = self._verify(
                     self.params, jnp.asarray(toks), self.kv.cache,
-                    jnp.asarray(vlen), jnp.asarray(valids),
-                    jnp.asarray(self.kv.block_tables))
+                    jnp.asarray(vlen), jnp.asarray(valids))
             else:
                 logits, self.kv.cache = self._verify(
                     self.params, jnp.asarray(toks), self.kv.cache,
-                    jnp.asarray(vlen), jnp.asarray(self.kv.block_tables))
-        elif self._state_store is not None:
-            # the verify base IS the rewind snapshot (JAX arrays are
-            # immutable — holding the reference costs nothing)
-            prev_cache = self.kv.cache
-            logits, self.kv.cache, traj = self._verify(
-                self.params, jnp.asarray(toks), self.kv.cache,
-                jnp.asarray(vlen), jnp.asarray(valids))
-        else:
-            logits, self.kv.cache = self._verify(
-                self.params, jnp.asarray(toks), self.kv.cache,
-                jnp.asarray(vlen))
+                    jnp.asarray(vlen))
+        self._c_dec_mod.value += self._modeled_decode_s
+        self._c_dec_meas.value += time.perf_counter() - t0
         self.model_calls += 1
         self.spec_ticks += 1
         self.rng, sub = jax.random.split(self.rng)
-        n_acc, next_tok = jax.device_get(self._accept(
-            logits, jnp.asarray(draft), jnp.asarray(counts), sub,
-            jnp.asarray(self._temp), jnp.asarray(self._topk),
-            jnp.asarray(self._topp)))
+        with tr.span("spec.accept", "spec"):
+            n_acc, next_tok = jax.device_get(self._accept(
+                logits, jnp.asarray(draft), jnp.asarray(counts), sub,
+                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp)))
         if self._state_store is not None:
             # state half of the rewind seam: commit cur_tok + the accepted
             # drafts — rejected ring writes are restored from the
@@ -691,6 +853,7 @@ class ServeEngine:
             if not decoding[b] or req is None:
                 continue
             m = int(n_acc[b])
+            self._h_accept.record(m)
             self.spec_proposed += int(counts[b])
             self.spec_accepted += m
             if self.adaptive is not None:
@@ -760,8 +923,14 @@ class ServeEngine:
             max_ticks, on_stall)
 
     # ------------------------------------------------------------------
+    def dump_trace(self, path: str) -> str:
+        """Write the recorded span timeline as Chrome/Perfetto trace
+        JSON (requires ``telemetry=Telemetry(trace=True)``)."""
+        return self.tel.dump_trace(path)
+
+    # ------------------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        out = latency_stats(self.finished)
+        out = latency_stats(self)
         emitted = sum(len(r.out) for r in self.finished) + sum(
             len(r.out) for r in self.slots if r is not None)
         out.update({
@@ -769,8 +938,18 @@ class ServeEngine:
             "model_calls": self.model_calls,
             "prefill_calls": self.prefill_calls,
             "stalled": self.stalled,
+            "stalled_queued": len(self.stalled_detail["queued"]),
+            "stalled_in_flight": len(self.stalled_detail["in_flight"]),
             "tokens_per_model_call": emitted / max(self.model_calls, 1),
             "mdk_mp_reuse": self.mdk_stats.reuse_factor().get("mp", 0),
+            "tick_p50_ms": self._h_tick.quantile(0.5) * 1e3,
+            "tick_p99_ms": self._h_tick.quantile(0.99) * 1e3,
+            # modeled-vs-measured (core/perfmodel): host-side wall per
+            # dispatch vs the analytic stage program's prediction
+            "decode_modeled_s": self._c_dec_mod.value,
+            "decode_measured_s": self._c_dec_meas.value,
+            "prefill_modeled_s": self._c_pref_mod.value,
+            "prefill_measured_s": self._c_pref_meas.value,
         })
         if self.spec is not None:
             out.update({
@@ -788,9 +967,10 @@ class ServeEngine:
                 "draft_calls": getattr(self.proposer, "draft_calls", 0),
                 "verify_touched_positions": self.verify_touched_positions,
                 "verify_dense_positions": self.verify_dense_positions,
+                "spec_accept_len_p50": self._h_accept.quantile(0.5),
+                "spec_accept_len_p99": self._h_accept.quantile(0.99),
             })
             if self.adaptive is not None:
                 out.update(self.adaptive.stats())
-        if self.paged:
-            out.update(self.kv.stats())
+        out.update(self.kv.stats())
         return out

@@ -180,6 +180,7 @@ class SlotCacheManager:
         self._free: List[int] = list(range(batch_slots))
         heapq.heapify(self._free)
         self._used: set = set()
+        self.slots_in_use_peak = 0  # high-water occupancy, see stats()
 
     # -- slot lifecycle -------------------------------------------------
     def alloc(self) -> Optional[int]:
@@ -188,6 +189,8 @@ class SlotCacheManager:
             return None
         slot = heapq.heappop(self._free)
         self._used.add(slot)
+        if len(self._used) > self.slots_in_use_peak:
+            self.slots_in_use_peak = len(self._used)
         self.lengths[slot] = 0
         return slot
 
@@ -236,6 +239,17 @@ class SlotCacheManager:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    def stats(self) -> Dict[str, int]:
+        """Pool occupancy counters (the stacked-layout mirror of
+        ``PagedCacheManager.stats`` — both layouts report through the
+        engines' ``stats()`` unconditionally, so the key set no longer
+        depends on the cache layout)."""
+        return {
+            "slots_in_use": len(self._used),
+            "slots_in_use_peak": self.slots_in_use_peak,
+            "n_free_slots": len(self._free),
+        }
 
     @property
     def n_used(self) -> int:

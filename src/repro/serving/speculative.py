@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import blocks, lm
+from repro.serving.telemetry import NULL_TRACER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +172,11 @@ class DraftProposer:
     the lifecycle hooks mirror the target engine's slot lifecycle so
     stateful proposers (the draft model's KV cache, the n-gram tables)
     stay in sync with admission, chunked prefill, and retirement."""
+
+    #: span recorder the owning engine injects (``engine.tel.tracer``);
+    #: the class default is the no-op singleton so a stand-alone proposer
+    #: (tests, other engines) costs nothing
+    tracer = NULL_TRACER
 
     def alloc(self, slot: int, prompt: List[int], filled: int) -> None:
         """A request was admitted to ``slot``; ``filled`` prompt tokens
@@ -360,20 +366,27 @@ class ModelDraft(DraftProposer):
         # steps past every row's cap would only re-freeze already-frozen
         # rows: stop at the batch's largest cap, so shrunken (adaptive)
         # caps cut draft-model forwards, not just proposed tokens
-        for j in range(int(counts.max(initial=0))):
-            logits, self.cache = self._step(
-                self.params, jnp.asarray(toks), self.cache,
-                jnp.asarray(pos))
-            self.draft_calls += 1
-            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-            live = active & (j < counts)
-            draft[live, j] = nxt[live]
-            # advance and feed only rows still under their cap; frozen
-            # rows keep (token, position) so the repeated write is the
-            # same token at the same — correct or masked — position
-            adv = active & (j + 1 < np.minimum(counts + 1, k))
-            pos = np.minimum(pos + adv.astype(np.int32), self.max_seq - 1)
-            toks[adv, 0] = nxt[adv]
+        tr = self.tracer
+        with tr.span("draft.propose", "spec", args=(
+                {"steps": int(counts.max(initial=0)),
+                 "rows": int(np.asarray(active, bool).sum())}
+                if tr.enabled else None)):
+            for j in range(int(counts.max(initial=0))):
+                logits, self.cache = self._step(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.asarray(pos))
+                self.draft_calls += 1
+                nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+                live = active & (j < counts)
+                draft[live, j] = nxt[live]
+                # advance and feed only rows still under their cap;
+                # frozen rows keep (token, position) so the repeated
+                # write is the same token at the same — correct or
+                # masked — position
+                adv = active & (j + 1 < np.minimum(counts + 1, k))
+                pos = np.minimum(pos + adv.astype(np.int32),
+                                 self.max_seq - 1)
+                toks[adv, 0] = nxt[adv]
         # clean fill: positions L..L+min(cap, k-1) now hold real tokens
         upd = np.asarray(active, bool)
         self.lengths[upd] = (lengths[upd]
