@@ -57,6 +57,19 @@ token-identical and prefix sharing must link shared attn prompt pages
 (>= 30% fewer page allocations — a saving that was structurally zero
 while paged refused hybrids).  Writes a ``BENCH_hybrid.json`` artifact.
 
+Part "preempt" (``--part preempt``; also runs under ``--part all``)
+drives an over-subscribed bursty stream through a KV pool so small the
+reservation-based admission (worst-case lifetime pages up front) raises
+its never-fits ``ValueError`` for every request, then serves the same
+stream through ``OvercommitAdmission``: requests admit on prompt pages
+only, decode growth drains the pool, and the engine preempts victims
+(lowest priority, most pages, newest first) to host memory or a
+recompute requeue until the whole burst completes.  The stream must be
+token-identical to a roomy-pool reference run, every request must
+finish (completion gate), at least one preemption must fire, and p99
+TTFT must stay under an absolute ceiling (the preempt/restore detour
+may not starve any request).  Writes a ``BENCH_preempt.json`` artifact.
+
 Part 3 (``--part dist``; auto-spawned in a forced 4-device subprocess
 when the main process has fewer devices) drives the mixed-length workload
 through ``DistributedServeEngine`` on a 4-shard mesh and reports, next to
@@ -321,6 +334,144 @@ def run_spec_part(args) -> None:
           f" -> {rows['spec']['s']['model_calls']:.0f} "
           f"({rows['plain']['s']['model_calls'] / rows['spec']['s']['model_calls']:.2f}x)")
     print("SERVING_BENCH_SPEC_OK")
+
+
+def run_preempt_part(args) -> None:
+    """Part "preempt": over-commit admission completes an over-subscribed
+    bursty stream the reservation-based engine refuses outright.
+
+    The pool is sized so every request's worst-case lifetime reservation
+    (``pages_for(prompt + max_new)``) exceeds the usable pool — the
+    reservation engine raises its never-fits ``ValueError`` at admission
+    — while the *actual* greedy stream terminates early at a probed eos
+    token, so prompt-priced over-commit admission can run the burst to
+    completion, preempting victims to host memory whenever decode growth
+    drains the pool.  Streams must match a roomy-pool reference
+    token-for-token; gates: full completion, >= 1 preemption, p99 TTFT
+    under an absolute ceiling.  Writes ``BENCH_preempt.json``.
+    """
+    import os
+
+    from repro.serving.admission import OvercommitAdmission
+
+    cfg = get_config("gpt2-345m").reduced()
+    max_seq = 64
+    page_size = 16
+    n_pages = 4  # 3 usable pages; each request reserves 4 -> never fits
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=max_seq)
+    rng = np.random.default_rng(args.seed)
+    prompt = list(rng.integers(1, cfg.vocab_size, 10))
+    max_new = 40  # prices min(10 + 40, 64) = 50 tokens = 4 pages
+    n_req = max(args.requests, 6)
+
+    # probe the free-running greedy stream for an eos whose *first*
+    # occurrence is mid-stream: late enough that decode growth spills
+    # past the first page (forcing preemption under over-commit), early
+    # enough that the actual footprint fits the tiny pool
+    probe = ServeEngine(cfg, params, batch_slots=1, max_seq=max_seq,
+                        eos_id=-1, chunk_size=8, kv_layout="paged",
+                        page_size=page_size)
+    probe.submit(prompt, max_new=max_new)
+    stream = probe.run()[0].out
+    first_idx = {}
+    for j, t in enumerate(stream):
+        first_idx.setdefault(t, j)
+    eos_id, eos_at = max(first_idx.items(), key=lambda kv: kv[1])
+    usable_toks = (n_pages - 1) * page_size - len(prompt)
+    assert 7 <= eos_at < usable_toks, (
+        f"probed eos lands at index {eos_at}, outside [7, {usable_toks})"
+        " — pick a different --seed for the preempt part")
+    print(f"\npreempt workload: {n_req}-request burst of a "
+          f"{len(prompt)}-token prompt, max_new={max_new}, eos token "
+          f"{eos_id} (fires at index {eos_at}); pool {n_pages} pages x "
+          f"{page_size} tokens (reservation price 4 > {n_pages - 1} "
+          "usable)")
+
+    def build(n_pool, admission=None):
+        return ServeEngine(cfg, params, batch_slots=3, max_seq=max_seq,
+                           eos_id=eos_id, chunk_size=args.chunk,
+                           kv_layout="paged", page_size=page_size,
+                           n_pages=n_pool, prefix_sharing=False,
+                           admission=admission)
+
+    # roomy-pool reference stream (and jit warm-up for the runs below)
+    ref = build(64)
+    for _ in range(n_req):
+        ref.submit(prompt, max_new=max_new)
+    ref.run()
+    want = [r.out for r in ref.finished]
+    assert all(o == stream[:eos_at + 1] for o in want)
+
+    # the reservation engine refuses the very first arrival: 4 pages can
+    # never be carved out of 3
+    reserve = build(n_pages)
+    for _ in range(n_req):
+        reserve.submit(prompt, max_new=max_new)
+    try:
+        reserve.run()
+        raise AssertionError(
+            "reservation admission accepted a request it cannot ever "
+            "seat — never-fits pricing is broken")
+    except ValueError as e:
+        assert "can never be admitted" in str(e), e
+    print("reservation engine: never-fits ValueError at admission (as "
+          "designed)")
+
+    # over-commit on the same tiny pool: admit on prompt pages, preempt
+    # on decode growth, complete the whole burst
+    oc = build(n_pages,
+               admission=OvercommitAdmission(cfg, chunk_size=args.chunk))
+    for _ in range(n_req):
+        oc.submit(prompt, max_new=max_new)
+    t0 = time.time()
+    done = oc.run(max_ticks=50_000)
+    wall = time.time() - t0
+    s = oc.stats()
+    toks = sum(len(r.out) for r in done)
+    completion = len(done) / n_req
+
+    print(f"\n{'engine':12s} {'done':>5s} {'preempt':>8s} "
+          f"{'restores':>9s} {'evicted_MB':>11s} {'p99_ttft':>9s} "
+          f"{'tok/s':>8s}")
+    print(f"{'overcommit':12s} {len(done):5d} {s['preemptions']:8.0f} "
+          f"{s['restores']:9.0f} "
+          f"{s['evicted_bytes_total'] / 1e6:11.2f} "
+          f"{s['p99_ttft_s']:9.3f} {toks / max(wall, 1e-9):8.1f}")
+
+    assert completion == 1.0, (
+        f"over-commit completed only {len(done)}/{n_req} requests")
+    assert [r.out for r in sorted(done, key=lambda r: r.rid)] == want, (
+        "preempted stream diverged from the roomy-pool reference")
+    assert s["preemptions"] >= 1, (
+        "the over-subscribed burst must preempt at least once")
+    assert s["restores"] == s["preemptions"]
+    assert s["pages_in_use"] == 0, "pages leaked across preempt/restore"
+    p99_ttft_ceiling_s = 120.0
+    assert s["p99_ttft_s"] <= p99_ttft_ceiling_s, (
+        f"p99 TTFT {s['p99_ttft_s']:.1f}s: the preempt/restore detour "
+        "is starving requests")
+
+    out_path = write_bench_artifact(
+        os.path.abspath("BENCH_preempt.json"),
+        bench="serving_preempt",
+        config={
+            "model": cfg.name, "requests": n_req, "chunk": args.chunk,
+            "max_seq": max_seq, "seed": args.seed,
+            "page_size": page_size, "n_pages": n_pages,
+            "prompt_len": len(prompt), "max_new": max_new,
+            "eos_id": int(eos_id), "eos_at": int(eos_at),
+        },
+        metrics=dict(_finite_scalars(s), wall_s=wall,
+                     completion_ratio=completion,
+                     tok_per_s=toks / max(wall, 1e-9)),
+        gates={
+            "completion_ratio_min": 1.0,
+            "preemptions_min": 1,
+            "p99_ttft_s_max": p99_ttft_ceiling_s,
+            "reservation_never_fits_raises": True,
+        })
+    print(f"wrote {out_path}")
+    print("SERVING_BENCH_PREEMPT_OK")
 
 
 def run_hybrid_part(args) -> None:
@@ -650,7 +801,8 @@ def main() -> None:
                     "both engines (distributed spec must match "
                     "single-device spec token-for-token)")
     ap.add_argument("--part",
-                    choices=("all", "core", "dist", "spec", "hybrid"),
+                    choices=("all", "core", "dist", "spec", "hybrid",
+                             "preempt"),
                     default="all")
     args = ap.parse_args()
 
@@ -665,6 +817,9 @@ def main() -> None:
         return
     if args.part == "hybrid":
         run_hybrid_part(args)
+        return
+    if args.part == "preempt":
+        run_preempt_part(args)
         return
 
     cfg = get_config("gpt2-345m").reduced()
@@ -773,6 +928,10 @@ def main() -> None:
     # -- part "hybrid": windowed/recurrent stack, chunked vs replay --
     if args.part == "all":
         run_hybrid_part(args)
+
+    # -- part "preempt": over-commit admission vs reservation pricing --
+    if args.part == "all":
+        run_preempt_part(args)
 
     # -- part 3: distributed engine, transfer overlap vs single device --
     if args.part == "all":

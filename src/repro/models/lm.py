@@ -538,6 +538,97 @@ def _mixed_slot_scatter(cfg: ModelConfig, cache: Dict, view: Dict,
     return new_cache
 
 
+def gather_request_cache(cfg: ModelConfig, cache: Dict, slot, *,
+                         page_ids=None, shard=None) -> Dict:
+    """Copy one request's cache state device→host for preemption or
+    migration (``serving/kv_cache.py`` evict_to_host / restore).
+
+    Returns a host pytree ``{"periods": tuple, "rest": list}`` mirroring
+    the cache structure with the request's axis sliced out of every
+    entry.  Indexing is per-kind:
+
+      * slot-resident entries (rings, recurrent states — and every entry
+        of a stacked cache) take slot ``slot`` off the batch axis;
+      * with ``page_ids`` given, ``attn`` entries are the *page pool* —
+        they take the request's pages in block-table order instead.
+        Pass ``page_ids=()`` for a carried-state-only round trip (the
+        :class:`~repro.serving.kv_cache.StateStore` path): attn entries
+        gather to zero-size arrays and scatter back as no-ops.
+
+    ``shard`` indexes a leading device axis first (the distributed
+    engine's one-pytree-with-leading-D-axis cache).  All slicing uses at
+    most one advanced index per entry, so no axis reordering occurs and
+    :func:`scatter_request_cache` is its exact inverse.
+
+    ``_n_per_from`` is deliberately not used here: it reads the stack
+    depth off leaf shapes, which a leading shard axis would corrupt.
+    """
+    period = _period(cfg)
+    n_per = _layer_counts(cfg)[0] if cache["periods"] else 0
+
+    def take(entry, kind, lead_axes):
+        if page_ids is not None and kind == "attn":
+            idx = jnp.asarray(tuple(page_ids), jnp.int32)
+        else:
+            idx = slot
+
+        def one(t):
+            if shard is not None:
+                t = t[shard]
+            return t[(slice(None),) * lead_axes + (idx,)]
+
+        return jax.tree_util.tree_map(one, entry)
+
+    blob = {
+        "periods": tuple(
+            take(e, cfg.block_pattern[i], 1)
+            for i, e in enumerate(cache["periods"])),
+        "rest": [
+            take(e, cfg.block_kind(n_per * period + j), 0)
+            for j, e in enumerate(cache["rest"])],
+    }
+    return jax.device_get(blob)
+
+
+def scatter_request_cache(cfg: ModelConfig, cache: Dict, blob: Dict, slot, *,
+                          page_ids=None, shard=None) -> Dict:
+    """Inverse of :func:`gather_request_cache`: write a host blob back
+    into ``slot`` (and, for paged ``attn`` entries, into ``page_ids`` in
+    block-table order — the restore target's pages, which need not be the
+    pages the blob was gathered from).  Returns a new cache pytree; any
+    extra keys (e.g. ``"cross"``) pass through untouched."""
+    period = _period(cfg)
+    n_per = _layer_counts(cfg)[0] if cache["periods"] else 0
+
+    def put(entry, views, kind, lead_axes):
+        if page_ids is not None and kind == "attn":
+            idx = jnp.asarray(tuple(page_ids), jnp.int32)
+        else:
+            idx = slot
+        inner = (slice(None),) * lead_axes + (idx,)
+
+        def one(t, v):
+            if shard is None:
+                return t.at[inner].set(jnp.asarray(v, t.dtype))
+            # two steps: a scalar shard index mixed into one advanced-
+            # index expression with an array ``idx`` (separated by the
+            # lead_axes slice) would move the broadcast advanced axes to
+            # the front and no longer mirror the gather's layout
+            sub = t[shard].at[inner].set(jnp.asarray(v, t.dtype))
+            return t.at[shard].set(sub)
+
+        return jax.tree_util.tree_map(one, entry, views)
+
+    new_cache = dict(cache)
+    new_cache["periods"] = tuple(
+        put(e, blob["periods"][i], cfg.block_pattern[i], 1)
+        for i, e in enumerate(cache["periods"]))
+    new_cache["rest"] = [
+        put(e, blob["rest"][j], cfg.block_kind(n_per * period + j), 0)
+        for j, e in enumerate(cache["rest"])]
+    return new_cache
+
+
 def _chunk_body(
     params: Dict,
     cfg: ModelConfig,

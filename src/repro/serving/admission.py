@@ -158,6 +158,21 @@ class DecodeWaveScheduler:
         """Drop a retired slot from its wave."""
         self.wave[slot] = -1
 
+    def join(self, slot: int) -> int:
+        """Wave-aware admission: seat one newly admitted slot in the
+        lightest wave immediately (ties to the lowest wave id), instead
+        of leaving it unassigned for :meth:`assign` to place post-hoc.
+
+        Joining at admit time means a prefill completion lands in the
+        wave that *needs* members — the one whose dispatch is undersized
+        — the tick it starts decoding, killing the one-tick rebalance
+        bubble ``assign`` would otherwise pay moving it later.  Idempotent
+        for already-assigned slots.  Returns the slot's wave id.
+        """
+        if self.wave[slot] < 0:
+            self.wave[slot] = int(np.argmin(self.counts()))
+        return int(self.wave[slot])
+
     def assign(self, movable: Sequence[int]) -> None:
         """Place unassigned slots and rebalance emptied waves.
 
@@ -180,8 +195,29 @@ class DecodeWaveScheduler:
                 self.wave[b] = w  # leave the donor its half
 
 
+def victim_order(candidates, pages_of):
+    """Preemption victim policy: order seated requests by eviction
+    preference — **lowest priority first, most pages first, newest
+    (highest rid) first**.
+
+    Evicting the largest page-holder in the lowest priority class frees
+    the most pool per preemption (fewest victims per admitted arrival),
+    and breaking ties toward the newest request preserves FIFO fairness:
+    the request that has waited longest keeps its seat.  ``pages_of``
+    maps a request to its current device footprint
+    (``PagedCacheManager.pages_held`` / the stacked manager's cached
+    length).  Returns a new sorted list; ``candidates`` is not mutated.
+    """
+    return sorted(
+        candidates, key=lambda r: (r.priority, -pages_of(r), -r.rid))
+
+
 class FIFOAdmission:
     """FIFO admission + per-tick prefill-chunk budget."""
+
+    #: Reservation-based pricing: worst-case lifetime pages up front,
+    #: which keeps the engine preemption-free (see :meth:`page_price`).
+    overcommit = False
 
     def __init__(
         self,
@@ -323,3 +359,49 @@ class FIFOAdmission:
             out.append(PrefillChunk(slot=slot, start=filled, n=n))
             budget -= n
         return out
+
+
+class OvercommitAdmission(FIFOAdmission):
+    """Over-commit admission with preemption (vLLM-style).
+
+    Drops :class:`FIFOAdmission`'s worst-case-lifetime reservation: a
+    request is admitted when its *prompt* pages fit and the pool's
+    occupancy stays under ``watermark * (n_pages - 1)``.  Decode-time
+    page growth claims straight from the free pool; when the pool runs
+    dry mid-decode the engine preempts a victim (:func:`victim_order` —
+    lowest priority, most pages, newest first) to host memory or to a
+    recompute-from-prompt requeue, instead of refusing the arrival at
+    admission like the reservation policy does.
+
+    The watermark is the engine's pressure valve: headroom between it
+    and a full pool absorbs one tick's worth of decode growth across the
+    batch, bounding preemptions per tick.  ``watermark=1.0`` admits up
+    to the brim (maximum throughput, preemption-heavy under
+    over-subscription); lower values trade admitted concurrency for
+    fewer mid-decode evictions.
+
+    The queue itself is priority/SLO-ordered under both policies
+    (``lifecycle.admission_key``); what this class changes is the
+    *pricing* — whether an arrival that cannot reserve its lifetime can
+    still start.
+    """
+
+    overcommit = True
+
+    def __init__(self, cfg: ModelConfig, *, watermark: float = 1.0,
+                 **kwargs):
+        super().__init__(cfg, **kwargs)
+        if not 0.0 < watermark <= 1.0:
+            raise ValueError(f"watermark must be in (0, 1], got "
+                             f"{watermark}")
+        self.watermark = watermark
+
+    def page_price(self, prompt_len: int, max_new: int, *,
+                   page_size: int, max_seq: int,
+                   shared_tokens: int = 0) -> int:
+        """Admission price in pages: the *prompt* footprint only, net of
+        prefix-shared pages.  The generated remainder is unpriced — it
+        claims pages as it grows and preemption covers the shortfall."""
+        toks = min(prompt_len, max_seq)
+        total = -(-toks // page_size)
+        return max(0, total - shared_tokens // page_size)

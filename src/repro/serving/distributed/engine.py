@@ -88,14 +88,16 @@ from repro.serving.admission import (
 from repro.serving.distributed.sharded_kv import (
     ShardedPageAllocator, ShardedSlotAllocator)
 from repro.serving.distributed.transfer import TransferScheduler
-from repro.serving.engine import (
-    DECODE, PREFILL, Request, drain_engine, latency_stats, submit_request)
+from repro.serving.kv_cache import blob_nbytes
+from repro.serving.lifecycle import (
+    DECODE, MIGRATING, PREFILL, LifecycleMixin, Request, drain_engine,
+    latency_stats, submit_request, transition)
 from repro.serving.quantize import calibrate, quantize_model_params
 from repro.serving.telemetry import (
     TID_ENGINE, TID_REQUEST, Telemetry, linear_edges, registry_counter)
 
 
-class DistributedServeEngine:
+class DistributedServeEngine(LifecycleMixin):
     # schedule counters backed by the telemetry registry (the single
     # store stats() reads), same attribute spelling as before — see
     # repro.serving.telemetry.registry_counter
@@ -107,6 +109,7 @@ class DistributedServeEngine:
     spec_proposed = registry_counter("spec_proposed")
     spec_accepted = registry_counter("spec_accepted")
     spec_emitted = registry_counter("spec_emitted")
+    migrations = registry_counter("migrations")
 
     def __init__(
         self,
@@ -167,6 +170,9 @@ class DistributedServeEngine:
         self.admission = admission or FIFOAdmission(
             cfg, chunk_size=self.chunk_size)
         assert self.admission.chunk_size <= self.chunk_size
+        # lifecycle bookkeeping (preemption/restore/cancel counters and
+        # the over-commit flag mirrored off the admission policy)
+        self._init_lifecycle()
 
         # admission stays bounded per shard — shipping recurrent state
         # between shards for unbounded requests is a named next seam
@@ -186,7 +192,8 @@ class DistributedServeEngine:
             self.kv = ShardedPageAllocator(
                 cfg, self.D, slots_per_shard, max_seq, page_size=page_size,
                 n_pages=n_pages, prefix_sharing=prefix_sharing,
-                placement=placement)
+                placement=placement, overcommit=self.overcommit,
+                watermark=getattr(self.admission, "watermark", 1.0))
         else:
             assert kv_layout == "stacked", kv_layout
             self.kv = ShardedSlotAllocator(
@@ -312,6 +319,7 @@ class DistributedServeEngine:
         self.spec_proposed = 0  # draft tokens submitted for verification
         self.spec_accepted = 0  # draft tokens accepted
         self.spec_emitted = 0  # tokens emitted off verify calls
+        self.migrations = 0  # live cross-shard request migrations
         self.n_waves = max(1, int(decode_waves))
         self.waves = DecodeWaveScheduler(self.B, self.n_waves)
         # per-wave in-flight dispatch: dicts made by _dispatch_wave, or
@@ -346,6 +354,7 @@ class DistributedServeEngine:
         self._modeled_prefill_tok_s = pm.prefill_token_latency()
         self._c_pref_mod = reg.counter("prefill_modeled_s")
         self._c_pref_meas = reg.counter("prefill_measured_s")
+        self._c_migr_bytes = reg.counter("migrated_bytes_total")
         self._c_dec_mod = reg.counter("decode_modeled_s")
         self._c_dec_meas = reg.counter("decode_measured_s")
         if self.proposer is not None:
@@ -360,81 +369,139 @@ class DistributedServeEngine:
     ) -> int:
         return submit_request(self, prompt, max_new, sampling)
 
-    def _admit(self) -> None:
-        while self.queue:
-            req = self.queue[0]
-            if self.paged:
-                if self._share and self.kv.probe_pending(req.prompt):
-                    return  # same-wave deferral, one tick (see ServeEngine)
-                res = self.kv.alloc(req.prompt, req.max_new,
-                                    share=self._share)
-                if res is None:
-                    return
-                slot, shared_tokens = res
-            else:
-                slot = self.kv.alloc()
-                if slot is None:
-                    return
-                shared_tokens = 0
-            self.queue.popleft()
-            req.slot = slot
-            req.state = PREFILL
-            req.filled = shared_tokens
-            self.slots[slot] = req
-            self._temp[slot] = req.sampling.temperature
-            self._topk[slot] = req.sampling.top_k
-            self._topp[slot] = req.sampling.top_p
-            s, ls = self.kv.shard_of(slot)
-            self.cur_tok[s, ls, 0] = req.prompt[0]
-            if self.proposer is not None:
-                self.proposer.alloc(slot, req.prompt, shared_tokens)
-            if self.adaptive is not None:
-                self.adaptive.alloc(slot)
-            tr = self.tel.tracer
-            if tr.enabled:
-                tr.instant("req.admitted", "request", TID_REQUEST,
-                           {"rid": req.rid, "slot": slot, "shard": s,
-                            "shared_tokens": shared_tokens})
+    # -- lifecycle hooks (geometry the mixin machine runs through) -------
+    def _set_cur_tok(self, slot: int, tok: int) -> None:
+        s, ls = self.kv.shard_of(slot)
+        self.cur_tok[s, ls, 0] = tok
+
+    def _in_flight_slots(self) -> frozenset:
+        """Slots with an un-consumed wave dispatch: their lengths are
+        advanced (or a verify holds their draft positions), so eviction,
+        cancellation, and migration must wait for the consume."""
+        out = set()
+        for pend in self._pending_wave:
+            if pend is not None:
+                out.update(np.flatnonzero(
+                    np.asarray(pend["mask"])).tolist())
+        return frozenset(out)
+
+    def _slot_shard(self, slot: int) -> int:
+        return self.kv.shard_of(slot)[0]
+
+    def _on_decode_start(self, req: Request) -> None:
+        # wave-aware admission: the slot lands in the lightest decode
+        # wave the moment it starts decoding, so a prefill completion
+        # joins the undersized dispatch instead of waiting for a
+        # rebalance (joining at seat time would count still-prefilling
+        # slots as wave members and skew the balance)
+        self.waves.join(req.slot)
+
+    def _release_slot_extra(self, slot: int) -> None:
+        self.waves.release(slot)
+
+    def _admit_args(self, req: Request, slot: int,
+                    shared_tokens: int) -> dict:
+        return {"rid": req.rid, "slot": slot,
+                "shard": self._slot_shard(slot),
+                "shared_tokens": shared_tokens}
+
+    def _evict_blob(self, req: Request) -> dict:
+        # device_get inside the gather orders after any in-flight op
+        # writing self.cache, so the snapshot is post-tag-along (garbage
+        # above the committed length, never read back)
+        return self.kv.evict_to_host(req.slot, cache=self.cache)
+
+    def _restore_blob(self, req: Request) -> Optional[int]:
+        res = self.kv.restore(
+            req.host_blob,
+            lifetime_tokens=len(req.prompt) + req.max_new,
+            cache=self.cache, shard=req.forced_shard)
+        if res is None:
+            return None
+        slot, self.cache = res
+        return slot
 
     # ------------------------------------------------------------------
-    def _emit(self, req: Request, tok: int, now: float) -> None:
-        """Record one generated token and retire the request if finished."""
-        tr = self.tel.tracer
-        if req.t_first is None:
-            req.t_first = now
-            self._h_ttft.record(now - req.t_submit)
-            if tr.enabled:
-                tr.instant("req.first_token", "request", TID_REQUEST,
-                           {"rid": req.rid,
-                            "ttft_s": now - req.t_submit})
-        req.out.append(tok)
-        s, ls = self.kv.shard_of(req.slot)
-        if (
-            tok == self.eos_id
-            or len(req.out) >= req.max_new
-            or len(req.prompt) + len(req.out) >= self.max_seq
-        ):
-            req.t_done = now
-            if len(req.out) > 1:
-                # one TPOT sample per request (see ServeEngine._emit)
-                self._h_tpot.record(
-                    (req.t_done - req.t_first) / (len(req.out) - 1))
-            if tr.enabled:
-                tr.instant("req.done", "request", TID_REQUEST,
-                           {"rid": req.rid, "tokens": len(req.out)})
-                tr.async_end("request", req.rid)
-            self.finished.append(req)
-            self.slots[req.slot] = None
-            self.kv.free(req.slot)
-            self.waves.release(req.slot)
-            if self.proposer is not None:
-                self.proposer.free(req.slot)
-            if self.adaptive is not None:
-                self.adaptive.free(req.slot)
-            self.cur_tok[s, ls, 0] = 0
+    def migrate(self, rid: int, to_shard: Optional[int] = None,
+                *, mode: str = "auto") -> bool:
+        """Move a decoding request to another shard between ticks.
+
+        ``mode="state"`` ships the slot's carried cache through the host
+        (evict -> restore on the target shard) — for recurrent/windowed
+        stacked layouts that is the O(1)/O(W) carried state the paper's
+        metadata-only transfer path was shaped for, metered as a
+        ``migrate.state`` transfer event.  ``mode="recompute"`` ships
+        nothing: the request re-prefills ``prompt + out[:-1]`` on the
+        target shard (the cheap choice when the bulk K/V is paged).
+        ``"auto"`` picks state for stacked layouts and recompute for
+        paged pools.  Either way the greedy stream is token-for-token
+        identical to an unmigrated run.  Returns ``True`` if the request
+        was detached — or scheduled to detach — toward ``to_shard``
+        (default: the least-loaded other shard).  A slot with an
+        un-consumed wave dispatch defers to consume time (like cancel);
+        a request that finishes off that very dispatch drops the
+        migration.  Mid-prefill and cancelling requests are left
+        alone."""
+        if mode not in ("auto", "state", "recompute"):
+            raise ValueError(f"migrate mode {mode!r}")
+        req = next((r for r in self.slots
+                    if r is not None and r.rid == rid), None)
+        if req is None or req.state != DECODE or req.cancel_requested:
+            return False
+        src = self._slot_shard(req.slot)
+        if to_shard is None:
+            order = [s for s in self.kv.placement.order(self.kv.shards)
+                     if s != src]
+            if not order:
+                return False
+            to_shard = order[0]
+        if to_shard == src or not 0 <= to_shard < self.D:
+            return False
+        if mode == "auto":
+            mode = "recompute" if self.paged else "state"
+        if req.slot in self._in_flight_slots():
+            # the pipelined tick keeps every decoding slot's dispatch in
+            # flight across tick boundaries — detach at consume time
+            # (same deferral as cancel; dropped if the request finishes
+            # off that very dispatch)
+            req.migrate_to = (to_shard, mode)
+            return True
+        self._do_migrate(req, to_shard, mode)
+        return True
+
+    def _do_migrate(self, req: Request, to_shard: int, mode: str) -> None:
+        """Detach a decoding request toward ``to_shard`` (no in-flight
+        dispatch may hold its slot)."""
+        req.migrate_to = None
+        src = self._slot_shard(req.slot)
+        slot = req.slot
+        transition(req, MIGRATING)
+        if mode == "state":
+            blob = self._evict_blob(req)
+            nbytes = blob_nbytes(blob)
+            # the gather/scatter bytes really moved device->host->device;
+            # meter them on the transfer timeline (hidden iff some wave
+            # op is still in flight to shadow them)
+            self.xfer.note("migrate.state", nbytes)
+            req.host_blob = blob
+            self._free_slot_state(req, free_kv=False)
         else:
-            req.state = DECODE
-            self.cur_tok[s, ls, 0] = tok
+            nbytes = 0
+            self._free_slot_state(req)
+            req.filled = 0
+            req.ctx = list(req.prompt) + req.out[:-1]
+            req.resume_decode = True
+        req.slot = None
+        req.forced_shard = to_shard
+        req.n_migrations += 1
+        self.migrations += 1
+        self._c_migr_bytes.value += nbytes
+        self.queue.append(req)
+        tr = self.tel.tracer
+        if tr.enabled:
+            tr.instant("req.migrated", "request", TID_REQUEST,
+                       {"rid": req.rid, "slot": slot, "from": src,
+                        "to": to_shard, "mode": mode, "bytes": nbytes})
 
     def _sample_rows(self, logits: np.ndarray) -> np.ndarray:
         self.rng, sub = jax.random.split(self.rng)
@@ -467,7 +534,7 @@ class DistributedServeEngine:
             triples = []
             for r in prefilling:
                 _, ls = self.kv.shard_of(r.slot)
-                triples.append((ls, len(r.prompt), r.filled))
+                triples.append((ls, len(r.context), r.filled))
             plans.append(deque(self.admission.plan_chunks(triples)))
         return plans
 
@@ -494,7 +561,7 @@ class DistributedServeEngine:
                     f"overruns slot {gslot}'s cache "
                     f"(len={self.kv.length_of(gslot)}, "
                     f"max_seq={self.max_seq})")
-            toks[s, :ch.n] = req.prompt[ch.start:ch.start + ch.n]
+            toks[s, :ch.n] = req.context[ch.start:ch.start + ch.n]
             slots[s] = ch.slot
             offs[s] = ch.start
             valids[s] = ch.n
@@ -538,7 +605,7 @@ class DistributedServeEngine:
             if self.proposer is not None:
                 self.proposer.prefill_chunk(req.slot, toks[s], ch.start,
                                             ch.n)
-            if req.filled == len(req.prompt):
+            if req.filled == len(req.context):
                 completions.append((s, req))
         return op, logits_d, completions
 
@@ -589,11 +656,14 @@ class DistributedServeEngine:
                     for op, logits_d, completions in pending_first:
                         logits_h = self.xfer.fetch("prefill.logits",
                                                    logits_d, of=op)
-                        now = time.monotonic()
                         for s, req in completions:
-                            self._emit(req,
-                                       self._sample_one(logits_h[s], req),
-                                       now)
+                            # a fresh request emits its first token off
+                            # these logits; a resume-prefill does not
+                            # (its pending token is out[-1])
+                            self._finish_prefill(
+                                req,
+                                lambda row=logits_h[s], r=req:
+                                self._sample_one(row, r))
 
             for op in tick_ops:  # prefill ops cannot shadow past the tick
                 self.xfer.retire(op)
@@ -623,9 +693,19 @@ class DistributedServeEngine:
             if kind == "decode":
                 sampled = self._sample_rows(logits_h)
                 for b, req in enumerate(self.slots):
-                    if (req is not None and req.state == DECODE
-                            and pend["mask"][b]):
+                    if req is None or not pend["mask"][b]:
+                        continue
+                    if req.cancel_requested:
+                        # deferred cancel: the dispatch this consume
+                        # settles was already in flight when cancel()
+                        # ran — tear the slot down now instead
+                        self._free_slot_state(req)
+                        self._finalize_cancel(req)
+                        continue
+                    if req.state == DECODE:
                         self._emit(req, int(sampled[b]), now)
+                        if not req.done and req.migrate_to is not None:
+                            self._do_migrate(req, *req.migrate_to)
             else:
                 self._consume_verify(pend, logits_h, now)
         return True
@@ -648,6 +728,13 @@ class DistributedServeEngine:
         mask = free & (np.asarray(self.waves.wave) == w)
         if not mask.any():
             return False
+        if self.spec is None:
+            # over-commit: a dry pool preempts a victim here (possibly
+            # narrowing the wave) before the decode is dispatched; the
+            # verify path prices its own per-row draft room instead
+            mask = self._ensure_room(mask)
+            if not mask.any():
+                return False
         rows = int(mask.sum())
         # per-wave decode occupancy: rows riding this dispatch, the
         # wave-imbalance bubble signal (histogram + live gauge w/ peak)
@@ -681,7 +768,6 @@ class DistributedServeEngine:
         overwritten by that row's own next dispatch and masked until then
         (unallocated paged positions resolve to the null page)."""
         if self.paged:
-            self.kv.ensure_decode_room(mask)
             logits_d, self.cache = self._step(
                 self.params,
                 self._stage(f"decode.w{w}.tokens", self.cur_tok),
@@ -729,6 +815,11 @@ class DistributedServeEngine:
         draft, counts = self.proposer.propose(
             self.slots, self.cur_tok.reshape(self.B, 1), lengths_h, mask,
             caps)
+        # over-commit: preempting for draft room may narrow the wave —
+        # cleared rows park (lengths >= max_seq, valids == 0) and write
+        # nothing this verify; a fully-narrowed wave still dispatches
+        # parked (cheap, and the caller's accounting stays uniform)
+        mask = self._ensure_room(mask, counts + 1)
         toks = np.zeros((self.B, k + 1), np.int32)
         toks[:, 0] = self.cur_tok.reshape(self.B)
         toks[:, 1:] = draft
@@ -739,7 +830,6 @@ class DistributedServeEngine:
         prev_cache = None
         traj = None
         if self.paged:
-            self.kv.ensure_decode_room(mask, counts + 1)
             if self._state_store is not None:
                 # mixed paged: snapshot + trajectory settle the slot-
                 # resident rings/states one tick later (consume side);
@@ -812,6 +902,12 @@ class DistributedServeEngine:
             req = self.slots[b]
             if not mask[b] or req is None:
                 continue
+            if req.cancel_requested:
+                # deferred cancel (see _consume_wave): drop the verify
+                # results — the slot's pages/draft state release here
+                self._free_slot_state(req)
+                self._finalize_cancel(req)
+                continue
             m = int(n_acc[b])
             self._h_accept.record(m)
             self.spec_proposed += int(counts[b])
@@ -829,6 +925,8 @@ class DistributedServeEngine:
                 # drafts on the slot's own shard
                 self.kv.rewind(b, L + m + 1)
                 self.proposer.commit(b, req.prompt + req.out, L + m + 1)
+                if req.migrate_to is not None:
+                    self._do_migrate(req, *req.migrate_to)
 
     # ------------------------------------------------------------------
     def run(self, max_ticks: int = 10_000, *,
@@ -897,7 +995,12 @@ class DistributedServeEngine:
             "decode_measured_s": self._c_dec_meas.value,
             "prefill_modeled_s": self._c_pref_mod.value,
             "prefill_measured_s": self._c_pref_meas.value,
+            # live cross-shard migration (satellite of the lifecycle
+            # core: requests leave a hot shard through migrate())
+            "migrations": self.migrations,
+            "migrated_bytes_total": self._c_migr_bytes.value,
         })
+        out.update(self.lifecycle_stats())
         if self.spec is not None:
             out.update({
                 "spec_ticks": self.spec_ticks,

@@ -38,7 +38,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.serving.admission import ShardPlacement
-from repro.serving.kv_cache import PagedCacheManager, SlotCacheManager
+from repro.serving.kv_cache import (
+    PagedCacheManager, PagePoolExhausted, SlotCacheManager)
 
 
 class _ShardedBase:
@@ -77,6 +78,42 @@ class _ShardedBase:
         s, ls = self.shard_of(slot)
         self.shards[s].free(ls)
 
+    def pages_held(self, slot: int) -> int:
+        """Victim-policy weight for a global slot (pages on its shard's
+        pool; committed length on the stacked flavour)."""
+        s, ls = self.shard_of(slot)
+        return self.shards[s].pages_held(ls)
+
+    # -- preemption & migration: host round-trip -------------------------
+    def evict_to_host(self, slot: int, *, cache=None, shard=None) -> Dict:
+        """Snapshot a global slot's pages/state to host and free it.
+
+        The shard index comes from the slot id; ``cache`` is the engine's
+        one global pytree (leading D axis).  The blob records the source
+        shard so a restore can prefer locality (and a migration can pick
+        anywhere else)."""
+        s, ls = self.shard_of(slot)
+        blob = self.shards[s].evict_to_host(ls, cache=cache, shard=s)
+        blob["shard"] = s
+        return blob
+
+    def restore(self, blob: Dict, *, lifetime_tokens=None, cache=None,
+                shard=None):
+        """Re-seat a host blob on ``shard`` (forced — a migration
+        target), or on the least-loaded shard that can take it.  Returns
+        ``(global_slot, new_cache)`` or ``None`` when no candidate shard
+        has room yet (caller retries next tick)."""
+        order = ([shard] if shard is not None
+                 else self.placement.order(self.shards))
+        for s in order:
+            res = self.shards[s].restore(
+                blob, lifetime_tokens=lifetime_tokens, cache=cache,
+                shard=s)
+            if res is not None:
+                ls, new_cache = res
+                return s * self.slots_per_shard + ls, new_cache
+        return None
+
     def rewind(self, slot: int, new_len: int) -> None:
         """Roll a global slot back to ``new_len`` on its own shard — the
         distributed speculative-decode rejection path.  The shard manager
@@ -113,6 +150,8 @@ class ShardedPageAllocator(_ShardedBase):
         n_pages: Optional[int] = None,
         prefix_sharing: bool = True,
         placement: Optional[ShardPlacement] = None,
+        overcommit: bool = False,
+        watermark: float = 1.0,
     ):
         assert n_shards >= 1
         self.cfg = cfg
@@ -125,7 +164,8 @@ class ShardedPageAllocator(_ShardedBase):
             PagedCacheManager(
                 cfg, slots_per_shard, max_seq, page_size=page_size,
                 n_pages=n_pages, prefix_sharing=prefix_sharing,
-                with_cache=False)
+                with_cache=False, overcommit=overcommit,
+                watermark=watermark)
             for _ in range(n_shards)
         ]
         self.pages_per_seq = self.shards[0].pages_per_seq
@@ -154,20 +194,25 @@ class ShardedPageAllocator(_ShardedBase):
         max_new: int = 1,
         *,
         share: bool = True,
+        shard: Optional[int] = None,
     ) -> Optional[Tuple[int, int]]:
         """Place one request on a single shard.
 
         Candidate shards come from :class:`ShardPlacement` (prefix
         affinity first — committed, so a momentarily-full prefix shard
         makes the request wait rather than lose the copy-free link — then
-        most available pages).  Returns ``(global_slot, shared_tokens)``,
-        or None when every candidate shard is momentarily full (caller
-        retries next tick).  Raises ``ValueError`` when NO candidate
-        shard could *ever* fit the request — pages never straddle shards,
-        so aggregate free space across shards cannot save it.
+        most available pages); ``shard`` forces placement instead (a
+        recompute-migration must land on its target shard).  Returns
+        ``(global_slot, shared_tokens)``, or None when every candidate
+        shard is momentarily full (caller retries next tick).  Raises
+        ``ValueError`` when NO candidate shard could *ever* fit the
+        request — pages never straddle shards, so aggregate free space
+        across shards cannot save it.
         """
-        order = self.placement.order(
-            self.shards, prompt, share=share and self.prefix_sharing)
+        order = ([shard] if shard is not None
+                 else self.placement.order(
+                     self.shards, prompt,
+                     share=share and self.prefix_sharing))
         never_fits = 0
         err: Optional[ValueError] = None
         for s in order:
@@ -197,7 +242,15 @@ class ShardedPageAllocator(_ShardedBase):
             np.asarray(n, np.int64), (self.n_shards * self.slots_per_shard,)
         ).reshape(mask.shape)
         for s, m in enumerate(self.shards):
-            m.ensure_decode_room(mask[s], ns[s])
+            try:
+                m.ensure_decode_room(mask[s], ns[s])
+            except PagePoolExhausted as e:
+                # re-raise with the GLOBAL slot id: the engine's preempt
+                # loop uses it to pick a victim on the dry shard
+                gslot = (s * self.slots_per_shard + e.slot
+                         if e.slot is not None else None)
+                raise PagePoolExhausted(
+                    f"shard {s}: {e}", slot=gslot) from None
 
     # -- batched device-call views --------------------------------------
     def block_tables_array(self) -> np.ndarray:
@@ -266,11 +319,14 @@ class ShardedSlotAllocator(_ShardedBase):
         cache; the distributed engine calls its ``commit_sharded``."""
         return self.shards[0].state
 
-    def alloc(self) -> Optional[int]:
+    def alloc(self, *, shard: Optional[int] = None) -> Optional[int]:
         """Claim a slot on the least-loaded shard (the same
         :class:`ShardPlacement` order as the paged allocator, minus prefix
-        affinity — no prompt), or None when every shard is full."""
-        for s in self.placement.order(self.shards):
+        affinity — no prompt) or on a forced ``shard`` (migration
+        target), or None when every candidate is full."""
+        order = ([shard] if shard is not None
+                 else self.placement.order(self.shards))
+        for s in order:
             local = self.shards[s].alloc()
             if local is not None:
                 return s * self.slots_per_shard + local

@@ -156,6 +156,20 @@ class TransferScheduler:
                         "stage")
         return arr
 
+    def note(self, name: str, nbytes: int) -> None:
+        """Meter a transfer performed elsewhere (the migration path's
+        cache gather/scatter happens inside the sharded allocator, which
+        has no scheduler handle).  Records one event of ``nbytes`` under
+        the current phase with the usual hidden-iff-shadowed rule — no
+        copy is performed here."""
+        hidden = bool(self._in_flight)
+        tr = self.tracer
+        t0 = time.perf_counter() if tr.enabled else 0.0
+        self._record(name, int(nbytes), hidden)
+        if tr.enabled:
+            tr.transfer(name, t0, int(nbytes), hidden, self._phase,
+                        "note")
+
     def fetch(self, name: str, array, of: Optional[int] = None) -> np.ndarray:
         """Device -> host: pull an op's output.  ``of`` names the producer
         (consumed by this fetch); the transfer is hidden iff OTHER ops are

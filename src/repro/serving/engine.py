@@ -94,7 +94,6 @@ disabled adds zero per-tick allocations and no device syncs.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from collections import deque
 from typing import Dict, List, Optional
@@ -111,145 +110,19 @@ from repro.models.layers import tp_context
 from repro.serving import sampler as samplers, speculative
 from repro.serving.admission import FIFOAdmission
 from repro.serving.kv_cache import PagedCacheManager, SlotCacheManager
+# the request state machine, admission/seating/emission/preemption
+# bookkeeping, and the shared run-loop helpers all live in the lifecycle
+# core; the names are re-exported here because tests, benchmarks, and
+# the distributed engine historically import them from this module
+from repro.serving.lifecycle import (  # noqa: F401  (re-exported API)
+    DECODE, PREFILL, LifecycleMixin, Request, _fmt_rids, drain_engine,
+    latency_stats, submit_request)
 from repro.serving.quantize import calibrate, quantize_model_params
 from repro.serving.telemetry import (
-    TID_ENGINE, TID_REQUEST, Telemetry, linear_edges, registry_counter)
-
-PREFILL = "prefill"
-DECODE = "decode"
+    TID_ENGINE, Telemetry, linear_edges, registry_counter)
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new: int
-    sampling: samplers.SamplingParams = samplers.GREEDY
-    out: List[int] = dataclasses.field(default_factory=list)
-    t_submit: float = 0.0
-    t_first: Optional[float] = None
-    t_done: Optional[float] = None
-    slot: Optional[int] = None
-    state: str = PREFILL
-    filled: int = 0  # prompt tokens already written to the slot's cache
-
-    @property
-    def done(self) -> bool:
-        return self.t_done is not None
-
-    @property
-    def ttft(self) -> Optional[float]:
-        return None if self.t_first is None else self.t_first - self.t_submit
-
-
-def submit_request(engine, prompt, max_new, sampling) -> int:
-    """Queue one request — the submit path shared by :class:`ServeEngine`
-    and the distributed engine (same validation, rid assignment, and
-    timestamping, so per-request accounting stays comparable).
-
-    Validation raises ``ValueError`` (not ``assert``, which vanishes under
-    ``python -O`` and would let a bad request corrupt slot masks): the
-    prompt must be non-empty and — on engines with a length ceiling
-    (``engine.seq_ceiling``; window-capped stacks have none) — leave room
-    to generate, and ``max_new`` must be at least 1 (a request that may
-    not emit anything would still occupy a slot and emit one token before
-    the length check fires)."""
-    ceiling = engine.seq_ceiling
-    if len(prompt) < 1 or (ceiling is not None
-                           and len(prompt) >= ceiling):
-        raise ValueError(
-            f"prompt ({len(prompt)} tokens) must be non-empty and fit the "
-            f"cache with room to generate (max_seq={engine.max_seq})")
-    if max_new < 1:
-        raise ValueError(
-            f"max_new={max_new}: a request must generate at least one "
-            "token")
-    rid = engine._next_rid
-    engine._next_rid += 1
-    engine.queue.append(
-        Request(rid=rid, prompt=list(prompt), max_new=max_new,
-                sampling=sampling or samplers.GREEDY,
-                t_submit=time.monotonic()))
-    tr = engine.tel.tracer
-    if tr.enabled:
-        # request lifecycle timeline: async span rid-wide, instants at
-        # each state change (queued here; admitted / first_token / done
-        # are emitted where those transitions happen)
-        tr.async_begin("request", rid)
-        tr.instant("req.queued", "request", TID_REQUEST,
-                   {"rid": rid, "prompt_len": len(prompt),
-                    "max_new": max_new})
-    return rid
-
-
-def _fmt_rids(rids: List[int], limit: int = 8) -> str:
-    """Compact rid list for stall diagnostics: first ``limit``, then a
-    +N tail."""
-    if len(rids) <= limit:
-        return str(rids)
-    return f"{rids[:limit]} +{len(rids) - limit} more"
-
-
-def drain_engine(engine, pending, max_ticks: int,
-                 on_stall: str) -> List[Request]:
-    """Shared run loop for :class:`ServeEngine` and the distributed
-    engine: tick while ``pending()`` and the budget lasts (counting loop
-    iterations, not engine ticks, so a no-op tick cannot spin forever),
-    then surface leftovers.  Exhausting ``max_ticks`` with requests still
-    queued or in flight raises (``finished`` would silently read as the
-    complete result otherwise); ``on_stall="ignore"`` returns the partial
-    list instead, with the leftover count in ``stats()["stalled"]``.
-
-    The stall surface carries a per-state breakdown — queued vs
-    in-flight rids in the ``RuntimeError`` message and on
-    ``engine.stalled_detail`` (counts mirrored as
-    ``stats()["stalled_queued"]`` / ``["stalled_in_flight"]``) — so
-    stall triage names the stuck requests instead of requiring a
-    debugger."""
-    if on_stall not in ("raise", "ignore"):
-        raise ValueError(
-            f"on_stall={on_stall!r} must be 'raise' or 'ignore'")
-    spent = 0
-    while pending() and spent < max_ticks:
-        engine.tick()
-        spent += 1
-    queued = [r.rid for r in engine.queue]
-    in_flight = [r.rid for r in engine.slots if r is not None]
-    engine.stalled = len(queued) + len(in_flight)
-    engine.stalled_detail = {"queued": queued, "in_flight": in_flight}
-    if engine.stalled and on_stall == "raise":
-        raise RuntimeError(
-            f"engine stalled: max_ticks={max_ticks} exhausted with "
-            f"{len(queued)} queued (rids {_fmt_rids(queued)}) and "
-            f"{len(in_flight)} in-flight (rids {_fmt_rids(in_flight)}) "
-            "requests (the finished list is partial; raise max_ticks or "
-            "pass on_stall='ignore')")
-    return engine.finished
-
-
-def latency_stats(engine) -> Dict[str, float]:
-    """Per-request latency aggregates (TTFT / TPOT with p50/p99), shared
-    by both engines' ``stats()``.  Read from the telemetry registry's
-    fixed-bucket histograms — the single backing store ``_emit`` records
-    into — so every key covers exactly the window since the last
-    registry reset (the whole run unless ``reset_counters`` trimmed the
-    warm-up), with no unbounded per-request lists.  ``requests`` is the
-    TTFT sample count: requests that produced a first token in the
-    window, which is what the quantiles aggregate over."""
-    reg = engine.tel.registry
-    th, ph = reg.histogram("ttft_s"), reg.histogram("tpot_s")
-    return {
-        "requests": th.count,
-        "mean_ttft_s": th.mean(),
-        "mean_tok_latency_s": ph.mean(),
-        "p50_ttft_s": th.quantile(0.5),
-        "p99_ttft_s": th.quantile(0.99),
-        "p50_tpot_s": ph.quantile(0.5),
-        "p99_tpot_s": ph.quantile(0.99),
-    }
-
-
-class ServeEngine:
+class ServeEngine(LifecycleMixin):
     # schedule counters live in the telemetry registry (the single
     # backing store stats() reads and reset() zeroes); the descriptor
     # keeps the attribute spelling, so hot paths still write
@@ -325,6 +198,9 @@ class ServeEngine:
             "admission schedules chunks larger than the engine's "
             f"prefill buffer ({self.admission.chunk_size} > "
             f"{self.chunk_size})")
+        # lifecycle bookkeeping (preemption/restore/cancel counters and
+        # the over-commit flag mirrored off the admission policy)
+        self._init_lifecycle()
         # price a probe request one position past the cache: a stack whose
         # per-layer slot footprint saturates below max_seq — rotating
         # windows at W, recurrent state at O(1); admission.slot_price is
@@ -361,7 +237,9 @@ class ServeEngine:
                     "max_seq)")
             self.kv = PagedCacheManager(
                 cfg, batch_slots, max_seq, page_size=page_size,
-                n_pages=n_pages, prefix_sharing=prefix_sharing)
+                n_pages=n_pages, prefix_sharing=prefix_sharing,
+                overcommit=self.overcommit,
+                watermark=getattr(self.admission, "watermark", 1.0))
         else:
             assert kv_layout == "stacked", kv_layout
             self.kv = SlotCacheManager(cfg, batch_slots, max_seq,
@@ -528,92 +406,6 @@ class ServeEngine:
     ) -> int:
         return submit_request(self, prompt, max_new, sampling)
 
-    def _admit(self) -> None:
-        while self.queue:
-            req = self.queue[0]
-            if self.paged:
-                # a live request is prefilling this very prefix: wait one
-                # tick and link its pages instead of re-prefilling them
-                # (same-wave fleet admissions would otherwise never share)
-                if self._share and self.kv.probe_pending(req.prompt):
-                    return
-                # admission prices pages, not whole slots: alloc admits the
-                # request iff its worst-case lifetime pages (net of
-                # prefix-shared ones — FIFOAdmission.page_price is the
-                # formula) fit the unreserved pool, and raises if the
-                # request could never fit so the FIFO head cannot spin
-                res = self.kv.alloc(req.prompt, req.max_new,
-                                    share=self._share)
-                if res is None:
-                    return
-                slot, shared_tokens = res
-            else:
-                slot = self.kv.alloc()
-                if slot is None:
-                    return
-                shared_tokens = 0
-            self.queue.popleft()
-            req.slot = slot
-            req.state = PREFILL
-            # a prefix-sharing hit starts prefill past the shared pages —
-            # their K/V are already in the pool, rope'd at these positions
-            req.filled = shared_tokens
-            self.slots[slot] = req
-            tr = self.tel.tracer
-            if tr.enabled:
-                tr.instant("req.admitted", "request", TID_REQUEST,
-                           {"rid": req.rid, "slot": slot,
-                            "shared_tokens": shared_tokens})
-            if self.proposer is not None:
-                self.proposer.alloc(slot, req.prompt, shared_tokens)
-            if self.adaptive is not None:
-                self.adaptive.alloc(slot)
-            self._temp[slot] = req.sampling.temperature
-            self._topk[slot] = req.sampling.top_k
-            self._topp[slot] = req.sampling.top_p
-            self.cur_tok[slot, 0] = req.prompt[0]  # replay-mode first token
-
-    # ------------------------------------------------------------------
-    def _emit(self, req: Request, tok: int, now: float) -> None:
-        """Record one generated token and retire the request if finished."""
-        tr = self.tel.tracer
-        if req.t_first is None:
-            req.t_first = now
-            self._h_ttft.record(now - req.t_submit)
-            if tr.enabled:
-                tr.instant("req.first_token", "request", TID_REQUEST,
-                           {"rid": req.rid,
-                            "ttft_s": now - req.t_submit})
-        req.out.append(tok)
-        if (
-            tok == self.eos_id
-            or len(req.out) >= req.max_new
-            or (self.seq_ceiling is not None
-                and len(req.prompt) + len(req.out) >= self.seq_ceiling)
-        ):
-            req.t_done = now
-            if len(req.out) > 1:
-                # one TPOT sample per request (steady-state decode
-                # latency), matching the per-request mean latency_stats
-                # always reported
-                self._h_tpot.record(
-                    (req.t_done - req.t_first) / (len(req.out) - 1))
-            if tr.enabled:
-                tr.instant("req.done", "request", TID_REQUEST,
-                           {"rid": req.rid, "tokens": len(req.out)})
-                tr.async_end("request", req.rid)
-            self.finished.append(req)
-            self.slots[req.slot] = None
-            self.kv.free(req.slot)
-            if self.proposer is not None:
-                self.proposer.free(req.slot)
-            if self.adaptive is not None:
-                self.adaptive.free(req.slot)
-            self.cur_tok[req.slot, 0] = 0
-        else:
-            req.state = DECODE
-            self.cur_tok[req.slot, 0] = tok
-
     def _sample_rows(self, logits: jax.Array) -> np.ndarray:
         self.rng, sub = jax.random.split(self.rng)
         return np.asarray(self._sample(
@@ -642,12 +434,14 @@ class ServeEngine:
             did = False
 
             # -- chunked prefill within this tick's token budget (FIFO) --
+            # req.context, not req.prompt: a recompute-resume re-prefills
+            # the synthetic ``prompt + out[:-1]`` context it lost
             prefilling = sorted(
                 (r for r in self.slots
                  if r is not None and r.state == PREFILL),
                 key=lambda r: r.rid)
             plan = self.admission.plan_chunks(
-                [(r.slot, len(r.prompt), r.filled) for r in prefilling])
+                [(r.slot, len(r.context), r.filled) for r in prefilling])
             for ch in plan:
                 req = self.slots[ch.slot]
                 if not self.kv.has_room(ch.slot, ch.n):
@@ -662,7 +456,7 @@ class ServeEngine:
                         f"(len={self.kv.length_of(ch.slot)}, "
                         f"max_seq={self.max_seq})")
                 chunk = np.zeros((self.chunk_size,), np.int32)
-                chunk[:ch.n] = req.prompt[ch.start:ch.start + ch.n]
+                chunk[:ch.n] = req.context[ch.start:ch.start + ch.n]
                 t0 = time.perf_counter()
                 with tr.span(
                         "prefill.chunk", "stage", TID_ENGINE,
@@ -691,12 +485,13 @@ class ServeEngine:
                 if self.proposer is not None:
                     self.proposer.prefill_chunk(ch.slot, chunk, ch.start,
                                                 ch.n)
-                if req.filled == len(req.prompt):
+                if req.filled == len(req.context):
                     # first generated token comes straight off the
                     # prefill logits — this is the TTFT the chunked path
-                    # buys
-                    self._emit(req, self._sample_one(logits, req),
-                               time.monotonic())
+                    # buys (a recompute-resume instead swallows them and
+                    # restarts decode at its pending out[-1])
+                    self._finish_prefill(
+                        req, lambda: self._sample_one(logits, req))
                 did = True
 
             # -- one batched decode step over all decoding slots --
@@ -713,17 +508,21 @@ class ServeEngine:
             self.ticks += 1
             self._h_tick.record(time.perf_counter() - t_tick)
 
-    def _plain_decode(self, decoding: List[bool]) -> None:
+    def _plain_decode(self, decoding) -> None:
         """One single-token batched decode step (the non-speculative path)."""
+        # under over-commit a dry pool preempts a victim here and clears
+        # its row; reservation pools pass the mask through untouched
+        decoding = self._ensure_room(decoding)
+        if not decoding.any():
+            return
         tr = self.tel.tracer
         t0 = time.perf_counter()
         with tr.span("decode.step", "stage", TID_ENGINE,
-                     ({"rows": sum(decoding),
+                     ({"rows": int(decoding.sum()),
                        "modeled_s": self._modeled_decode_s}
                       if tr.enabled else None)), \
                 tr.annotation("decode.step"):
             if self.paged:
-                self.kv.ensure_decode_room(decoding)
                 logits, self.kv.cache = self._step(
                     self.params, jnp.asarray(self.cur_tok), self.kv.cache,
                     self.kv.lengths, jnp.asarray(self.kv.block_tables),
@@ -776,6 +575,12 @@ class ServeEngine:
             # the plain step emits the identical token stream.
             self._plain_decode(list(decoding))
             return
+        # room for k+1 verify writes per row BEFORE vlen/valids are
+        # derived: an over-committed pool may preempt one of the decoding
+        # rows itself, and its cleared bit must park the row
+        decoding = self._ensure_room(decoding, counts + 1)
+        if not decoding.any():
+            return
         toks = np.zeros((B, k + 1), np.int32)
         toks[:, 0] = self.cur_tok[:, 0]
         toks[:, 1:] = draft
@@ -796,7 +601,6 @@ class ServeEngine:
                       if tr.enabled else None)), \
                 tr.annotation("spec.verify"):
             if self.paged:
-                self.kv.ensure_decode_room(decoding, counts + 1)
                 mask = np.asarray(decoding, bool)
                 live = -(-(lengths_h + counts + 1) // self.kv.page_size)
                 self.verify_touched_positions += int(
@@ -882,9 +686,10 @@ class ServeEngine:
         self._admit()
         if all(s is None for s in self.slots):
             return
-        occupied = [s is not None for s in self.slots]
+        occupied = self._ensure_room([s is not None for s in self.slots])
+        if not occupied.any():
+            return
         if self.paged:
-            self.kv.ensure_decode_room(occupied)
             logits, self.kv.cache = self._step(
                 self.params, jnp.asarray(self.cur_tok), self.kv.cache,
                 self.kv.lengths, jnp.asarray(self.kv.block_tables),
@@ -898,15 +703,16 @@ class ServeEngine:
         lengths_h = np.asarray(self.kv.lengths)
         now = time.monotonic()
         for b, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not occupied[b]:
                 continue
+            ctx = req.context
             pos = int(lengths_h[b]) + 1  # tokens in cache after this tick
-            if pos < len(req.prompt):  # still prefilling: teacher-force
+            if pos < len(ctx):  # still prefilling: teacher-force
                 req.filled = pos
-                self.cur_tok[b, 0] = req.prompt[pos]
+                self.cur_tok[b, 0] = ctx[pos]
             else:
-                req.filled = len(req.prompt)
-                self._emit(req, int(sampled[b]), now)
+                req.filled = len(ctx)
+                self._finish_prefill(req, lambda: int(sampled[b]))
         # advance every slot that was occupied when the step ran (freed-
         # this-tick slots get their stale +1 reset at the next alloc)
         self.kv.advance_mask(np.asarray(occupied))
@@ -951,6 +757,7 @@ class ServeEngine:
             "prefill_modeled_s": self._c_pref_mod.value,
             "prefill_measured_s": self._c_pref_meas.value,
         })
+        out.update(self.lifecycle_stats())
         if self.spec is not None:
             out.update({
                 "spec_ticks": self.spec_ticks,

@@ -76,6 +76,27 @@ from repro.configs.base import ModelConfig
 from repro.models import blocks, lm
 
 
+class PagePoolExhausted(RuntimeError):
+    """Mid-decode page growth found the pool empty.
+
+    Only the over-commit admission mode can surface this (reservation
+    mode pre-pays every request's worst-case lifetime, so
+    ``ensure_decode_room`` cannot fail there).  The engine catches it
+    and preempts a victim — ``slot`` names the request whose growth hit
+    the wall, which locates the exhausted pool shard."""
+
+    def __init__(self, msg: str, slot: Optional[int] = None):
+        super().__init__(msg)
+        self.slot = slot
+
+
+def blob_nbytes(blob: Dict) -> int:
+    """Host bytes a :meth:`PagedCacheManager.evict_to_host` /
+    :meth:`SlotCacheManager.evict_to_host` snapshot occupies."""
+    return int(sum(getattr(leaf, "nbytes", 0)
+                   for leaf in jax.tree_util.tree_leaves(blob.get("kv"))))
+
+
 class StateStore:
     """The carried-state rewind seam, owned beside the KV pool.
 
@@ -135,6 +156,21 @@ class StateStore:
                   jnp.asarray(lengths, jnp.int32),
                   jnp.asarray(counts, jnp.int32),
                   jnp.asarray(valids, jnp.int32))
+
+    # -- carried-state host round-trip ---------------------------------
+    def evict_to_host(self, cache: Dict, slot: int, *, shard=None) -> Dict:
+        """Gather only the slot-resident entries (rings / recurrent
+        states; ``page_ids=()`` makes paged attention entries gather
+        nothing) to host — the O(1) carried state a migration ships."""
+        return lm.gather_request_cache(self.cfg, cache, slot,
+                                       page_ids=(), shard=shard)
+
+    def restore(self, cache: Dict, blob: Dict, slot: int, *,
+                shard=None) -> Dict:
+        """Scatter a carried-state snapshot back into ``slot``; returns
+        the updated cache pytree."""
+        return lm.scatter_request_cache(self.cfg, cache, blob, slot,
+                                        page_ids=(), shard=shard)
 
 
 class SlotCacheManager:
@@ -205,6 +241,51 @@ class SlotCacheManager:
         """Restart a held slot from position 0 (masks its old content)."""
         assert slot in self._used, slot
         self.lengths[slot] = 0
+
+    # -- preemption: host round-trip ------------------------------------
+    def evict_to_host(self, slot: int, *, cache: Optional[Dict] = None,
+                      shard=None) -> Dict:
+        """Snapshot a slot's cache content to host and free the slot.
+
+        With the manager-owned cache (``with_cache=True``) no ``cache``
+        argument is needed; the sharded allocator passes its global
+        pytree plus the shard index instead."""
+        if slot not in self._used:
+            raise ValueError(f"evict of unallocated slot {slot}")
+        src = self.cache if cache is None else cache
+        blob = {
+            "layout": "stacked",
+            "length": int(self.lengths[slot]),
+            "kv": lm.gather_request_cache(self.cfg, src, slot,
+                                          shard=shard),
+        }
+        self.free(slot)
+        return blob
+
+    def restore(self, blob: Dict, *, lifetime_tokens: Optional[int] = None,
+                cache: Optional[Dict] = None, shard=None):
+        """Re-seat a host-evicted snapshot into a fresh slot.
+
+        Returns ``None`` when no slot is free; the claimed slot id with
+        the manager-owned cache updated in place; or ``(slot, cache)``
+        when an external cache pytree was passed (sharded allocator)."""
+        slot = self.alloc()
+        if slot is None:
+            return None
+        self.lengths[slot] = blob["length"]
+        own = cache is None
+        tgt = self.cache if own else cache
+        new_cache = lm.scatter_request_cache(self.cfg, tgt, blob["kv"],
+                                             slot, shard=shard)
+        if own:
+            self.cache = new_cache
+            return slot
+        return slot, new_cache
+
+    def pages_held(self, slot: int) -> int:
+        """Victim-policy weight: the stacked layout has no pages, so the
+        footprint proxy is the slot's committed length."""
+        return int(self.lengths[slot])
 
     # -- length accounting ---------------------------------------------
     def advance(self, slot: int, n: int) -> None:
@@ -282,6 +363,8 @@ class PagedCacheManager:
         prefix_sharing: bool = True,
         dtype=jnp.bfloat16,
         with_cache: bool = True,
+        overcommit: bool = False,
+        watermark: float = 1.0,
     ):
         if not blocks.paged_capable(cfg):
             # ValueError, not assert: the barrier between a stack with
@@ -314,6 +397,18 @@ class PagedCacheManager:
         assert n_pages >= 2, "need at least the null page and one real page"
         self.n_pages = n_pages
         self.prefix_sharing = prefix_sharing
+        # over-commit admission: price prompts only (no worst-case
+        # lifetime reservation) and admit fresh requests while occupancy
+        # stays under ``watermark * usable pages``; decode growth past
+        # the pool raises PagePoolExhausted for the engine to preempt a
+        # victim.  Reservation mode (the default) keeps the invariant
+        # documented in the module docstring.
+        self.overcommit = overcommit
+        if not 0.0 < watermark <= 1.0:
+            raise ValueError(
+                f"watermark={watermark} must be in (0, 1]: it is the "
+                "occupancy fraction fresh admissions may fill")
+        self.watermark = watermark
         # per-kind layouts: a mixed stack keeps rings/recurrent states
         # slot-resident, and their speculative commits go through the
         # same StateStore seam as the stacked layout
@@ -522,7 +617,16 @@ class PagedCacheManager:
                 f"prompt ({plen} tokens) exceeds the cache (max_seq="
                 f"{self.max_seq}); admitting it would corrupt the mask")
         total_pages = self.pages_for(min(plen + max_new, self.max_seq))
-        if total_pages > self.n_pages - 1:
+        prompt_pages = self.pages_for(plen)
+        if self.overcommit:
+            # over-commit never-fits: only the prompt itself must fit —
+            # decode growth is preemption's problem, not admission's
+            if prompt_pages > self.n_pages - 1:
+                raise ValueError(
+                    f"prompt needs {prompt_pages} pages but the pool "
+                    f"only has {self.n_pages - 1}; it can never be "
+                    "admitted (raise n_pages or shorten the prompt)")
+        elif total_pages > self.n_pages - 1:
             raise ValueError(
                 f"request needs {total_pages} pages but the pool only has "
                 f"{self.n_pages - 1}; it can never be admitted (raise "
@@ -538,7 +642,14 @@ class PagedCacheManager:
         # resurrecting a cached (refcount-0) shared page consumes a free
         # page just like a fresh claim, so it counts against the pool
         n_cached = sum(1 for pid in shared_pids if self._refcount[pid] == 0)
-        if (total_pages - n_shared) + n_cached > self.available_pages:
+        if self.overcommit:
+            fresh = (prompt_pages - n_shared) + n_cached
+            if fresh > self.n_free_pages:
+                return None
+            if (self.pages_in_use + fresh
+                    > self.watermark * (self.n_pages - 1)):
+                return None
+        elif (total_pages - n_shared) + n_cached > self.available_pages:
             return None
 
         slot = heapq.heappop(self._free_slots)
@@ -550,7 +661,6 @@ class PagedCacheManager:
             self._refcount[pid] += 1
             pages.append(pid)
         self.prefix_hit_pages += n_shared
-        prompt_pages = self.pages_for(plen)
         pending: List[Tuple[int, int]] = []
         register = share and self.prefix_sharing
         for i in range(n_shared, prompt_pages):  # fresh prompt pages
@@ -565,7 +675,8 @@ class PagedCacheManager:
                     self._page_meta[pid] = (pages[i - 1] if i else 0, toks)
                     pending.append((pid, (i + 1) * ps))
         self._slot_pages[slot] = pages
-        self._reserved[slot] = total_pages - prompt_pages
+        self._reserved[slot] = (0 if self.overcommit
+                                else total_pages - prompt_pages)
         self._min_len[slot] = plen  # rewind floor: prompt pages may be
         # prefix-shared/registered; rejected drafts always sit above them
         self._pending_ready[slot] = pending
@@ -591,6 +702,86 @@ class PagedCacheManager:
         self.block_tables[slot] = 0
         self.lengths[slot] = 0
         heapq.heappush(self._free_slots, slot)
+
+    # -- preemption: host round-trip ------------------------------------
+    def evict_to_host(self, slot: int, *, cache: Optional[Dict] = None,
+                      shard=None) -> Dict:
+        """Snapshot a slot's residency to host and free it: its pages'
+        content (in block-table order) plus — in a mixed stack — its
+        slot-resident rings/recurrent state.  Shared pages are *copied*
+        (their content is part of this request's cache regardless of who
+        else links them) and then decref'd by the free; the restore
+        scatters onto fresh, unshared pages.
+
+        With the manager-owned cache (``with_cache=True``) no ``cache``
+        argument is needed; the sharded allocator passes its global
+        pytree plus the shard index."""
+        if slot not in self._used_slots:
+            raise ValueError(f"evict of unallocated slot {slot}")
+        src = self.cache if cache is None else cache
+        pages = list(self._slot_pages[slot])
+        blob = {
+            "layout": "paged",
+            "length": int(self.lengths[slot]),
+            "min_len": self._min_len.get(slot, 0),
+            "n_pages": len(pages),
+            "kv": lm.gather_request_cache(self.cfg, src, slot,
+                                          page_ids=pages, shard=shard),
+        }
+        self.free(slot)
+        return blob
+
+    def restore(self, blob: Dict, *, lifetime_tokens: Optional[int] = None,
+                cache: Optional[Dict] = None, shard=None):
+        """Re-seat a host-evicted snapshot: claim a slot and fresh pages
+        (same count, any ids — the block table re-maps them), scatter
+        the content back, and resume length accounting where it stopped.
+
+        Restores bypass the over-commit watermark (the request already
+        paid admission once; holding it hostage to fresh-arrival policy
+        would deadlock the queue) but still need the pages to exist.  In
+        reservation mode the remaining worst-case lifetime
+        (``lifetime_tokens``) is re-reserved, preserving the invariant.
+        Returns ``None`` (wait), the slot id (manager-owned cache), or
+        ``(slot, cache)`` when an external cache was passed."""
+        need = blob["n_pages"]
+        if not self._free_slots:
+            return None
+        if self.overcommit:
+            if need > self.n_free_pages:
+                return None
+            reserve = 0
+        else:
+            total = self.pages_for(
+                min(lifetime_tokens if lifetime_tokens is not None
+                    else blob["length"], self.max_seq))
+            reserve = max(0, total - need)
+            if need + reserve > self.available_pages:
+                return None
+        slot = heapq.heappop(self._free_slots)
+        self._used_slots.add(slot)
+        pages = [self._claim_page() for _ in range(need)]
+        self._slot_pages[slot] = pages
+        self._reserved[slot] = reserve
+        self._min_len[slot] = blob["min_len"]
+        self._pending_ready[slot] = []
+        row = np.zeros((self.pages_per_seq,), np.int32)
+        row[:len(pages)] = pages
+        self.block_tables[slot] = row
+        self.lengths[slot] = blob["length"]
+        own = cache is None
+        tgt = self.cache if own else cache
+        new_cache = lm.scatter_request_cache(self.cfg, tgt, blob["kv"],
+                                             slot, page_ids=pages,
+                                             shard=shard)
+        if own:
+            self.cache = new_cache
+            return slot
+        return slot, new_cache
+
+    def pages_held(self, slot: int) -> int:
+        """Victim-policy weight: pages currently backing the slot."""
+        return len(self._slot_pages.get(slot, ()))
 
     # -- length accounting ---------------------------------------------
     def advance(self, slot: int, n: int) -> None:
@@ -659,7 +850,10 @@ class PagedCacheManager:
                     f"rewind reached shared page {pid} of slot {slot} "
                     f"(refcount {int(self._refcount[pid])})")
             self._release_page(pid)
-            self._reserved[slot] = self._reserved.get(slot, 0) + 1
+            if not self.overcommit:
+                # over-commit holds no reservations to re-credit; the
+                # released page simply returns to the shared free pool
+                self._reserved[slot] = self._reserved.get(slot, 0) + 1
             self.block_tables[slot, len(pages)] = 0
         self.lengths[slot] = new_len
 
@@ -677,15 +871,26 @@ class PagedCacheManager:
             pages = self._slot_pages[slot]
             need = int(self.lengths[slot]) + int(ns[slot])
             while len(pages) * self.page_size < need:
-                if self._reserved.get(slot, 0) <= 0:
+                if self._reserved.get(slot, 0) > 0:
+                    pid = self._claim_page()
+                    self._reserved[slot] -= 1
+                elif self.overcommit:
+                    # no reservations to draw on: claim straight from
+                    # the free pool, and surface exhaustion as the typed
+                    # error the engine's preemption loop catches
+                    if self.n_free_pages == 0:
+                        raise PagePoolExhausted(
+                            f"slot {slot} page growth to {need} tokens "
+                            "found the over-committed pool empty",
+                            slot=slot)
+                    pid = self._claim_page()
+                else:
                     # raise, don't assert: under python -O a silent claim
                     # here would eat pages other requests' reservations
                     # guarantee, failing them far from the actual bug
                     raise RuntimeError(
                         f"slot {slot} page growth to {need} tokens "
                         "exceeds its admission-time reservation")
-                pid = self._claim_page()
-                self._reserved[slot] -= 1
                 self.block_tables[slot, len(pages)] = pid
                 pages.append(pid)
 

@@ -1,0 +1,725 @@
+"""Request-lifecycle core shared by the serving engines.
+
+Before this module, ``ServeEngine.tick`` and the distributed engine's
+tick carried two hand-synchronized copies of the same request state
+machine (admission, slot seating, result emission, stall accounting).
+This module makes the machine explicit and single-sourced:
+
+  * an explicit state machine with a legality table —
+
+    ``QUEUED -> PREFILL -> DECODE -> DONE`` is the happy path; under
+    pool pressure a request detours through ``PREEMPTED_HOST`` (its
+    pages and carried state round-trip to host memory and restore
+    verbatim) or ``PREEMPTED_RECOMPUTE`` (cheap-to-rebuild requests
+    free everything and re-prefill ``prompt + out[:-1]``), and on the
+    distributed engine ``MIGRATING`` carries a request between shards.
+    Every state change goes through :func:`transition`, which raises
+    :class:`IllegalTransition` on anything outside
+    ``LEGAL_TRANSITIONS`` — the table the property tests enumerate.
+
+  * :class:`LifecycleMixin` — the slot bookkeeping both engines
+    duplicated: priority/deadline-aware admission (FIFO bit-exact when
+    every request carries the defaults), seating (sampling-param
+    arrays, proposer/adaptive alloc, prefix-shared fill), emission
+    (TTFT/TPOT accounting, retirement), preemption with a victim
+    policy, host-evict/restore and recompute-resume, and
+    ``cancel(rid)``.  Engine-specific geometry (how ``cur_tok`` is
+    indexed, which slots have in-flight dispatches, decode-wave
+    membership) enters through small hooks.
+
+Resume correctness is an arithmetic identity, not a heuristic: a
+request that has emitted ``m`` tokens holds ``P + m - 1`` cache
+positions (the prompt plus ``out[:m-1]``; ``out[-1]`` is the pending
+``cur_tok``, not yet written).  Recompute-resume therefore re-prefills
+the synthetic context ``prompt + out[:-1]`` — exactly the cache it
+lost — and restarts decode at ``cur_tok = out[-1]`` *without emitting
+from the resume-prefill logits* (``resume_decode``), so greedy streams
+are token-for-token identical to uninterrupted runs.  Host-restore
+skips even the re-prefill: the gathered pages/state scatter back and
+decode continues as if nothing happened.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving import sampler as samplers
+from repro.serving.admission import victim_order
+from repro.serving.kv_cache import PagePoolExhausted, blob_nbytes
+from repro.serving.telemetry import (
+    TID_REQUEST, exponential_edges, registry_counter)
+
+# -- states ----------------------------------------------------------------
+# PREFILL/DECODE keep their historical string values: tests and tools
+# compare ``req.state == "decode"`` directly.
+QUEUED = "queued"
+PREFILL = "prefill"
+DECODE = "decode"
+PREEMPTED_HOST = "preempted_host"
+PREEMPTED_RECOMPUTE = "preempted_recompute"
+MIGRATING = "migrating"
+DONE = "done"
+CANCELLED = "cancelled"
+
+TERMINAL = frozenset({DONE, CANCELLED})
+
+#: the legality table: ``transition`` refuses anything not listed here
+#: (same-state transitions are no-ops except out of a terminal state).
+LEGAL_TRANSITIONS: Dict[str, frozenset] = {
+    QUEUED: frozenset({PREFILL, CANCELLED}),
+    PREFILL: frozenset({DECODE, DONE, CANCELLED, PREEMPTED_RECOMPUTE}),
+    DECODE: frozenset({DONE, CANCELLED, PREEMPTED_HOST,
+                       PREEMPTED_RECOMPUTE, MIGRATING}),
+    # host-evicted pages/state restore verbatim -> straight back to decode
+    PREEMPTED_HOST: frozenset({DECODE, CANCELLED}),
+    # recompute re-prefills the synthetic context before decoding again
+    PREEMPTED_RECOMPUTE: frozenset({PREFILL, CANCELLED}),
+    # a state-shipped migration resumes decode on the target shard; a
+    # recompute-migration re-prefills there
+    MIGRATING: frozenset({PREFILL, DECODE, CANCELLED}),
+    DONE: frozenset(),
+    CANCELLED: frozenset(),
+}
+
+
+class IllegalTransition(ValueError):
+    """A lifecycle transition outside :data:`LEGAL_TRANSITIONS`."""
+
+
+def transition(req: "Request", new_state: str) -> None:
+    """Move ``req`` to ``new_state``, enforcing the legality table."""
+    cur = req.state
+    if new_state == cur and cur not in TERMINAL:
+        return
+    if cur not in LEGAL_TRANSITIONS:
+        raise IllegalTransition(
+            f"request {req.rid}: unknown lifecycle state {cur!r}")
+    if new_state not in LEGAL_TRANSITIONS[cur]:
+        raise IllegalTransition(
+            f"request {req.rid}: illegal lifecycle transition "
+            f"{cur!r} -> {new_state!r}")
+    req.state = new_state
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    sampling: samplers.SamplingParams = samplers.GREEDY
+    out: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+    slot: Optional[int] = None
+    state: str = QUEUED
+    filled: int = 0  # context tokens already written to the slot's cache
+    # -- lifecycle detour bookkeeping --
+    #: synthetic resume context (``prompt + out[:-1]``) a recompute
+    #: re-prefills; ``None`` outside a recompute resume
+    ctx: Optional[List[int]] = None
+    #: the resume-prefill's final logits must NOT emit a token — the
+    #: request already holds ``out[-1]`` as its pending ``cur_tok``
+    resume_decode: bool = False
+    #: host-side page/state snapshot while ``PREEMPTED_HOST``
+    host_blob: Optional[dict] = None
+    #: distributed engines finalize cancels at wave-consume time — an
+    #: in-flight dispatch already advanced this slot's lengths
+    cancel_requested: bool = False
+    #: target shard a migration re-admission must land on
+    forced_shard: Optional[int] = None
+    #: deferred migration ``(to_shard, mode)`` — like cancels, a slot
+    #: with an un-consumed dispatch detaches at wave-consume time
+    migrate_to: Optional[tuple] = None
+    n_preempts: int = 0
+    n_migrations: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+    @property
+    def priority(self) -> int:
+        return self.sampling.priority
+
+    @property
+    def deadline(self) -> float:
+        d = self.sampling.deadline_s
+        return float("inf") if d is None else d
+
+    @property
+    def context(self) -> List[int]:
+        """What prefill must write: the prompt, or the synthetic resume
+        context while recovering from a recompute preemption."""
+        return self.prompt if self.ctx is None else self.ctx
+
+    @property
+    def remaining_new(self) -> int:
+        """Generation budget left, counting the pending ``out[-1]``
+        (unwritten) token — so ``len(context) + remaining_new`` equals
+        the original ``len(prompt) + max_new`` lifetime ceiling."""
+        if not self.out:
+            return self.max_new
+        return self.max_new - len(self.out) + 1
+
+    @property
+    def resuming(self) -> bool:
+        return self.state in (PREEMPTED_HOST, PREEMPTED_RECOMPUTE,
+                              MIGRATING)
+
+
+def admission_key(req: Request):
+    """Queue ordering: priority desc, then resuming-before-fresh (a
+    preempted request re-enters ahead of same-priority arrivals), then
+    earliest deadline, then FIFO by rid.  All-default requests reduce to
+    ``(0, 1, inf, rid)`` — exact FIFO."""
+    return (-req.priority, 0 if req.resuming else 1, req.deadline, req.rid)
+
+
+def submit_request(engine, prompt, max_new, sampling) -> int:
+    """Queue one request — the submit path shared by :class:`ServeEngine`
+    and the distributed engine (same validation, rid assignment, and
+    timestamping, so per-request accounting stays comparable).
+
+    Validation raises ``ValueError`` (not ``assert``, which vanishes under
+    ``python -O`` and would let a bad request corrupt slot masks): the
+    prompt must be non-empty and — on engines with a length ceiling
+    (``engine.seq_ceiling``; window-capped stacks have none) — leave room
+    to generate, and ``max_new`` must be at least 1 (a request that may
+    not emit anything would still occupy a slot and emit one token before
+    the length check fires)."""
+    ceiling = engine.seq_ceiling
+    if len(prompt) < 1 or (ceiling is not None
+                           and len(prompt) >= ceiling):
+        raise ValueError(
+            f"prompt ({len(prompt)} tokens) must be non-empty and fit the "
+            f"cache with room to generate (max_seq={engine.max_seq})")
+    if max_new < 1:
+        raise ValueError(
+            f"max_new={max_new}: a request must generate at least one "
+            "token")
+    rid = engine._next_rid
+    engine._next_rid += 1
+    engine.queue.append(
+        Request(rid=rid, prompt=list(prompt), max_new=max_new,
+                sampling=sampling or samplers.GREEDY,
+                t_submit=time.monotonic()))
+    tr = engine.tel.tracer
+    if tr.enabled:
+        # request lifecycle timeline: async span rid-wide, instants at
+        # each state change (queued here; admitted / first_token / done
+        # are emitted where those transitions happen)
+        tr.async_begin("request", rid)
+        tr.instant("req.queued", "request", TID_REQUEST,
+                   {"rid": rid, "prompt_len": len(prompt),
+                    "max_new": max_new})
+    return rid
+
+
+def _fmt_rids(rids: List[int], limit: int = 8) -> str:
+    """Compact rid list for stall diagnostics: first ``limit``, then a
+    +N tail."""
+    if len(rids) <= limit:
+        return str(rids)
+    return f"{rids[:limit]} +{len(rids) - limit} more"
+
+
+def drain_engine(engine, pending, max_ticks: int,
+                 on_stall: str) -> List[Request]:
+    """Shared run loop for :class:`ServeEngine` and the distributed
+    engine: tick while ``pending()`` and the budget lasts (counting loop
+    iterations, not engine ticks, so a no-op tick cannot spin forever),
+    then surface leftovers.  Exhausting ``max_ticks`` with requests still
+    queued or in flight raises (``finished`` would silently read as the
+    complete result otherwise); ``on_stall="ignore"`` returns the partial
+    list instead, with the leftover count in ``stats()["stalled"]``.
+
+    The stall surface carries a per-state breakdown — queued vs
+    in-flight rids in the ``RuntimeError`` message and on
+    ``engine.stalled_detail`` (counts mirrored as
+    ``stats()["stalled_queued"]`` / ``["stalled_in_flight"]``) — so
+    stall triage names the stuck requests instead of requiring a
+    debugger."""
+    if on_stall not in ("raise", "ignore"):
+        raise ValueError(
+            f"on_stall={on_stall!r} must be 'raise' or 'ignore'")
+    spent = 0
+    while pending() and spent < max_ticks:
+        engine.tick()
+        spent += 1
+    queued = [r.rid for r in engine.queue]
+    in_flight = [r.rid for r in engine.slots if r is not None]
+    engine.stalled = len(queued) + len(in_flight)
+    engine.stalled_detail = {"queued": queued, "in_flight": in_flight}
+    if engine.stalled and on_stall == "raise":
+        raise RuntimeError(
+            f"engine stalled: max_ticks={max_ticks} exhausted with "
+            f"{len(queued)} queued (rids {_fmt_rids(queued)}) and "
+            f"{len(in_flight)} in-flight (rids {_fmt_rids(in_flight)}) "
+            "requests (the finished list is partial; raise max_ticks or "
+            "pass on_stall='ignore')")
+    return engine.finished
+
+
+def latency_stats(engine) -> Dict[str, float]:
+    """Per-request latency aggregates (TTFT / TPOT with p50/p99), shared
+    by both engines' ``stats()``.  Read from the telemetry registry's
+    fixed-bucket histograms — the single backing store ``_emit`` records
+    into — so every key covers exactly the window since the last
+    registry reset (the whole run unless ``reset_counters`` trimmed the
+    warm-up), with no unbounded per-request lists.  ``requests`` is the
+    TTFT sample count: requests that produced a first token in the
+    window, which is what the quantiles aggregate over."""
+    reg = engine.tel.registry
+    th, ph = reg.histogram("ttft_s"), reg.histogram("tpot_s")
+    return {
+        "requests": th.count,
+        "mean_ttft_s": th.mean(),
+        "mean_tok_latency_s": ph.mean(),
+        "p50_ttft_s": th.quantile(0.5),
+        "p99_ttft_s": th.quantile(0.99),
+        "p50_tpot_s": ph.quantile(0.5),
+        "p99_tpot_s": ph.quantile(0.99),
+    }
+
+
+class LifecycleMixin:
+    """The request state machine both engines run on.
+
+    The host engine provides the geometry; the mixin provides the
+    machine.  Required host attributes: ``kv``, ``paged``, ``_share``,
+    ``queue``, ``slots``, ``finished``, ``proposer``, ``adaptive``,
+    ``tel``, ``seq_ceiling``, ``eos_id``, ``_temp``/``_topk``/``_topp``
+    (flat, indexed by engine-global slot), ``_h_ttft``/``_h_tpot``.
+    Overridable hooks: :meth:`_set_cur_tok` (cur_tok geometry),
+    :meth:`_in_flight_slots` (slots with an un-consumed dispatch — never
+    preempted/cancelled in place), :meth:`_slot_shard` /
+    :meth:`_pool_shard_of` (page-pool locality for victim selection),
+    :meth:`_on_seat` / :meth:`_release_slot_extra` (decode-wave
+    membership)."""
+
+    preemptions = registry_counter("preemptions")
+    preempt_host = registry_counter("preempt_host")
+    preempt_recompute = registry_counter("preempt_recompute")
+    restores = registry_counter("restores")
+    cancelled = registry_counter("cancelled")
+
+    def _init_lifecycle(self) -> None:
+        """Call after ``self.tel`` and ``self.admission`` exist."""
+        self.preemptions = 0
+        self.preempt_host = 0
+        self.preempt_recompute = 0
+        self.restores = 0
+        self.cancelled = 0
+        reg = self.tel.registry
+        self._c_evicted = reg.counter("evicted_bytes_total")
+        self._h_evict = reg.histogram(
+            "evicted_bytes", edges=exponential_edges(1.0, 1e12,
+                                                     per_decade=2))
+        self.cancelled_reqs: List[Request] = []
+        self.overcommit = bool(getattr(self.admission, "overcommit",
+                                       False))
+
+    def lifecycle_stats(self) -> Dict[str, float]:
+        return {
+            "preemptions": self.preemptions,
+            "preempt_host": self.preempt_host,
+            "preempt_recompute": self.preempt_recompute,
+            "restores": self.restores,
+            "cancelled": self.cancelled,
+            "evicted_bytes_total": self._c_evicted.value,
+            "evicted_bytes_p99": self._h_evict.quantile(0.99),
+        }
+
+    # -- engine hooks ------------------------------------------------------
+    def _set_cur_tok(self, slot: int, tok: int) -> None:
+        self.cur_tok[slot, 0] = tok
+
+    def _in_flight_slots(self) -> frozenset:
+        """Slots whose dispatched compute has not been consumed yet:
+        their lengths are advanced and a token is in flight, so evicting
+        or freeing them in place would tear state mid-dispatch."""
+        return frozenset()
+
+    def _slot_shard(self, slot: int) -> int:
+        return 0
+
+    def _on_seat(self, req: Request) -> None:
+        """Post-seat hook (slot bound, prefill not yet run)."""
+
+    def _on_decode_start(self, req: Request) -> None:
+        """The request entered DECODE — prefill completion, host
+        restore, or recompute resume.  The distributed engine seats the
+        slot in the lightest decode wave here (wave-aware admission):
+        joining any earlier would count a still-prefilling slot as a
+        wave member and skew the balance the drain overlap depends
+        on."""
+
+    def _release_slot_extra(self, slot: int) -> None:
+        """Extra per-slot teardown (decode-wave membership)."""
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self) -> None:
+        """Seat queued (and preempted) requests while they place.
+
+        The candidate each round is the queue minimum under
+        :func:`admission_key`; with all-default sampling params that is
+        the FIFO head, bit-exact with the pre-lifecycle engines.  A
+        candidate that cannot place blocks admission (head-of-line:
+        skipping it would starve it behind cheaper requests) unless it
+        outranks a seated victim — then preemption makes room."""
+        while self.queue:
+            req = min(self.queue, key=admission_key)
+            placed = self._try_place(req)
+            if placed is None:
+                placed = self._admit_by_preemption(req)
+            if placed is None:
+                return
+            self.queue.remove(req)
+            slot, shared_tokens = placed
+            if req.host_blob is not None:
+                # PREEMPTED_HOST, or MIGRATING with shipped state
+                self._seat_restored(req, slot)
+            else:
+                self._seat(req, slot, shared_tokens)
+
+    def _try_place(self, req: Request):
+        """One placement attempt: ``None`` (wait) or ``(slot,
+        shared_tokens)``.  Raises ``ValueError`` if the request can
+        never fit (so the queue head cannot spin forever)."""
+        if req.host_blob is not None:
+            # host-evicted (or state-shipped migration): the cache
+            # scatters back whole, no prefill needed
+            slot = self._restore_blob(req)
+            return None if slot is None else (slot, 0)
+        ctx = req.context
+        # prefix sharing stays a fresh-prompt feature: a resume context
+        # contains generated tokens, and registering them in the prefix
+        # map would let unrelated requests link to them
+        share = self._share and req.ctx is None
+        if self.paged:
+            # a live request is prefilling this very prefix: wait one
+            # tick and link its pages instead of re-prefilling them
+            # (same-wave fleet admissions would otherwise never share)
+            if share and self.kv.probe_pending(ctx):
+                return None
+            kwargs = {}
+            if req.forced_shard is not None:
+                kwargs["shard"] = req.forced_shard
+            res = self.kv.alloc(ctx, req.remaining_new, share=share,
+                                **kwargs)
+            if res is None:
+                return None
+            return res
+        kwargs = {}
+        if req.forced_shard is not None:
+            kwargs["shard"] = req.forced_shard
+        slot = self.kv.alloc(**kwargs)
+        if slot is None:
+            return None
+        return slot, 0
+
+    def _restore_blob(self, req: Request) -> Optional[int]:
+        """Scatter a host-evicted request's pages/state back; ``None``
+        if the pool cannot host it yet."""
+        return self.kv.restore(
+            req.host_blob,
+            lifetime_tokens=len(req.prompt) + req.max_new,
+            shard=req.forced_shard)
+
+    def _admit_by_preemption(self, req: Request):
+        """Make room for a higher-priority arrival by preempting
+        strictly-lower-priority victims.  Default-priority traffic never
+        preempts (no victim has priority < 0) — admission stays FIFO."""
+        preempted = False
+        for _ in range(len(self.slots)):
+            victim = self._pick_victim(max_priority=req.priority)
+            if victim is None:
+                break
+            self._preempt(victim)
+            preempted = True
+            placed = self._try_place(req)
+            if placed is not None:
+                return placed
+        if preempted:
+            # victims were paid but the arrival still does not fit
+            # (e.g. a page-pool hole on another shard) — it stays the
+            # blocking head and retries next tick
+            return self._try_place(req)
+        return None
+
+    # -- seating -----------------------------------------------------------
+    def _seat(self, req: Request, slot: int, shared_tokens: int) -> None:
+        transition(req, PREFILL)
+        req.slot = slot
+        # a prefix-sharing hit starts prefill past the shared pages —
+        # their K/V are already in the pool, rope'd at these positions
+        req.filled = shared_tokens
+        req.forced_shard = None
+        self.slots[slot] = req
+        tr = self.tel.tracer
+        if tr.enabled:
+            tr.instant("req.admitted", "request", TID_REQUEST,
+                       self._admit_args(req, slot, shared_tokens))
+        if self.proposer is not None:
+            self.proposer.alloc(slot, req.context, shared_tokens)
+        if self.adaptive is not None:
+            self.adaptive.alloc(slot)
+        self._temp[slot] = req.sampling.temperature
+        self._topk[slot] = req.sampling.top_k
+        self._topp[slot] = req.sampling.top_p
+        self._set_cur_tok(slot, req.context[0])  # replay-mode first token
+        self._on_seat(req)
+
+    def _admit_args(self, req: Request, slot: int,
+                    shared_tokens: int) -> dict:
+        return {"rid": req.rid, "slot": slot,
+                "shared_tokens": shared_tokens}
+
+    def _seat_restored(self, req: Request, slot: int) -> None:
+        """Seat a host-restored request: its cache is already whole
+        (``prompt + out[:-1]`` positions), so it skips prefill and
+        resumes decode at ``cur_tok = out[-1]``."""
+        transition(req, DECODE)
+        req.slot = slot
+        req.filled = len(req.prompt)
+        req.host_blob = None
+        req.forced_shard = None
+        self.slots[slot] = req
+        ctx = req.prompt + req.out
+        if self.proposer is not None:
+            # teacher-force the draft proposer back in sync (ModelDraft
+            # replays the context through its own cache; the n-gram
+            # table rebuilds lazily from req.prompt + req.out)
+            self.proposer.alloc(slot, ctx[:-1], len(ctx) - 1)
+        if self.adaptive is not None:
+            self.adaptive.alloc(slot)
+        self._temp[slot] = req.sampling.temperature
+        self._topk[slot] = req.sampling.top_k
+        self._topp[slot] = req.sampling.top_p
+        self._set_cur_tok(slot, req.out[-1])
+        self.restores += 1
+        tr = self.tel.tracer
+        if tr.enabled:
+            tr.instant("req.restored", "request", TID_REQUEST,
+                       {"rid": req.rid, "slot": slot, "mode": "host"})
+        self._on_seat(req)
+        self._on_decode_start(req)
+
+    def _finish_prefill(self, req: Request, sample_tok) -> None:
+        """The slot's context is fully written.  A fresh request emits
+        its first token off the prefill logits (the TTFT the chunked
+        path buys); a recompute-resume does NOT — its pending token is
+        ``out[-1]``, which becomes ``cur_tok`` and decode continues the
+        original stream."""
+        if req.resume_decode:
+            req.resume_decode = False
+            req.ctx = None
+            transition(req, DECODE)
+            self._set_cur_tok(req.slot, req.out[-1])
+            self.restores += 1
+            tr = self.tel.tracer
+            if tr.enabled:
+                tr.instant("req.restored", "request", TID_REQUEST,
+                           {"rid": req.rid, "slot": req.slot,
+                            "mode": "recompute"})
+            self._on_decode_start(req)
+        else:
+            self._emit(req, sample_tok(), time.monotonic())
+            if not req.done:
+                self._on_decode_start(req)
+
+    # -- emission ----------------------------------------------------------
+    def _emit(self, req: Request, tok: int, now: float) -> None:
+        """Record one generated token and retire the request if finished."""
+        tr = self.tel.tracer
+        if req.t_first is None:
+            req.t_first = now
+            self._h_ttft.record(now - req.t_submit)
+            if tr.enabled:
+                tr.instant("req.first_token", "request", TID_REQUEST,
+                           {"rid": req.rid,
+                            "ttft_s": now - req.t_submit})
+        req.out.append(tok)
+        if (
+            tok == self.eos_id
+            or len(req.out) >= req.max_new
+            or (self.seq_ceiling is not None
+                and len(req.prompt) + len(req.out) >= self.seq_ceiling)
+        ):
+            transition(req, DONE)
+            req.t_done = now
+            if len(req.out) > 1:
+                # one TPOT sample per request (steady-state decode
+                # latency), matching the per-request mean latency_stats
+                # always reported
+                self._h_tpot.record(
+                    (req.t_done - req.t_first) / (len(req.out) - 1))
+            if tr.enabled:
+                tr.instant("req.done", "request", TID_REQUEST,
+                           {"rid": req.rid, "tokens": len(req.out)})
+                tr.async_end("request", req.rid)
+            self.finished.append(req)
+            self._free_slot_state(req)
+        else:
+            transition(req, DECODE)
+            self._set_cur_tok(req.slot, tok)
+
+    def _free_slot_state(self, req: Request, *, free_kv: bool = True)\
+            -> None:
+        """Release everything a seated request holds (pages/slot, draft
+        state, sampling rows).  ``req.slot`` is intentionally left set —
+        finished requests keep it for post-mortem accounting."""
+        slot = req.slot
+        self.slots[slot] = None
+        if free_kv:
+            self.kv.free(slot)
+        if self.proposer is not None:
+            self.proposer.free(slot)
+        if self.adaptive is not None:
+            self.adaptive.free(slot)
+        self._set_cur_tok(slot, 0)
+        self._release_slot_extra(slot)
+
+    # -- preemption --------------------------------------------------------
+    def _pick_victim(self, *, max_priority: Optional[int] = None,
+                     shard: Optional[int] = None,
+                     exclude=()) -> Optional[Request]:
+        """The victim policy: lowest priority first, most pages held
+        first, newest rid first (:func:`repro.serving.admission.
+        victim_order`).  Slots with in-flight dispatches and requests
+        already being cancelled are never victims; ``shard`` restricts
+        to one page pool (pages never straddle shards)."""
+        in_flight = self._in_flight_slots()
+        cands = []
+        for b, r in enumerate(self.slots):
+            if r is None or b in in_flight or r.cancel_requested:
+                continue
+            if r in exclude:
+                continue
+            if max_priority is not None and r.priority >= max_priority:
+                continue
+            if shard is not None and self._slot_shard(b) != shard:
+                continue
+            cands.append(r)
+        if not cands:
+            return None
+        return victim_order(
+            cands, lambda r: self.kv.pages_held(r.slot))[0]
+
+    def _preempt(self, req: Request, mode: str = "auto") -> None:
+        """Evict a seated request and requeue it for resume.
+
+        ``mode="host"`` round-trips its pages and carried state to host
+        memory (restore is a scatter — no recompute); ``"recompute"``
+        frees everything and rebuilds by re-prefilling ``prompt +
+        out[:-1]``; ``"auto"`` picks host for decoding requests with
+        output (state worth saving) and recompute for mid-prefill ones
+        (their cache is cheap and partially absent)."""
+        if mode not in ("auto", "host", "recompute"):
+            raise ValueError(f"preempt mode {mode!r}")
+        if mode == "auto":
+            mode = ("recompute"
+                    if req.state == PREFILL or not req.out else "host")
+        slot = req.slot
+        if mode == "host":
+            transition(req, PREEMPTED_HOST)
+            blob = self._evict_blob(req)
+            req.host_blob = blob
+            nbytes = blob_nbytes(blob)
+            self._c_evicted.value += nbytes
+            self._h_evict.record(nbytes)
+            self._free_slot_state(req, free_kv=False)
+            self.preempt_host += 1
+        else:
+            transition(req, PREEMPTED_RECOMPUTE)
+            self._free_slot_state(req)
+            req.filled = 0
+            if req.out:
+                # resume context = exactly the cache it lost
+                req.ctx = list(req.prompt) + req.out[:-1]
+                req.resume_decode = True
+            else:
+                req.ctx = None
+                req.resume_decode = False
+            self.preempt_recompute += 1
+        self.preemptions += 1
+        req.n_preempts += 1
+        req.slot = None
+        self.queue.append(req)
+        tr = self.tel.tracer
+        if tr.enabled:
+            tr.instant("req.preempted", "request", TID_REQUEST,
+                       {"rid": req.rid, "slot": slot, "mode": mode})
+
+    def _evict_blob(self, req: Request) -> dict:
+        """Gather the request's pages + carried state to host and free
+        its device residency (the manager frees pages internally)."""
+        return self.kv.evict_to_host(req.slot)
+
+    def _ensure_room(self, mask, n=1) -> np.ndarray:
+        """``kv.ensure_decode_room`` with preempt-on-exhaustion.
+
+        Reservation-mode pools never raise here (admission reserved the
+        lifetime worst case); under over-commit a full pool surfaces
+        :class:`PagePoolExhausted` and a victim is preempted — possibly
+        one of the masked rows itself, whose bit is cleared.  Returns
+        the (possibly narrowed) mask to decode with."""
+        mask = np.asarray(mask, bool).copy()
+        if not self.paged:
+            return mask
+        while True:
+            try:
+                self.kv.ensure_decode_room(mask, n)
+                return mask
+            except PagePoolExhausted as e:
+                victim = self._pick_victim(
+                    shard=self._slot_shard(e.slot)
+                    if e.slot is not None else None)
+                if victim is None:
+                    raise
+                vslot = victim.slot
+                self._preempt(victim)
+                if mask[vslot]:
+                    mask[vslot] = False
+
+    # -- cancel ------------------------------------------------------------
+    def cancel(self, rid: int) -> bool:
+        """Abort a request mid-flight: drop it from the queue, or tear
+        down its slot (pages, draft state, sampling rows) if seated.
+        Slots with an un-consumed dispatch defer to consume time
+        (``cancel_requested``).  Returns ``True`` if the rid was live."""
+        for r in list(self.queue):
+            if r.rid == rid:
+                self.queue.remove(r)
+                self._finalize_cancel(r)
+                return True
+        for b, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                if r.cancel_requested:
+                    return True
+                if b in self._in_flight_slots():
+                    r.cancel_requested = True
+                    return True
+                self._free_slot_state(r)
+                self._finalize_cancel(r)
+                return True
+        return False
+
+    def _finalize_cancel(self, req: Request) -> None:
+        transition(req, CANCELLED)
+        req.cancel_requested = False
+        self.cancelled += 1
+        self.cancelled_reqs.append(req)
+        tr = self.tel.tracer
+        if tr.enabled:
+            tr.instant("req.cancelled", "request", TID_REQUEST,
+                       {"rid": req.rid, "tokens": len(req.out)})
+            tr.async_end("request", req.rid)

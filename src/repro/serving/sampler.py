@@ -48,11 +48,19 @@ def top_k(logits: jax.Array, rng: jax.Array, k: int = 40, temp: float = 0.8):
 
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
-    """Per-request decoding policy. Defaults reproduce greedy decoding."""
+    """Per-request decoding policy. Defaults reproduce greedy decoding.
+
+    ``priority`` and ``deadline_s`` feed admission, not sampling: higher
+    priority admits (and preempts) first, and an absolute monotonic
+    deadline orders the queue within a priority class.  The defaults
+    (priority 0, no deadline) reproduce exact FIFO admission.
+    """
 
     temperature: float = 0.0  # <= 0 -> greedy
     top_k: int = 0  # <= 0 -> no top-k filter
     top_p: float = 1.0  # >= 1 -> no nucleus filter
+    priority: int = 0  # higher admits first, preempts lower
+    deadline_s: float | None = None  # absolute time.monotonic() SLO
 
 
 GREEDY = SamplingParams()

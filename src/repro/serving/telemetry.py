@@ -66,9 +66,11 @@ Span taxonomy (``cat`` / ``name``):
                   name (e.g. ``decode.w0.        kind (stage/fetch)
                   logits``), cat suffixed
                   ``.hidden`` / ``.exposed``
-  request         request (async b/e, id=rid);   rid, slot, shared_tokens
-                  req.queued / req.admitted /
-                  req.first_token / req.done
+  request         request (async b/e, id=rid);   rid, slot, shared_tokens;
+                  req.queued / req.admitted /    preempt/restore mode,
+                  req.first_token / req.done /   migration from/to shard
+                  req.preempted / req.restored /  and bytes
+                  req.migrated / req.cancelled
                   instants
   ==============  =============================  =========================
 """
@@ -657,6 +659,10 @@ STATS_KEYS_ENGINE = frozenset({
     "decode_modeled_s", "decode_measured_s",
     "prefill_modeled_s", "prefill_measured_s",
     "mdk_mp_reuse",
+    # request lifecycle (serving/lifecycle.py): preemption/restore/
+    # cancel counters and the evicted-bytes footprint
+    "preemptions", "preempt_host", "preempt_recompute", "restores",
+    "cancelled", "evicted_bytes_total", "evicted_bytes_p99",
     # paged-KV pool (SlotCacheManager engines report the slot analogue
     # instead: slots_in_use / slots_in_use_peak / n_free_slots)
     "pages_in_use", "pages_in_use_peak", "pages_allocated_total",
@@ -679,6 +685,8 @@ STATS_KEYS_DISTRIBUTED = (
     STATS_KEYS_ENGINE - {"tokens_per_model_call"}) | frozenset({
     "n_shards", "decode_waves", "mean_device_utilization",
     "wave_occupancy_mean", "wave_occupancy_p50", "wave_imbalance",
+    # live cross-shard migration (DistributedServeEngine.migrate)
+    "migrations", "migrated_bytes_total",
     "transfers", "transfers_hidden", "transfers_exposed",
     "transfer_bytes", "transfer_bytes_hidden", "transfer_bytes_exposed",
     "max_transfer_bytes", "overlap_ratio", "byte_overlap_ratio",

@@ -1,0 +1,329 @@
+"""Request-lifecycle core: the state machine's legality table, the
+priority/SLO admission ordering, the preemption victim policy, wave-aware
+admission, over-commit pricing, preempt->resume bit-exactness on the
+single-node engine, and cancel-under-churn refcount drain.  (The
+distributed-engine halves of the same guarantees live in
+``tests/subscripts/dist_serve_check.py`` sections 6-7.)"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving.admission import (DecodeWaveScheduler, FIFOAdmission,
+                                     OvercommitAdmission, victim_order)
+from repro.serving.engine import ServeEngine
+from repro.serving.lifecycle import (CANCELLED, DECODE, DONE,
+                                     LEGAL_TRANSITIONS, MIGRATING,
+                                     PREEMPTED_HOST, PREEMPTED_RECOMPUTE,
+                                     PREFILL, QUEUED, TERMINAL,
+                                     IllegalTransition, Request,
+                                     admission_key, transition)
+from repro.serving.sampler import SamplingParams
+from repro.serving.speculative import SpecConfig
+
+ALL_STATES = [QUEUED, PREFILL, DECODE, PREEMPTED_HOST,
+              PREEMPTED_RECOMPUTE, MIGRATING, DONE, CANCELLED]
+
+
+@pytest.fixture(scope="module")
+def gpt2_setup():
+    cfg = get_config("gpt2-345m").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=64)
+    return cfg, params
+
+
+def _mixed_prompts(vocab, lengths=(3, 17, 26, 40, 5), seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(1, vocab, int(n))) for n in lengths]
+
+
+# ---------------------------------------------------------------------------
+# state machine: every pair checked against the legality table
+# ---------------------------------------------------------------------------
+
+
+def test_transition_table_exhaustive():
+    """Every (current, new) state pair either moves the request or
+    raises ``IllegalTransition`` leaving it untouched — exactly as
+    ``LEGAL_TRANSITIONS`` says, with same-state no-ops everywhere but
+    out of a terminal state."""
+    for cur, new in itertools.product(ALL_STATES, ALL_STATES):
+        req = Request(rid=0, prompt=[1], max_new=1, state=cur)
+        legal = new in LEGAL_TRANSITIONS[cur] or (
+            new == cur and cur not in TERMINAL)
+        if legal:
+            transition(req, new)
+            assert req.state == (new if new != cur else cur)
+        else:
+            with pytest.raises(IllegalTransition):
+                transition(req, new)
+            assert req.state == cur  # failed transitions don't corrupt
+
+
+def test_transition_unknown_state_raises():
+    req = Request(rid=7, prompt=[1], max_new=1, state="limbo")
+    with pytest.raises(IllegalTransition, match="unknown lifecycle"):
+        transition(req, DECODE)
+
+
+def test_terminal_states_are_absorbing():
+    for term in TERMINAL:
+        assert not LEGAL_TRANSITIONS[term]
+        req = Request(rid=1, prompt=[1], max_new=1, state=term)
+        with pytest.raises(IllegalTransition):
+            transition(req, term)  # even same-state re-entry
+
+
+# ---------------------------------------------------------------------------
+# admission ordering: priority desc, resuming-first, deadline, FIFO
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, *, priority=0, deadline=None, state=QUEUED):
+    return Request(rid=rid, prompt=[1], max_new=4, state=state,
+                   sampling=SamplingParams(priority=priority,
+                                           deadline_s=deadline))
+
+
+def test_admission_key_defaults_reduce_to_fifo():
+    reqs = [_req(rid) for rid in (5, 2, 9, 0)]
+    got = sorted(reqs, key=admission_key)
+    assert [r.rid for r in got] == [0, 2, 5, 9]
+
+
+def test_admission_key_full_ordering():
+    hi = _req(10, priority=5)
+    resuming = _req(11, state=PREEMPTED_HOST)
+    deadline = _req(12, deadline=1.0)
+    fresh = _req(3)
+    got = sorted([fresh, deadline, resuming, hi], key=admission_key)
+    # priority beats everything; a resuming request re-enters ahead of
+    # same-priority arrivals; an SLO deadline beats plain FIFO
+    assert [r.rid for r in got] == [10, 11, 12, 3]
+
+
+def test_admission_key_resuming_states():
+    for st in (PREEMPTED_HOST, PREEMPTED_RECOMPUTE, MIGRATING):
+        assert _req(1, state=st).resuming
+    assert not _req(1).resuming
+
+
+# ---------------------------------------------------------------------------
+# victim policy: lowest priority, most pages, newest rid
+# ---------------------------------------------------------------------------
+
+
+def test_victim_order_policy():
+    pages = {1: 3, 2: 5, 3: 5, 4: 1}
+    prio = {1: 1, 2: 0, 3: 0, 4: 0}
+    reqs = [_req(r, priority=prio[r]) for r in (1, 2, 3, 4)]
+    got = victim_order(reqs, lambda r: pages[r.rid])
+    # prio-0 before prio-1; 5 pages before 1; rid 3 (newer) before rid 2
+    assert [r.rid for r in got] == [3, 2, 4, 1]
+    assert [r.rid for r in reqs] == [1, 2, 3, 4]  # input not mutated
+
+
+# ---------------------------------------------------------------------------
+# wave-aware admission
+# ---------------------------------------------------------------------------
+
+
+def test_wave_join_picks_lightest_wave():
+    ws = DecodeWaveScheduler(n_slots=6, n_waves=2)
+    assert ws.join(0) == 0  # empty waves tie -> lowest id
+    assert ws.join(1) == 1  # now wave 1 is lighter
+    assert ws.join(2) == 0
+    assert ws.join(1) == 1  # idempotent for an already-seated slot
+    assert ws.join(3) == 1
+    assert ws.counts() == [2, 2]
+    ws.release(0)
+    assert ws.join(4) == 0  # released seat re-opens the light wave
+
+
+# ---------------------------------------------------------------------------
+# over-commit pricing
+# ---------------------------------------------------------------------------
+
+
+def test_overcommit_watermark_validation():
+    cfg = get_config("gpt2-345m").reduced()
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="watermark"):
+            OvercommitAdmission(cfg, watermark=bad)
+    OvercommitAdmission(cfg, watermark=1.0)  # inclusive upper bound
+
+
+def test_overcommit_prices_prompt_only():
+    cfg = get_config("gpt2-345m").reduced()
+    reserve = FIFOAdmission(cfg, chunk_size=8)
+    oc = OvercommitAdmission(cfg, chunk_size=8)
+    kw = dict(page_size=16, max_seq=64)
+    # reservation prices the whole (capped) lifetime; over-commit only
+    # the prompt footprint — max_new never enters its price
+    assert reserve.page_price(20, 30, **kw) == 4  # ceil(50/16)
+    assert oc.page_price(20, 30, **kw) == 2       # ceil(20/16)
+    assert oc.page_price(20, 1, **kw) == oc.page_price(20, 1000, **kw)
+    # prefix-shared full pages are free under both policies
+    assert oc.page_price(33, 1, shared_tokens=32, **kw) == 1
+
+
+# ---------------------------------------------------------------------------
+# preempt -> resume bit-exactness (single-node engine)
+# ---------------------------------------------------------------------------
+
+
+def _serve(eng, prompts, max_new=8):
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    return {tuple(r.prompt): r.out for r in eng.run()}
+
+
+@pytest.mark.parametrize("kv_layout", ["paged", "stacked"])
+@pytest.mark.parametrize("mode", ["host", "recompute"])
+def test_preempt_resume_bitexact(gpt2_setup, kv_layout, mode):
+    """A request preempted mid-decode (host round trip or recompute
+    requeue) resumes to the token-for-token stream of an uninterrupted
+    run, on both KV layouts."""
+    cfg, params = gpt2_setup
+    prompts = _mixed_prompts(cfg.vocab_size, lengths=(3, 17, 5))
+
+    def build():
+        return ServeEngine(cfg, params, batch_slots=3, max_seq=64,
+                           eos_id=-1, chunk_size=8, kv_layout=kv_layout)
+
+    want = _serve(build(), prompts)
+
+    eng = build()
+    for p in prompts:
+        eng.submit(p, max_new=8)
+    preempted = 0
+    for _ in range(30):
+        eng.tick()
+        victims = [r for r in eng.slots
+                   if r is not None and r.state == DECODE and r.out]
+        if victims:
+            eng._preempt(victims[0], mode)
+            preempted += 1
+            break
+    assert preempted, "no decoding request to preempt — raise the budget"
+    got = {tuple(r.prompt): r.out for r in eng.run()}
+    assert got == want
+    st = eng.stats()
+    assert st["preemptions"] == preempted
+    assert st["restores"] == preempted
+    key = "preempt_host" if mode == "host" else "preempt_recompute"
+    assert st[key] == preempted
+    if mode == "host":
+        assert st["evicted_bytes_total"] > 0
+    if kv_layout == "paged":
+        assert st["pages_in_use"] == 0
+
+
+def test_preempt_resume_bitexact_speculative(gpt2_setup):
+    """Preemption composes with speculative decoding: the victim's draft
+    state is rebuilt on resume and the greedy stream stays identical."""
+    cfg, params = gpt2_setup
+    prompts = _mixed_prompts(cfg.vocab_size, lengths=(3, 17, 5))
+
+    def build():
+        return ServeEngine(cfg, params, batch_slots=3, max_seq=64,
+                           eos_id=-1, chunk_size=8, kv_layout="paged",
+                           spec=SpecConfig(k=3))
+
+    want = _serve(build(), prompts)
+
+    eng = build()
+    for p in prompts:
+        eng.submit(p, max_new=8)
+    preempted = 0
+    for _ in range(30):
+        eng.tick()
+        victims = [r for r in eng.slots
+                   if r is not None and r.state == DECODE and r.out]
+        if victims:
+            eng._preempt(victims[0], "host")
+            preempted += 1
+            break
+    assert preempted
+    got = {tuple(r.prompt): r.out for r in eng.run()}
+    assert got == want
+    assert eng.stats()["restores"] == preempted
+
+
+# ---------------------------------------------------------------------------
+# over-commit admits what reservation pricing refuses
+# ---------------------------------------------------------------------------
+
+
+def test_overcommit_completes_where_reservation_refuses(gpt2_setup):
+    """A pool too small for the worst-case lifetime reservation: the
+    reservation engine raises never-fits at admission, while the
+    over-commit engine admits on prompt pages, preempts when the pool
+    runs dry mid-decode, and still finishes the full bit-exact stream.
+
+    Sizing is the crux: 10 prompt + 39 new tokens *prices* 49 tokens =
+    4 pages (the reserved ceiling counts the final token, which is
+    emitted but never written), yet the cache only ever holds
+    ``10 + 39 - 1 = 48`` positions = 3 pages — so each request is
+    refused by reservation pricing on a 4-page pool (3 usable) but is
+    genuinely completable under over-commit."""
+    cfg, params = gpt2_setup
+    prompts = _mixed_prompts(cfg.vocab_size, lengths=(10, 10, 10),
+                             seed=21)
+    want = _serve(ServeEngine(cfg, params, batch_slots=3, max_seq=64,
+                              eos_id=-1, chunk_size=8, kv_layout="paged",
+                              page_size=16, n_pages=64),
+                  prompts, max_new=39)
+
+    reserve = ServeEngine(cfg, params, batch_slots=3, max_seq=64,
+                          eos_id=-1, chunk_size=8, kv_layout="paged",
+                          page_size=16, n_pages=4)
+    reserve.submit(prompts[0], max_new=39)
+    with pytest.raises(ValueError, match="can never be admitted"):
+        reserve.run()
+
+    oc = ServeEngine(cfg, params, batch_slots=3, max_seq=64, eos_id=-1,
+                     chunk_size=8, kv_layout="paged", page_size=16,
+                     n_pages=4, prefix_sharing=False,
+                     admission=OvercommitAdmission(cfg, chunk_size=8))
+    got = _serve(oc, prompts, max_new=39)
+    assert got == want
+    st = oc.stats()
+    assert st["preemptions"] >= 1
+    assert st["pages_in_use"] == 0
+
+
+# ---------------------------------------------------------------------------
+# cancel under churn: refcounts drain to zero
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_under_churn_refcounts_drain(gpt2_setup):
+    """Cancelling queued and seated requests mid-run releases every page
+    (shared prefix pages included) — the pool refcount drains to zero
+    and survivors finish untouched."""
+    cfg, params = gpt2_setup
+    base = _mixed_prompts(cfg.vocab_size, lengths=(16, 16), seed=4)
+    # shared prefixes exercise refcounted page release on cancel
+    prompts = [base[0], base[0] + [7, 8, 9], base[1], base[1] + [1, 2]]
+    eng = ServeEngine(cfg, params, batch_slots=2, max_seq=64, eos_id=-1,
+                      chunk_size=8, kv_layout="paged", page_size=16)
+    rids = [eng.submit(p, max_new=6) for p in prompts]
+    assert eng.cancel(rids[3])          # still queued
+    for _ in range(3):
+        eng.tick()
+    seated = [r for r in eng.slots if r is not None]
+    assert seated and eng.cancel(seated[0].rid)
+    assert seated[0].state == CANCELLED
+    assert not eng.cancel(rids[3])      # already gone
+    assert not eng.cancel(999)          # never existed
+    done = eng.run()
+    st = eng.stats()
+    assert st["cancelled"] == 2
+    assert len(done) == 2
+    assert st["pages_in_use"] == 0
+    assert {r.state for r in eng.cancelled_reqs} == {CANCELLED}
+    assert all(r.state == DONE for r in done)
