@@ -68,6 +68,26 @@ def rows() -> List[Tuple[str, float, str]]:
     out.append((f"kernel/paged_verify_b{B}c{C}h{H}pg{n_pg}",
                 _time(f, qv, kp, vp, base, bt), "jnp-path CPU"))
 
+    # Ancestor-masked paged verify — same pages, but the chunk is a
+    # token *tree*: row j attends the prefix plus exactly its root path
+    # (per-row (C, C) bitmask in place of the implicit causal mask)
+    from repro.serving.speculative import TokenTree
+    C = 8
+    anc_rows = []
+    for b in range(B):
+        t = TokenTree()
+        for j in range(C - 1):
+            t.add(int(rng.integers(0, 1000)),
+                  int(rng.integers(0, j + 1)))
+        anc_rows.append(t.ancestor_mask(C))
+    anc = jnp.asarray(np.stack(anc_rows))
+    qt = jnp.asarray(rng.normal(size=(B, C, H, D)), jnp.float32)
+    baset = jnp.asarray(rng.integers(0, n_pg * ps - C + 1, (B,)), jnp.int32)
+    f = jax.jit(lambda q, kp, vp, b, t, a: ops.paged_verify(
+        q, kp, vp, b, t, anc=a, backend="jnp"))
+    out.append((f"kernel/paged_verify_tree_b{B}c{C}h{H}pg{n_pg}",
+                _time(f, qt, kp, vp, baset, bt, anc), "jnp-path CPU"))
+
     # Fused LN&Res
     x = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
     r = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)

@@ -106,6 +106,7 @@ import time
 sys.path.insert(0, "src")
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -334,6 +335,128 @@ def run_spec_part(args) -> None:
           f" -> {rows['spec']['s']['model_calls']:.0f} "
           f"({rows['plain']['s']['model_calls'] / rows['spec']['s']['model_calls']:.2f}x)")
     print("SERVING_BENCH_SPEC_OK")
+
+
+def run_tree_spec_part(args) -> None:
+    """Part "spec --tree": token-tree drafting vs the linear chain at
+    equal verify width.
+
+    The draft model is the target plus parameter noise: top-1 agreement
+    collapses (so linear chains die young) while the target's argmax
+    usually survives inside the draft's top-``b`` — exactly the branchy
+    low-acceptance regime tree drafting exploits, since sibling
+    candidates recover what the chain threw away.  Every engine verifies
+    ``k+1``-wide chunks, so the tree's tokens/model-call gain is a pure
+    width-for-depth reallocation of the same verify compute; the tree
+    also spends only ``ceil(k/branch)`` draft forwards per tick where
+    the chain spends ``k``, which compounds into the tokens-per-total-
+    call (target + draft forwards) gain.  Writes a
+    ``BENCH_tree_spec.json`` artifact.
+
+    All four streams must stay bit-identical: beyond the usual greedy
+    gate this doubles as a regression net for the async-dispatch race
+    this workload once exposed (accepted-path compaction reading the
+    paged block tables while rewind nulled freed entries in place).
+    """
+    import os
+
+    from repro.serving.speculative import SpecConfig
+
+    cfg = get_config("gpt2-345m").reduced()
+    max_seq = max(args.max_seq, 192)
+    params = lm.init(cfg, jax.random.PRNGKey(0), max_seq=max_seq)
+    rng = np.random.default_rng(args.seed)
+    prompts = build_workload(rng, 8, cfg.vocab_size)
+    k, branch, max_new, sigma = 8, 8, 48, 0.25
+
+    # noisy draft: same architecture, each tensor jittered by sigma of
+    # its own scale — enough noise that chains break within a step or
+    # two, little enough that the truth stays in the draft's top-b
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(11), len(leaves))
+    draft_params = jax.tree_util.tree_unflatten(treedef, [
+        x + sigma * jnp.std(x) * jax.random.normal(kk, x.shape, x.dtype)
+        for x, kk in zip(leaves, keys)])
+
+    print(f"\ntree-speculation workload: {len(prompts)} mixed prompts, "
+          f"{max_new} new tokens each, k={k} (verify width {k + 1}), "
+          f"draft = target + {sigma:.2f}*std parameter noise")
+
+    def drive(spec):
+        eng = ServeEngine(cfg, params, batch_slots=4, max_seq=max_seq,
+                          eos_id=-1, chunk_size=args.chunk, spec=spec)
+        for p in prompts:
+            eng.submit(list(p), max_new=max_new)
+        t0 = time.time()
+        eng.run(max_ticks=50_000)
+        s = eng.stats()
+        s["wall_s"] = time.time() - t0
+        emitted = s["tokens_per_model_call"] * s["model_calls"]
+        s["tokens_per_total_call"] = emitted / max(
+            s["model_calls"] + s.get("draft_calls", 0), 1)
+        return {"outs": {r.rid: r.out for r in eng.finished}, "s": s}
+
+    mk = dict(proposer="model", draft_cfg=cfg, draft_params=draft_params)
+    rows = {
+        "plain": drive(None),
+        "chain": drive(SpecConfig(k=k, **mk)),
+        "tree-deep": drive(SpecConfig(k=k, tree=True, branch=3, **mk)),
+        "tree-wide": drive(SpecConfig(k=k, tree=True, branch=branch,
+                                      **mk)),
+    }
+    print(f"\n{'engine':10s} {'calls':>6s} {'draft':>6s} {'accept':>7s} "
+          f"{'tok/call':>9s} {'tok/total':>10s}")
+    for name, r in rows.items():
+        s = r["s"]
+        print(f"{name:10s} {s['model_calls']:6.0f} "
+              f"{s.get('draft_calls', 0):6.0f} "
+              f"{s.get('acceptance_rate', float('nan')):7.2f} "
+              f"{s['tokens_per_model_call']:9.2f} "
+              f"{s['tokens_per_total_call']:10.2f}")
+
+    outs = {n: r["outs"] for n, r in rows.items()}
+    assert (outs["chain"] == outs["plain"] == outs["tree-deep"]
+            == outs["tree-wide"]), (
+        "tree speculation changed the greedy stream")
+    ratio = (rows["tree-wide"]["s"]["tokens_per_model_call"]
+             / rows["chain"]["s"]["tokens_per_model_call"])
+    ratio_total = (rows["tree-wide"]["s"]["tokens_per_total_call"]
+                   / rows["chain"]["s"]["tokens_per_total_call"])
+    print(f"\ntree vs chain at verify width {k + 1}: {ratio:.3f}x "
+          f"tokens/model-call, {ratio_total:.2f}x tokens/total-call "
+          f"(draft forwards {rows['tree-wide']['s']['draft_calls']:.0f} "
+          f"vs {rows['chain']['s']['draft_calls']:.0f})")
+    assert ratio >= 1.15, (
+        "tree drafting must emit >= 1.15x tokens per target model call "
+        f"over the linear chain at equal verify width (got {ratio:.3f})")
+    assert ratio_total >= 1.5, (
+        "tree drafting's ceil(k/branch) draft forwards must beat the "
+        f"chain's k on total-call economics (got {ratio_total:.2f})")
+    assert (rows["tree-wide"]["s"]["draft_calls"]
+            < rows["chain"]["s"]["draft_calls"]), (
+        "the wide tree must spend fewer draft forwards than the chain")
+
+    out_path = write_bench_artifact(
+        os.path.abspath("BENCH_tree_spec.json"),
+        bench="serving_tree_spec",
+        config={
+            "model": cfg.name, "slots": 4, "chunk": args.chunk,
+            "max_seq": max_seq, "seed": args.seed, "k": k,
+            "branch": branch, "max_new": max_new, "requests": len(prompts),
+            "draft_noise_sigma": sigma, "proposer": "model",
+        },
+        metrics={
+            **{n: _finite_scalars(r["s"]) for n, r in rows.items()},
+            "tree_vs_chain_tokens_per_model_call": ratio,
+            "tree_vs_chain_tokens_per_total_call": ratio_total,
+        },
+        gates={
+            "tree_vs_chain_tokens_per_model_call_min": 1.15,
+            "tree_vs_chain_tokens_per_total_call_min": 1.5,
+            "greedy_streams_bit_identical": True,
+        })
+    print(f"wrote {out_path}")
+    print("SERVING_BENCH_TREE_SPEC_OK")
 
 
 def run_preempt_part(args) -> None:
@@ -713,6 +836,51 @@ def run_distributed_part(args) -> None:
         if isinstance(s[k], (int, float)) and np.isfinite(s[k])
     }
     metrics["tok_per_s"] = toks / max(wall, 1e-9)
+    # -- optional wave-count sweep: per-wave batch size vs overlap ------
+    # more waves means smaller per-wave dispatches (B/n_waves rows) but
+    # more chances to shadow a transfer behind another wave's compute;
+    # the sweep quantifies that trade without changing any stream
+    extra_sweep = {}
+    if getattr(args, "waves", 0) >= 2:
+        sweep_ns = [w for w in (2, 3, 4) if w <= args.waves]
+        print(f"\nwave sweep: decode_waves in {sweep_ns}")
+        print(f"{'waves':>5s} {'rows/dispatch':>14s} {'imbalance':>10s} "
+              f"{'overlap':>8s} {'drain':>6s} {'tok/s':>8s}")
+        for w in sweep_ns:
+            weng = DistributedServeEngine(
+                cfg, params, n_shards=n_shards, slots_per_shard=1,
+                max_seq=args.max_seq, eos_id=-1, chunk_size=args.chunk,
+                page_size=args.page_size, spec=spec, decode_waves=w)
+            weng.submit(list(range(1, args.chunk + 2)), max_new=2)
+            weng.run()
+            wwarm = len(weng.finished)
+            weng.reset_counters()
+            for p in prompts:
+                weng.submit(p, max_new=args.max_new)
+            wt0 = time.time()
+            weng.run()
+            wwall = time.time() - wt0
+            wdone = weng.finished[wwarm:]
+            ws = weng.stats()
+            wtoks = sum(len(r.out) for r in wdone)
+            row = {
+                "wave_occupancy_mean": ws["wave_occupancy_mean"],
+                "wave_imbalance": ws["wave_imbalance"],
+                "overlap_ratio": ws["overlap_ratio"],
+                "overlap_ratio_drain": ws.get("overlap_ratio_drain", 1.0),
+                "byte_overlap_ratio": ws["byte_overlap_ratio"],
+                "tok_per_s": wtoks / max(wwall, 1e-9),
+            }
+            extra_sweep[f"waves{w}"] = row
+            print(f"{w:5d} {row['wave_occupancy_mean']:14.2f} "
+                  f"{row['wave_imbalance']:10.2f} "
+                  f"{row['overlap_ratio']:8.2f} "
+                  f"{row['overlap_ratio_drain']:6.2f} "
+                  f"{row['tok_per_s']:8.1f}")
+            assert {tuple(r.prompt): r.out for r in wdone} == outs, (
+                f"decode_waves={w} changed the generated stream")
+        metrics["waves_sweep"] = extra_sweep
+
     out_path = write_bench_artifact(
         os.path.abspath(f"BENCH_dist{'_spec' if args.spec else ''}.json"),
         bench="serving_dist",
@@ -777,6 +945,8 @@ def spawn_distributed_part(args) -> None:
            "--spec-k", str(args.spec_k)]
     if args.spec:
         cmd.append("--spec")
+    if getattr(args, "waves", 0):
+        cmd += ["--waves", str(args.waves)]
     proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
                           timeout=900)
     print(proc.stdout, end="")
@@ -800,6 +970,14 @@ def main() -> None:
                     help="run --part dist with speculative decoding on "
                     "both engines (distributed spec must match "
                     "single-device spec token-for-token)")
+    ap.add_argument("--tree", action="store_true",
+                    help="run --part spec as the token-tree gate: "
+                    "branchy drafting vs the linear chain at equal "
+                    "verify width (writes BENCH_tree_spec.json)")
+    ap.add_argument("--waves", type=int, default=0,
+                    help="with --part dist: also sweep decode_waves "
+                    "over 2..N, reporting per-wave batch size vs "
+                    "transfer overlap (folded into the BENCH artifact)")
     ap.add_argument("--part",
                     choices=("all", "core", "dist", "spec", "hybrid",
                              "preempt"),
@@ -813,7 +991,7 @@ def main() -> None:
             spawn_distributed_part(args)
         return
     if args.part == "spec":
-        run_spec_part(args)
+        (run_tree_spec_part if args.tree else run_spec_part)(args)
         return
     if args.part == "hybrid":
         run_hybrid_part(args)

@@ -161,6 +161,7 @@ def paged_verify(
     block_table,
     *,
     window: int = 0,
+    anc=None,
     backend: str = "auto",
 ):
     """Chunked causal attention over a paged KV cache (verify/prefill).
@@ -171,16 +172,25 @@ def paged_verify(
     chunk's own K/V (the in-place write).  The Pallas path streams only
     the live pages through the scalar-prefetch index map; the jnp oracle
     gathers a contiguous view first and is the semantic ground truth.
+
+    ``anc`` (``(B, C, C)`` bool/int) replaces the implicit causal
+    in-chunk mask with a token tree's ancestor bitmask: position ``i``
+    attends the committed prefix plus exactly the chunk positions its
+    row of ``anc`` names.  Mutually exclusive with ``window``; a causal
+    lower-triangular ``anc`` is bit-identical to the linear mask.
     """
+    if anc is not None and window:
+        raise ValueError("window and anc are mutually exclusive")
     if not _use_pallas(backend):
         return ref.paged_verify_ref(
-            q, k_pages, v_pages, base, block_table, window=window)
+            q, k_pages, v_pages, base, block_table, window=window, anc=anc)
     return _paged_verify_pallas(
         q,
         k_pages,
         v_pages,
         base,
         block_table,
+        anc,
         window=window,
         interpret=(backend == "interpret"),
     )

@@ -98,6 +98,77 @@ def _paged_verify_kernel(
         o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)[None, :, None]
 
 
+def _paged_verify_tree_kernel(
+    bt_ref,  # (B, n_pg) i32 scalar-prefetch (consumed by index maps)
+    base_ref,  # (B, 1) i32 scalar-prefetch — per-row first query position
+    q_ref,  # (1, C, 1, D)
+    k_ref,  # (1, 1, ps, D) — the page named by bt[b, s]
+    v_ref,  # (1, 1, ps, D)
+    anc_ref,  # (1, C, C) i32 — per-row ancestor bitmask over chunk positions
+    o_ref,  # (1, C, 1, D)
+    acc_ref,  # (C, D) f32 scratch
+    m_ref,  # (C, 1) f32 scratch
+    l_ref,  # (C, 1) f32 scratch
+    *,
+    n_pg: int,
+    ps: int,
+):
+    """Ancestor-masked variant: query ``i`` attends the committed prefix
+    (``pos < base``) plus exactly the in-chunk positions ``j`` with
+    ``anc[i, j]`` set — its root path through the token tree.  The
+    in-chunk bits are resolved with a one-hot matmul (MXU) instead of a
+    per-key gather: ``onehot[j, key] = (key's chunk-relative position
+    == j)``, so ``anc @ onehot`` lands each query row's ancestor bits on
+    this page's keys."""
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    c, d = q_ref.shape[1], q_ref.shape[3]
+    q = q_ref[0, :, 0].astype(jnp.float32)  # (C, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (ps, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (ps, D)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (1.0 / (d**0.5))  # (C, ps)
+
+    base = base_ref[b, 0]
+    pos = s * ps + jax.lax.broadcasted_iota(jnp.int32, (c, ps), 1)
+    rel = pos - base  # key's chunk-relative position (rows identical)
+    jrow = jax.lax.broadcasted_iota(jnp.int32, (c, ps), 0)
+    onehot = (rel == jrow).astype(jnp.float32)  # (C, ps)
+    anc = anc_ref[0].astype(jnp.float32)  # (C, C)
+    in_chunk = jax.lax.dot_general(
+        anc, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) > 0.5  # (C, ps)
+    valid = jnp.logical_or(pos < base, in_chunk)
+    scores = jnp.where(valid, scores, _NEG_INF)
+
+    m_prev = m_ref[...]  # (C, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)  # (C, 1)
+    p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # (C, ps)
+
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_pg - 1)
+    def _final():
+        l = l_ref[...]  # (C, 1)
+        denom = jnp.where(l > 0.0, l, 1.0)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)[None, :, None]
+
+
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_verify(
     q: jax.Array,  # (B, C, H, D)
@@ -105,6 +176,7 @@ def paged_verify(
     v_pages: jax.Array,  # (P, Hkv, ps, D)
     base: jax.Array,  # (B,) i32 — first query position per row
     block_table: jax.Array,  # (B, n_pg) i32 page ids
+    anc: jax.Array | None = None,  # (B, C, C) ancestor bitmask (tree mode)
     *,
     window: int = 0,
     interpret: bool = False,
@@ -113,22 +185,32 @@ def paged_verify(
     _, Hkv, ps, _ = k_pages.shape
     n_pg = block_table.shape[1]
     assert H % Hkv == 0, (q.shape, k_pages.shape)
+    if anc is not None and window:
+        raise ValueError("window and anc are mutually exclusive")
     group = H // Hkv
     grid = (B, H, n_pg)
+    in_specs = [
+        pl.BlockSpec((1, C, 1, D), lambda b, h, s, bt, bs: (b, 0, h, 0)),
+        pl.BlockSpec(
+            (1, 1, ps, D),
+            lambda b, h, s, bt, bs: (bt[b, s], h // group, 0, 0),
+        ),
+        pl.BlockSpec(
+            (1, 1, ps, D),
+            lambda b, h, s, bt, bs: (bt[b, s], h // group, 0, 0),
+        ),
+    ]
+    if anc is not None:
+        in_specs.append(
+            pl.BlockSpec((1, C, C), lambda b, h, s, bt, bs: (b, 0, 0)))
+        body = functools.partial(_paged_verify_tree_kernel, n_pg=n_pg, ps=ps)
+    else:
+        body = functools.partial(
+            _paged_verify_kernel, n_pg=n_pg, ps=ps, window=window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # block table + bases feed the index maps
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, C, 1, D), lambda b, h, s, bt, bs: (b, 0, h, 0)),
-            pl.BlockSpec(
-                (1, 1, ps, D),
-                lambda b, h, s, bt, bs: (bt[b, s], h // group, 0, 0),
-            ),
-            pl.BlockSpec(
-                (1, 1, ps, D),
-                lambda b, h, s, bt, bs: (bt[b, s], h // group, 0, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, C, 1, D), lambda b, h, s, bt, bs: (b, 0, h, 0)),
         scratch_shapes=[
@@ -137,19 +219,21 @@ def paged_verify(
             pltpu.VMEM((C, 1), jnp.float32),
         ],
     )
+    operands = [
+        block_table.astype(jnp.int32),
+        base.reshape(B, 1).astype(jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    ]
+    if anc is not None:
+        operands.append(anc.astype(jnp.int32))
     return pl.pallas_call(
-        functools.partial(
-            _paged_verify_kernel, n_pg=n_pg, ps=ps, window=window),
+        body,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, C, H, D), q.dtype),
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(
-        block_table.astype(jnp.int32),
-        base.reshape(B, 1).astype(jnp.int32),
-        q,
-        k_pages,
-        v_pages,
-    )
+    )(*operands)

@@ -132,6 +132,7 @@ def paged_verify_ref(
     base: jax.Array,  # (B,) i32 — row's first query position (its length)
     block_table: jax.Array,  # (B, n_pg) i32
     window: int = 0,
+    anc: jax.Array | None = None,  # (B, C, C) ancestor bitmask (tree mode)
 ) -> jax.Array:
     """Chunked causal attention over a paged KV cache.
 
@@ -144,6 +145,13 @@ def paged_verify_ref(
     caller never reads their output; a row the window leaves with no
     valid key at all yields the zero vector (NaN-free), mirroring the
     kernel's zero-denominator clamp.
+
+    With ``anc`` the implicit causal in-chunk mask is replaced by a token
+    tree's ancestor bitmask: query position ``i`` attends every cached
+    position ``< base[b]`` (the committed prefix) plus exactly the chunk
+    positions ``j`` with ``anc[b, i, j]`` — its own root path.  A causal
+    (lower-triangular) ``anc`` reproduces the linear mask bit-exactly.
+    ``window`` and ``anc`` are mutually exclusive.
     """
     B, C, H, D = q.shape
     Hkv = k_pages.shape[1]
@@ -158,9 +166,22 @@ def paged_verify_ref(
     ) / jnp.sqrt(float(D))  # (B, Hkv, g, C, S)
     pos = jnp.arange(S)[None, None, None, None, :]
     qpos = (base[:, None] + jnp.arange(C)[None, :])[:, None, None, :, None]
-    valid = pos <= qpos
-    if window:
-        valid = valid & (pos > qpos - window)
+    if anc is not None:
+        if window:
+            raise ValueError("window and anc are mutually exclusive")
+        rel = jnp.arange(S)[None, :] - base[:, None]  # (B, S) chunk-relative
+        in_chunk = (rel >= 0) & (rel < C)
+        bits = jnp.take_along_axis(
+            anc.astype(bool),
+            jnp.clip(rel, 0, C - 1)[:, None, :],
+            axis=2,
+        )  # (B, C, S)
+        prefix = (jnp.arange(S)[None, :] < base[:, None])[:, None, :]
+        valid = (prefix | (in_chunk[:, None, :] & bits))[:, None, None, :, :]
+    else:
+        valid = pos <= qpos
+        if window:
+            valid = valid & (pos > qpos - window)
     scores = jnp.where(valid, scores, -jnp.inf)
     p = jax.nn.softmax(scores, axis=-1)
     p = jnp.where(valid.any(axis=-1, keepdims=True), p, 0.0)

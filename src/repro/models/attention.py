@@ -96,6 +96,8 @@ def chunk_attention(
     v_cache: jax.Array,
     positions: jax.Array,  # (B, C) absolute positions of the chunk tokens
     *,
+    anc: Optional[jax.Array] = None,  # (B, C, C) tree ancestor bitmask
+    rope_positions: Optional[jax.Array] = None,  # (B, C) logical positions
     name: str = "",
 ):
     """Multi-token cached attention for chunked prefill.
@@ -108,12 +110,24 @@ def chunk_attention(
     per-row: prefill passes one broadcast row, speculative verification
     passes each slot's own offset.  Returns (out (B,C,D), k_cache,
     v_cache).
+
+    Tree verification (``anc``): the in-chunk causal mask is replaced by
+    the token tree's ancestor bitmask — position ``i`` attends every key
+    below the chunk base plus exactly the chunk positions ``anc[b, i]``
+    names (its root path).  ``rope_positions`` then carries each node's
+    *logical* position (``base + depth``) for the rotary phase, while
+    ``positions`` keeps the flat chunk slot the K/V scatter targets — so
+    a node's K/V depend only on its root path and survive the accepted
+    path's later compaction to contiguous offsets.  A causal
+    (lower-triangular) ``anc`` with ``rope_positions == positions``
+    reduces bit-exactly to the linear mask.
     """
     B, C = x.shape[:2]
     q, k, v = _project_qkv(p, cfg, x, name)  # (B,C,H,hd) / (B,C,Hkv,hd)
     if cfg.pos == "rope":
-        q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
+        rpos = positions if rope_positions is None else rope_positions
+        q = rope(q, rpos, cfg.rope_theta)
+        k = rope(k, rpos, cfg.rope_theta)
     # per-row per-position scatter with mode="drop": positions past the
     # cache end — the last prefill chunk's fixed-size window hanging past
     # max_seq, or a verify row flagged inactive by an out-of-range offset
@@ -132,7 +146,17 @@ def chunk_attention(
         preferred_element_type=jnp.float32,
     ) / (cfg.head_dim**0.5)
     key_pos = jnp.arange(S)[None, None, None, None, :]
-    mask = key_pos <= positions[:, None, None, :, None]
+    if anc is not None:
+        base = positions[:, :1]  # (B, 1)
+        rel = jnp.arange(S)[None] - base  # (B, S) chunk-relative key pos
+        in_chunk = (rel >= 0) & (rel < C)
+        bits = jnp.take_along_axis(
+            anc.astype(bool), jnp.clip(rel, 0, C - 1)[:, None, :], axis=2)
+        m = ((jnp.arange(S)[None] < base)[:, None, :]
+             | (in_chunk[:, None, :] & bits))  # (B, C, S)
+        mask = m[:, None, None, :, :]
+    else:
+        mask = key_pos <= positions[:, None, None, :, None]
     scores = jnp.where(mask, scores, _NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum(
@@ -329,6 +353,8 @@ def paged_chunk_attention(
     positions: jax.Array,  # (B, C) absolute positions (contiguous per row)
     block_tables: jax.Array,  # (B, n_pg) i32 page ids per sequence
     *,
+    anc: Optional[jax.Array] = None,  # (B, C, C) tree ancestor bitmask
+    rope_positions: Optional[jax.Array] = None,  # (B, C) logical positions
     name: str = "",
 ):
     """Multi-token cached attention **in place** over a paged KV cache.
@@ -362,8 +388,13 @@ def paged_chunk_attention(
     n_pg = block_tables.shape[1]
     q, k, v = _project_qkv(p, cfg, x, name)  # (B,C,H,hd) / (B,C,Hkv,hd)
     if cfg.pos == "rope":
-        q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
+        # tree verify: rotary phase follows logical (base + depth)
+        # positions; the scatter below keeps the flat chunk slot, so a
+        # node's K/V depend only on its root path and survive the
+        # accepted path's compaction to contiguous offsets
+        rpos = positions if rope_positions is None else rope_positions
+        q = rope(q, rpos, cfg.rope_theta)
+        k = rope(k, rpos, cfg.rope_theta)
     blk = positions // ps  # (B, C)
     page = jnp.where(
         blk < n_pg,
@@ -374,7 +405,7 @@ def paged_chunk_attention(
     k_pages = k_pages.at[page, :, off].set(k.astype(k_pages.dtype))
     v_pages = v_pages.at[page, :, off].set(v.astype(v_pages.dtype))
     out = ops.paged_verify(
-        q, k_pages, v_pages, positions[:, 0], block_tables
+        q, k_pages, v_pages, positions[:, 0], block_tables, anc=anc
     )  # (B, C, H, hd)
     out = out.reshape(B, C, cfg.q_dim)
     return linear(p["out"], out, name + ".out"), k_pages, v_pages

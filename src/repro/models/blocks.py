@@ -239,6 +239,8 @@ def block_apply_chunk(
     positions: jax.Array,  # (B, C) absolute positions
     valids: Optional[jax.Array] = None,  # (B,) real tokens per row (def C)
     block_tables: Optional[jax.Array] = None,  # (B, n_pg) => paged attn
+    anc: Optional[jax.Array] = None,  # (B, C, C) tree ancestor bitmask
+    rope_positions: Optional[jax.Array] = None,  # (B, C) logical positions
     moe_cf: Optional[float] = None,
     name: str = "",
 ) -> Tuple[jax.Array, Dict, Optional[Dict]]:
@@ -273,16 +275,24 @@ def block_apply_chunk(
     B, C = x.shape[:2]
     if valids is None:
         valids = jnp.full((B,), C, jnp.int32)
+    if anc is not None and kind != "attn":
+        # ValueError, not assert (must survive python -O): a ring write
+        # or recurrent state cannot fork across tree branches — the
+        # engines gate tree mode to pure global-attention stacks
+        raise ValueError(
+            f"tree ancestor masks need kind='attn', got {kind!r}")
     traj: Optional[Dict] = None
     h = apply_norm(p["ln1"], x, cfg.norm)
     if kind == "attn":
         if block_tables is not None:
             out, k_c, v_c = attention.paged_chunk_attention(
                 p["attn"], h, cfg, cache["k"], cache["v"], positions,
-                block_tables, name=name + ".attn")
+                block_tables, anc=anc, rope_positions=rope_positions,
+                name=name + ".attn")
         else:
             out, k_c, v_c = attention.chunk_attention(
                 p["attn"], h, cfg, cache["k"], cache["v"], positions,
+                anc=anc, rope_positions=rope_positions,
                 name=name + ".attn")
         new_cache: Dict = {"k": k_c, "v": v_c}
     elif kind == "local_attn":

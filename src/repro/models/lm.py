@@ -640,6 +640,8 @@ def _chunk_body(
     dtype,
     valids: Optional[jax.Array] = None,  # (B,) real tokens per row
     block_tables: Optional[jax.Array] = None,  # (B, n_pg) => paged attn
+    anc: Optional[jax.Array] = None,  # (B, C, C) tree ancestor bitmask
+    logical_positions: Optional[jax.Array] = None,  # (B, C) base + depth
 ) -> Tuple[jax.Array, Dict, Dict]:
     """Shared multi-token cached forward: embed the chunk rows, run every
     layer's :func:`repro.models.blocks.block_apply_chunk` against ``view``,
@@ -652,13 +654,17 @@ def _chunk_body(
     kinds' per-position state trajectories (None entries for attention
     kinds) — :func:`commit_verify`'s input."""
     x = embed(params["embed"], tokens, dtype)  # (B, C, d)
+    # tree verify: the position a node *means* (base + its depth) drives
+    # the learned/rotary position signal, while the flat chunk slot in
+    # ``positions`` keeps driving the K/V scatter and mask base
+    epos = positions if logical_positions is None else logical_positions
     if cfg.pos == "learned":
         # clipped gather (not dynamic_slice, whose clamped start would
         # mis-position every token when the last chunk window passes the
         # table end); padding rows read a clamped embedding and are masked
         P = params["pos_embed"].shape[0]
         x = x + jnp.take(params["pos_embed"],
-                         jnp.clip(positions, 0, P - 1), axis=0).astype(dtype)
+                         jnp.clip(epos, 0, P - 1), axis=0).astype(dtype)
 
     period = _period(cfg)
     n_per = _n_per_from(params)
@@ -670,7 +676,8 @@ def _chunk_body(
             x, c, tr = blocks.block_apply_chunk(
                 layer_p[i], x, layer_c[i], cfg, cfg.block_pattern[i],
                 positions=positions, valids=valids,
-                block_tables=block_tables, moe_cf=moe_cf,
+                block_tables=block_tables, anc=anc,
+                rope_positions=logical_positions, moe_cf=moe_cf,
                 name=f"p{i}")
             new_c.append(c)
             trajs.append(tr)
@@ -689,6 +696,7 @@ def _chunk_body(
         x, c, tr = blocks.block_apply_chunk(
             layer_p, x, view["rest"][j], cfg, cfg.block_kind(li),
             positions=positions, valids=valids, block_tables=block_tables,
+            anc=anc, rope_positions=logical_positions,
             moe_cf=moe_cf, name=f"r{j}")
         new_rest.append(c)
         traj_rest.append(tr)
@@ -777,6 +785,8 @@ def verify_chunk(
     *,
     valids: Optional[jax.Array] = None,  # (B,) real tokens per row (def C)
     block_tables: Optional[jax.Array] = None,  # (B, n_pg) => paged cache
+    anc: Optional[jax.Array] = None,  # (B, C, C) tree ancestor bitmask
+    depths: Optional[jax.Array] = None,  # (B, C) per-position tree depth
     with_traj: bool = False,
     moe_cf: Optional[float] = None,
     dtype=jnp.bfloat16,
@@ -821,6 +831,20 @@ def verify_chunk(
     :func:`commit_verify` selects from after the accept/reject decision —
     the state-rewind seam (K/V rewind stays with the cache managers).
 
+    Tree verification (``anc``/``depths``, from
+    :func:`repro.serving.speculative.tree_arrays`): chunk position ``j``
+    holds a token *tree* node in DFS layout rather than draft token
+    ``j - 1``.  Its K/V still scatter at the flat slot ``lengths[b] + j``
+    and the mask base stays ``lengths[b]``, but it attends only its
+    root path (the ancestor bitmask rides down to the attention mask /
+    paged verify kernel) and its position signal follows its *logical*
+    position ``lengths[b] + depths[b, j]``.  ``logits[b, j]`` is then
+    the next-token distribution after the row's context plus position
+    ``j``'s root path — :func:`repro.serving.sampler.spec_accept_tree`'s
+    input.  Requires a pure global-attention stack; chain-shaped inputs
+    (causal ``anc``, ``depths = arange(C)``) reduce bit-exactly to the
+    linear verify.
+
     Returns (logits (B, C, V) f32, new_cache[, traj]).
     """
     if block_tables is not None:
@@ -828,12 +852,15 @@ def verify_chunk(
     B, C = tokens.shape
     lengths = jnp.asarray(lengths, jnp.int32)
     positions = lengths[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    logical = (None if depths is None
+               else lengths[:, None] + jnp.asarray(depths, jnp.int32))
     # both layouts share the cache as the view: the batch axis of every
     # slot-resident entry IS the slot axis, and paged attn entries are
     # the page pool, addressed per row through block_tables
     x, new_view, traj = _chunk_body(params, cfg, tokens, cache, positions,
                                     moe_cf, dtype, valids=valids,
-                                    block_tables=block_tables)
+                                    block_tables=block_tables, anc=anc,
+                                    logical_positions=logical)
     x = apply_norm(params["final_ln"], x, cfg.norm)
     if cfg.tie_embeddings:
         logits = unembed(params["embed"], x)
@@ -930,6 +957,93 @@ def commit_verify(
                   prev_cache["rest"][jl], new_cache["rest"][jl],
                   traj["rest"][jl], stacked=False)
         for jl in range(len(new_cache["rest"]))]
+    return out
+
+
+def compact_accepted_path(
+    cfg: ModelConfig,
+    cache: Dict,  # post-verify cache (both layouts)
+    src: jax.Array,  # (B, m) i32 — accepted nodes' flat absolute positions
+    dst: jax.Array,  # (B, m) i32 — their contiguous targets (base + depth)
+    *,
+    block_tables: Optional[jax.Array] = None,  # (B, n_pg) => paged layout
+) -> Dict:
+    """Move an accepted tree path's K/V from its flat chunk slots to the
+    contiguous offsets plain decode would have used — the tree half of
+    the rewind seam.
+
+    A tree verify scatters node ``j``'s K/V at ``base + j`` (its DFS
+    chunk slot), but the accepted root-to-leaf path occupies logical
+    positions ``base + 1 .. base + m``: every consumer below the rewound
+    length (decode attention, later verifies, ring-free rewind
+    accounting) assumes contiguous content.  The copy is sound because a
+    node's K/V depend only on its root path and its *logical* position
+    (the ancestor mask plus depth-based position signal in
+    :func:`verify_chunk`) — identical to what a linear verify of exactly
+    that path would have written at ``dst``.
+
+    ``src[b, i] == dst[b, i]`` rows (a chain-shaped acceptance) self-copy
+    harmlessly; entries the caller marks invalid by an out-of-range
+    ``dst`` (``>= max_seq``, or past the row's block table) are dropped.
+    Runs BEFORE the cache manager's ``rewind`` releases pages, while
+    every source slot is still allocated.  Non-``attn`` entries pass
+    through (tree mode is gated to pure global-attention stacks).
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    B = src.shape[0]
+    b_col = jnp.arange(B)[:, None]
+
+    def move_slot(leaf):  # (B, Hkv, S, hd) slot-resident cache
+        S = leaf.shape[2]
+        vals = leaf[b_col, :, jnp.clip(src, 0, S - 1)]  # (B, m, Hkv, hd)
+        return leaf.at[b_col, :, dst].set(vals, mode="drop")
+
+    if block_tables is not None:
+        bt = jnp.asarray(block_tables, jnp.int32)
+        n_pg = bt.shape[1]
+
+        def move_paged(pool):  # (P, Hkv, ps, hd) page pool
+            n_pages, _, ps, _ = pool.shape
+            blk_s = src // ps
+            pg_s = jnp.where(
+                blk_s < n_pg,
+                jnp.take_along_axis(bt, jnp.clip(blk_s, 0, n_pg - 1),
+                                    axis=1),
+                0)
+            vals = pool[pg_s, :, src % ps]  # (B, m, Hkv, hd)
+            blk_d = dst // ps
+            # out-of-range targets resolve PAST the pool (not the shared
+            # null page 0, whose slot another row may legitimately write)
+            pg_d = jnp.where(
+                blk_d < n_pg,
+                jnp.take_along_axis(bt, jnp.clip(blk_d, 0, n_pg - 1),
+                                    axis=1),
+                n_pages)
+            return pool.at[pg_d, :, dst % ps].set(vals, mode="drop")
+
+        move = move_paged
+    else:
+        move = move_slot
+
+    def fix_entry(kind, entry, stacked):
+        if kind != "attn":
+            return entry
+        fn = jax.vmap(move) if stacked else move
+        return jax.tree_util.tree_map(fn, entry)
+
+    period = _period(cfg)
+    n_per = _n_per_from(cache)
+    out = dict(cache)
+    if cache["periods"]:
+        out["periods"] = tuple(
+            fix_entry(cfg.block_pattern[i], cache["periods"][i],
+                      stacked=True)
+            for i in range(len(cache["periods"])))
+    out["rest"] = [
+        fix_entry(cfg.block_kind(n_per * period + jl), cache["rest"][jl],
+                  stacked=False)
+        for jl in range(len(cache["rest"]))]
     return out
 
 
@@ -1095,6 +1209,8 @@ def sharded_verify_chunk(
     *,
     valids: Optional[jax.Array] = None,  # (D, Bs) i32 — real tokens/row
     block_tables: Optional[jax.Array] = None,  # (D, Bs, n_pg) => paged
+    anc: Optional[jax.Array] = None,  # (D, Bs, C, C) tree ancestor masks
+    depths: Optional[jax.Array] = None,  # (D, Bs, C) per-position depths
     with_traj: bool = False,
     axis: str = "shard",
     gather_logits: bool = True,
@@ -1119,12 +1235,15 @@ def sharded_verify_chunk(
 
     paged = block_tables is not None
     has_valids = valids is not None
+    tree = anc is not None
 
-    def body(p, toks, cache, lens, vals, bts):
+    def body(p, toks, cache, lens, vals, bts, ancs, deps):
         out = verify_chunk(
             p, cfg, toks[0], _shard_squeeze(cache), lens[0],
             valids=(vals[0] if has_valids else None),
             block_tables=(bts[0] if paged else None),
+            anc=(ancs[0] if tree else None),
+            depths=(deps[0] if tree else None),
             with_traj=with_traj, dtype=dtype)
         if with_traj:
             logits, new_cache, traj = out
@@ -1149,6 +1268,9 @@ def sharded_verify_chunk(
     if paged:
         in_specs.append(P(axis))
         args.append(block_tables)
+    if tree:
+        in_specs.extend([P(axis), P(axis)])
+        args.extend([anc, depths])
     out_specs = (P() if gather_logits else P(axis), P(axis))
     if with_traj:
         out_specs = out_specs + (P(axis),)
@@ -1159,8 +1281,14 @@ def sharded_verify_chunk(
         if has_valids:
             vals = rest[i]
             i += 1
-        bts = rest[i] if paged else None
-        return body(p, toks, c, lens, vals, bts)
+        bts = None
+        if paged:
+            bts = rest[i]
+            i += 1
+        ancs = deps = None
+        if tree:
+            ancs, deps = rest[i], rest[i + 1]
+        return body(p, toks, c, lens, vals, bts, ancs, deps)
 
     fn = compat.shard_map(wrapper, mesh=mesh, in_specs=tuple(in_specs),
                           out_specs=out_specs)
@@ -1200,6 +1328,40 @@ def sharded_commit_verify(
         body, mesh=mesh,
         in_specs=(P(axis),) * 6, out_specs=P(axis))
     return fn(prev_cache, new_cache, traj, lengths, counts, valids)
+
+
+def sharded_compact_accepted_path(
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    cache: Dict,  # leaves (D, ...) — shard axis leading everywhere
+    src: jax.Array,  # (D, Bs, m) i32 — accepted flat absolute positions
+    dst: jax.Array,  # (D, Bs, m) i32 — contiguous targets (base + depth)
+    *,
+    block_tables: Optional[jax.Array] = None,  # (D, Bs, n_pg) => paged
+    axis: str = "shard",
+):
+    """Per-shard :func:`compact_accepted_path` under ``shard_map``: move
+    each shard's accepted tree paths to contiguous offsets without any
+    K/V leaving its shard.  Rows with every ``dst`` out of range (the
+    other wave, chain-shaped accepts) drop all writes and pass through
+    untouched, so the distributed engine can compact one wave while the
+    other's dispatch is in flight."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import compat
+
+    paged = block_tables is not None
+
+    def body(c, s, d, *rest):
+        bt = rest[0][0] if paged else None
+        return _shard_expand(compact_accepted_path(
+            cfg, _shard_squeeze(c), s[0], d[0], block_tables=bt))
+
+    in_specs = [P(axis)] * 3 + ([P(axis)] if paged else [])
+    args = [cache, src, dst] + ([block_tables] if paged else [])
+    fn = compat.shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                          out_specs=P(axis))
+    return fn(*args)
 
 
 def prefill(

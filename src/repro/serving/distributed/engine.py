@@ -306,6 +306,46 @@ class DistributedServeEngine(LifecycleMixin):
                         p, cfg, mesh, toks, cache, lens,
                         dtype=self.act_dtype))
             self._accept = jax.jit(samplers.spec_accept_batch)
+            if spec.tree:
+                if spec.branch < 1:
+                    raise ValueError(
+                        f"SpecConfig.branch={spec.branch} must be >= 1")
+                if not blocks.page_addressable(cfg):
+                    raise ValueError(
+                        "tree speculation forks K/V across sibling "
+                        "branches, which only absolute-position attn "
+                        "caches support — rings rotate and recurrent "
+                        "states carry, neither can hold two candidate "
+                        "futures at once.  This stack has kinds "
+                        f"{sorted(set(cfg.block_pattern))}; use linear "
+                        "speculation (tree=False) for hybrid stacks")
+                # tree verify threads per-row ancestor bitmasks and
+                # logical (root-path depth) positions through the
+                # sharded chunk call; page_addressable rules out the
+                # StateStore variants
+                if self.paged:
+                    self._verify_tree = jax.jit(
+                        lambda p, toks, cache, lens, bts, anc, dep:
+                        lm.sharded_verify_chunk(
+                            p, cfg, mesh, toks, cache, lens,
+                            block_tables=bts, anc=anc, depths=dep,
+                            dtype=self.act_dtype))
+                    self._compact = jax.jit(
+                        lambda cache, src, dst, bts:
+                        lm.sharded_compact_accepted_path(
+                            cfg, mesh, cache, src, dst,
+                            block_tables=bts))
+                else:
+                    self._verify_tree = jax.jit(
+                        lambda p, toks, cache, lens, anc, dep:
+                        lm.sharded_verify_chunk(
+                            p, cfg, mesh, toks, cache, lens, anc=anc,
+                            depths=dep, dtype=self.act_dtype))
+                    self._compact = jax.jit(
+                        lambda cache, src, dst:
+                        lm.sharded_compact_accepted_path(
+                            cfg, mesh, cache, src, dst))
+                self._accept_tree = jax.jit(samplers.spec_accept_tree)
 
         self.slots: List[Optional[Request]] = [None] * self.B
         self.queue: deque = deque()
@@ -322,6 +362,12 @@ class DistributedServeEngine(LifecycleMixin):
         self.migrations = 0  # live cross-shard request migrations
         self.n_waves = max(1, int(decode_waves))
         self.waves = DecodeWaveScheduler(self.B, self.n_waves)
+        # wave-width adaptive verify: each wave's last dispatched chunk
+        # width (1..k+1) plus run-wide extremes — the "width < k+1 on a
+        # quiet wave" signal (spec mode only; stats() gates on spec)
+        self._wave_vwidth = [0] * self.n_waves
+        self._vwidth_min = 0
+        self._vwidth_max = 0
         # per-wave in-flight dispatch: dicts made by _dispatch_wave, or
         # None; the one-tick-delayed result path, one lane per wave
         self._pending_wave: List[Optional[dict]] = [None] * self.n_waves
@@ -806,7 +852,19 @@ class DistributedServeEngine(LifecycleMixin):
 
         Host lengths do NOT advance at dispatch; the consume-side
         ``kv.rewind(slot, L + accepted + 1)`` settles them (and returns
-        rejected paged pages to the slot's reservation)."""
+        rejected paged pages to the slot's reservation).
+
+        The dispatch width is *wave-adaptive*: the chunk holds
+        ``W = max(counts over the wave) + 1`` positions instead of a
+        fixed ``k + 1``, so a wave whose slots proposed little (the
+        per-slot :class:`~repro.serving.speculative.AdaptiveDraft` caps
+        bound ``counts``) pays proportionally less verify compute — a
+        zero-proposal wave collapses to ``W == 1``, a plain decode
+        step's position-axis cost.  Each distinct width jit-traces once
+        (W is bounded by k+1)."""
+        if self.spec.tree:
+            self._dispatch_tree_verify_wave(w, mask)
+            return
         k = self.spec.k
         lengths_h = self.kv.lengths_array().reshape(self.B).copy()
         caps = speculative.draft_caps(self.slots, lengths_h, mask, k,
@@ -820,12 +878,18 @@ class DistributedServeEngine(LifecycleMixin):
         # nothing this verify; a fully-narrowed wave still dispatches
         # parked (cheap, and the caller's accounting stays uniform)
         mask = self._ensure_room(mask, counts + 1)
-        toks = np.zeros((self.B, k + 1), np.int32)
+        W = int(counts[mask].max(initial=0)) + 1
+        self._record_verify_width(w, W)
+        # rows narrowed out of the wave may carry counts > W - 1; they
+        # are parked (valids == 0) so clamping is cosmetic but keeps
+        # every stored count consistent with the dispatched width
+        counts = np.minimum(counts, W - 1)
+        toks = np.zeros((self.B, W), np.int32)
         toks[:, 0] = self.cur_tok.reshape(self.B)
-        toks[:, 1:] = draft
+        toks[:, 1:] = draft[:, :W - 1]
         vlen = np.where(mask, lengths_h, self.max_seq).astype(np.int32)
         valids = np.where(mask, counts + 1, 0).astype(np.int32)
-        toks_d = toks.reshape(self.D, self.Bs, k + 1)
+        toks_d = toks.reshape(self.D, self.Bs, W)
         vlen_d = vlen.reshape(self.D, self.Bs)
         prev_cache = None
         traj = None
@@ -875,7 +939,76 @@ class DistributedServeEngine(LifecycleMixin):
         self._pending_wave[w] = {
             "kind": "verify", "op": op, "logits": logits_d, "mask": mask,
             "draft": draft, "counts": counts, "lengths": lengths_h,
-            "valids": valids, "prev_cache": prev_cache, "traj": traj}
+            "valids": valids, "width": W,
+            "prev_cache": prev_cache, "traj": traj}
+
+    def _record_verify_width(self, w: int, W: int) -> None:
+        self._wave_vwidth[w] = W
+        self._vwidth_min = W if self._vwidth_min == 0 else min(
+            self._vwidth_min, W)
+        self._vwidth_max = max(self._vwidth_max, W)
+
+    def _dispatch_tree_verify_wave(self, w: int, mask: np.ndarray) -> None:
+        """One sharded *tree* verify over wave ``w``'s slots: each slot
+        proposes a branchy token tree, every node verifies in the same
+        chunk under its per-row ancestor bitmask, and node K/V land at
+        flat chunk offsets while rope/learned embeddings use logical
+        root-path depths.  Same parking/one-tick-delay contract as the
+        linear dispatch; accept + path compaction happen at consume."""
+        k = self.spec.k
+        lengths_h = self.kv.lengths_array().reshape(self.B).copy()
+        caps = speculative.draft_caps(self.slots, lengths_h, mask, k,
+                                      self.seq_ceiling,
+                                      adaptive=self.adaptive)
+        trees = self.proposer.propose_tree(
+            self.slots, self.cur_tok.reshape(self.B, 1), lengths_h, mask,
+            caps, branch=self.spec.branch)
+        tokens_a, parents, n_nodes, anc, depths = speculative.tree_arrays(
+            trees, k, k + 1)
+        mask = self._ensure_room(mask, n_nodes + 1)
+        W = int(n_nodes[mask].max(initial=0)) + 1
+        self._record_verify_width(w, W)
+        toks = np.zeros((self.B, W), np.int32)
+        toks[:, 0] = self.cur_tok.reshape(self.B)
+        toks[:, 1:] = tokens_a[:, :W - 1]
+        vlen = np.where(mask, lengths_h, self.max_seq).astype(np.int32)
+        # truncating the (k+1)-wide masks to the wave width keeps every
+        # wave row intact (its n_nodes bound W) and keeps parked rows'
+        # causal-default rows causal
+        anc_w = np.ascontiguousarray(anc[:, :W, :W])
+        dep_w = np.ascontiguousarray(depths[:, :W])
+        if self.paged:
+            logits_d, self.cache = self._verify_tree(
+                self.params,
+                self._stage(f"verify.w{w}.tokens",
+                            toks.reshape(self.D, self.Bs, W)),
+                self.cache,
+                self._stage(f"verify.w{w}.lengths",
+                            vlen.reshape(self.D, self.Bs)),
+                self._stage(f"verify.w{w}.block_tables",
+                            self.kv.block_tables_array()),
+                self._stage(f"verify.w{w}.anc",
+                            anc_w.reshape(self.D, self.Bs, W, W)),
+                self._stage(f"verify.w{w}.depths",
+                            dep_w.reshape(self.D, self.Bs, W)))
+        else:
+            logits_d, self.cache = self._verify_tree(
+                self.params,
+                self._stage(f"verify.w{w}.tokens",
+                            toks.reshape(self.D, self.Bs, W)),
+                self.cache,
+                self._stage(f"verify.w{w}.lengths",
+                            vlen.reshape(self.D, self.Bs)),
+                self._stage(f"verify.w{w}.anc",
+                            anc_w.reshape(self.D, self.Bs, W, W)),
+                self._stage(f"verify.w{w}.depths",
+                            dep_w.reshape(self.D, self.Bs, W)))
+        self.spec_ticks += 1
+        op = self.xfer.dispatch(f"verify.w{w}", logits_d)
+        self._pending_wave[w] = {
+            "kind": "verify", "tree": True, "op": op, "logits": logits_d,
+            "mask": mask, "tokens": tokens_a, "parents": parents,
+            "n_nodes": n_nodes, "lengths": lengths_h, "width": W}
 
     def _consume_verify(self, pend: dict, logits_h: np.ndarray,
                         now: float) -> None:
@@ -883,11 +1016,25 @@ class DistributedServeEngine(LifecycleMixin):
         the standard spec settle (accept a draft prefix + one bonus or
         corrective token per row), then per-shard length/page rewind and
         — for hybrid stacked — the sharded StateStore commit."""
+        if pend.get("tree"):
+            self._consume_tree_verify(pend, logits_h, now)
+            return
         mask, draft = pend["mask"], pend["draft"]
         counts, base = pend["counts"], pend["lengths"]
+        W = pend["width"]  # logits are (B, W, V); draft rides (B, W-1)
+        if W == 1:
+            # zero-proposal wave: the width-1 verify is a decode step in
+            # verify clothing.  spec_accept_batch needs k >= 1, so pad a
+            # dummy draft position — with counts == 0 nothing past
+            # position 0 is read and next_tok still samples off
+            # logits[:, 0] with the same rng stream
+            logits_h = np.concatenate([logits_h, logits_h], axis=1)
+            draft_s = np.zeros((self.B, 1), np.int32)
+        else:
+            draft_s = draft[:, :W - 1]
         self.rng, sub = jax.random.split(self.rng)
         n_acc, next_tok = jax.device_get(self._accept(
-            jnp.asarray(logits_h), jnp.asarray(draft),
+            jnp.asarray(logits_h), jnp.asarray(draft_s),
             jnp.asarray(counts), sub, jnp.asarray(self._temp),
             jnp.asarray(self._topk), jnp.asarray(self._topp)))
         if self._state_store is not None:
@@ -897,7 +1044,7 @@ class DistributedServeEngine(LifecycleMixin):
                 base.reshape(self.D, self.Bs),
                 commit.reshape(self.D, self.Bs),
                 pend["valids"].reshape(self.D, self.Bs),
-                chunk=self.spec.k + 1)
+                chunk=W)
         for b in range(self.B):
             req = self.slots[b]
             if not mask[b] or req is None:
@@ -923,6 +1070,80 @@ class DistributedServeEngine(LifecycleMixin):
             else:
                 # request lives on: commit cur_tok + the m accepted
                 # drafts on the slot's own shard
+                self.kv.rewind(b, L + m + 1)
+                self.proposer.commit(b, req.prompt + req.out, L + m + 1)
+                if req.migrate_to is not None:
+                    self._do_migrate(req, *req.migrate_to)
+
+    def _consume_tree_verify(self, pend: dict, logits_h: np.ndarray,
+                             now: float) -> None:
+        """Tree-verify settle, one tick after dispatch: pick the longest
+        accepted root-to-leaf path per row (``sampler.spec_accept_tree``),
+        compact the surviving path's K/V from scattered flat chunk
+        positions to contiguous ``L+1..L+m`` (one sharded gather/scatter,
+        BEFORE any rewind releases pages), then emit/rewind/commit."""
+        mask, base = pend["mask"], pend["lengths"]
+        tokens_a, parents = pend["tokens"], pend["parents"]
+        n_nodes, W = pend["n_nodes"], pend["width"]
+        k = self.spec.k
+        self.rng, sub = jax.random.split(self.rng)
+        n_acc, acc, next_tok = jax.device_get(self._accept_tree(
+            jnp.asarray(logits_h), jnp.asarray(tokens_a[:, :W - 1]),
+            jnp.asarray(parents[:, :W - 1]), jnp.asarray(n_nodes), sub,
+            jnp.asarray(self._temp), jnp.asarray(self._topk),
+            jnp.asarray(self._topp)))
+        acc = np.asarray(acc, bool)
+        paths = [np.flatnonzero(acc[b, 1:]) + 1 if mask[b]
+                 else np.zeros(0, np.int64) for b in range(self.B)]
+        src = np.full((self.B, k), self.max_seq, np.int32)
+        dst = np.full((self.B, k), self.max_seq, np.int32)
+        need = False
+        for b in range(self.B):
+            m = len(paths[b])
+            if m == 0:
+                continue
+            L = int(base[b])
+            src[b, :m] = L + paths[b]
+            dst[b, :m] = L + 1 + np.arange(m)
+            if not np.array_equal(paths[b], np.arange(1, m + 1)):
+                need = True
+        if need:
+            # rows of the *other* wave (and parked rows) carry
+            # src == dst == max_seq: their copies drop, so compaction
+            # can never disturb an in-flight verify's draft positions
+            if self.paged:
+                self.cache = self._compact(
+                    self.cache, jnp.asarray(src.reshape(
+                        self.D, self.Bs, k)),
+                    jnp.asarray(dst.reshape(self.D, self.Bs, k)),
+                    jnp.asarray(self.kv.block_tables_array()))
+            else:
+                self.cache = self._compact(
+                    self.cache, jnp.asarray(src.reshape(
+                        self.D, self.Bs, k)),
+                    jnp.asarray(dst.reshape(self.D, self.Bs, k)))
+        for b in range(self.B):
+            req = self.slots[b]
+            if not mask[b] or req is None:
+                continue
+            if req.cancel_requested:
+                self._free_slot_state(req)
+                self._finalize_cancel(req)
+                continue
+            m = len(paths[b])
+            self._h_accept.record(m)
+            self.spec_proposed += int(n_nodes[b])
+            self.spec_accepted += m
+            if self.adaptive is not None:
+                self.adaptive.observe_tree(b, int(n_nodes[b]), m)
+            L = int(base[b])
+            for tok in [int(tokens_a[b, j - 1]) for j in paths[b]] + [
+                    int(next_tok[b])]:
+                self._emit(req, int(tok), now)
+                self.spec_emitted += 1
+                if req.done:
+                    break
+            else:
                 self.kv.rewind(b, L + m + 1)
                 self.proposer.commit(b, req.prompt + req.out, L + m + 1)
                 if req.migrate_to is not None:
@@ -1014,7 +1235,14 @@ class DistributedServeEngine(LifecycleMixin):
                 "draft_calls": getattr(self.proposer, "draft_calls", 0),
                 "spec_accept_len_p50": self._h_accept.quantile(0.5),
                 "spec_accept_len_p99": self._h_accept.quantile(0.99),
+                # wave-width adaptive verify: last dispatched chunk
+                # width per wave + run-wide extremes (a min below k+1
+                # means some wave paid less than the fixed-width cost)
+                "verify_width_min": self._vwidth_min,
+                "verify_width_max": self._vwidth_max,
             })
+            out.update({f"wave{w}_verify_width": self._wave_vwidth[w]
+                        for w in range(self.n_waves)})
             if self.adaptive is not None:
                 out.update(self.adaptive.stats())
         out.update(self.xfer.stats())

@@ -348,6 +348,43 @@ class ServeEngine(LifecycleMixin):
                     lambda p, toks, cache, lens: lm.verify_chunk(
                         p, cfg, toks, cache, lens, dtype=self.act_dtype)))
             self._accept = jax.jit(samplers.spec_accept_batch)
+            if spec.tree:
+                if spec.branch < 1:
+                    raise ValueError(
+                        f"SpecConfig.branch={spec.branch} must be >= 1")
+                if not blocks.page_addressable(cfg):
+                    raise ValueError(
+                        "tree speculation forks K/V across sibling "
+                        "branches, which only absolute-position attn "
+                        "caches support — rings rotate and recurrent "
+                        "states carry, neither can hold two candidate "
+                        "futures at once.  This stack has kinds "
+                        f"{sorted(set(cfg.block_pattern))}; use linear "
+                        "speculation (tree=False) for hybrid stacks")
+                # tree verify threads the per-row ancestor bitmask and
+                # logical (root-path depth) positions; page_addressable
+                # rules out the StateStore variants, so only the two
+                # attn-cache shapes exist
+                if self.paged:
+                    self._verify_tree = jax.jit(_traced(
+                        lambda p, toks, cache, lens, bts, anc, dep:
+                        lm.verify_chunk(
+                            p, cfg, toks, cache, lens, block_tables=bts,
+                            anc=anc, depths=dep, dtype=self.act_dtype)))
+                    self._compact = jax.jit(
+                        lambda cache, src, dst, bts:
+                        lm.compact_accepted_path(
+                            cfg, cache, src, dst, block_tables=bts))
+                else:
+                    self._verify_tree = jax.jit(_traced(
+                        lambda p, toks, cache, lens, anc, dep:
+                        lm.verify_chunk(
+                            p, cfg, toks, cache, lens, anc=anc,
+                            depths=dep, dtype=self.act_dtype)))
+                    self._compact = jax.jit(
+                        lambda cache, src, dst:
+                        lm.compact_accepted_path(cfg, cache, src, dst))
+                self._accept_tree = jax.jit(samplers.spec_accept_tree)
 
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.queue: deque = deque()
@@ -555,6 +592,9 @@ class ServeEngine(LifecycleMixin):
         (paged) pages grown for rejected positions — their K/V stay
         masked and are overwritten by the next write at those positions.
         """
+        if self.spec.tree:
+            self._tree_spec_decode(decoding)
+            return
         B, k = self.B, self.spec.k
         tr = self.tel.tracer
         lengths_h = np.asarray(self.kv.lengths).copy()
@@ -672,6 +712,148 @@ class ServeEngine(LifecycleMixin):
                 # request lives on: commit cur_tok + the m accepted drafts
                 # (positions L..L+m); the bonus token becomes cur_tok via
                 # _emit and is written next tick
+                self.kv.rewind(b, L + m + 1)
+                self.proposer.commit(b, req.prompt + req.out, L + m + 1)
+
+    # ------------------------------------------------------------------
+    def _tree_spec_decode(self, decoding: np.ndarray) -> None:
+        """One tree-speculative decode tick: propose a branchy token tree
+        per slot, verify EVERY node in one ancestor-masked chunked call,
+        emit the longest accepted root-to-leaf path + a corrective token.
+
+        The verify chunk holds ``[cur_tok, node_1..node_n]`` in DFS
+        order; node ``j`` attends exactly its root path (the ``anc``
+        bitmask) and is rotated/embedded at its *logical* position
+        ``L + depth_j`` even though its K/V land at flat position
+        ``L + j``.  After ``sampler.spec_accept_tree`` picks the
+        surviving path, :func:`lm.compact_accepted_path` copies the
+        path's K/V from flat to contiguous positions ``L+1..L+m`` so the
+        cache looks exactly as if plain decode had produced those
+        tokens; ``kv.rewind(slot, L+m+1)`` then drops the rejected
+        branches.  Tree width rides the same one-verify-per-tick
+        economics as linear spec: chunk width stays k+1, the tree just
+        spends it on siblings instead of a single deep chain.
+        """
+        B, k = self.B, self.spec.k
+        C = k + 1
+        tr = self.tel.tracer
+        lengths_h = np.asarray(self.kv.lengths).copy()
+        caps = speculative.draft_caps(self.slots, lengths_h, decoding, k,
+                                      self.seq_ceiling,
+                                      adaptive=self.adaptive)
+        with tr.span("spec.propose", "spec"):
+            trees = self.proposer.propose_tree(
+                self.slots, self.cur_tok, lengths_h, decoding, caps,
+                branch=self.spec.branch)
+        tokens_a, parents, n_nodes, anc, depths = speculative.tree_arrays(
+            trees, k, C)
+        if not n_nodes.any():
+            # no slot grew a tree: accepting zero nodes IS plain
+            # sampling from position 0 (same as the linear fast path)
+            self._plain_decode(list(decoding))
+            return
+        decoding = self._ensure_room(decoding, n_nodes + 1)
+        if not decoding.any():
+            return
+        toks = np.zeros((B, C), np.int32)
+        toks[:, 0] = self.cur_tok[:, 0]
+        toks[:, 1:] = tokens_a
+        # parked rows write at max_seq (dropped) with causal-default
+        # masks; their logits go unused
+        vlen = np.where(decoding, lengths_h, self.max_seq).astype(np.int32)
+        t0 = time.perf_counter()
+        with tr.span("spec.verify", "spec", TID_ENGINE,
+                     ({"rows": int(decoding.sum()),
+                       "proposed": int(n_nodes.sum()),
+                       "tree": True,
+                       "modeled_s": self._modeled_decode_s}
+                      if tr.enabled else None)), \
+                tr.annotation("spec.verify"):
+            if self.paged:
+                mask = np.asarray(decoding, bool)
+                live = -(-(lengths_h + n_nodes + 1) // self.kv.page_size)
+                self.verify_touched_positions += int(
+                    (live[mask] * self.kv.page_size).sum())
+                self.verify_dense_positions += (
+                    2 * int(mask.sum()) * self.max_seq)
+                logits, self.kv.cache = self._verify_tree(
+                    self.params, jnp.asarray(toks), self.kv.cache,
+                    jnp.asarray(vlen),
+                    jnp.asarray(self.kv.block_tables),
+                    jnp.asarray(anc), jnp.asarray(depths))
+            else:
+                logits, self.kv.cache = self._verify_tree(
+                    self.params, jnp.asarray(toks), self.kv.cache,
+                    jnp.asarray(vlen), jnp.asarray(anc),
+                    jnp.asarray(depths))
+        self._c_dec_mod.value += self._modeled_decode_s
+        self._c_dec_meas.value += time.perf_counter() - t0
+        self.model_calls += 1
+        self.spec_ticks += 1
+        self.rng, sub = jax.random.split(self.rng)
+        with tr.span("spec.accept", "spec"):
+            n_acc, acc, next_tok = jax.device_get(self._accept_tree(
+                logits, jnp.asarray(tokens_a), jnp.asarray(parents),
+                jnp.asarray(n_nodes), sub, jnp.asarray(self._temp),
+                jnp.asarray(self._topk), jnp.asarray(self._topp)))
+        acc = np.asarray(acc, bool)
+        # accepted path per row, in depth order (DFS layout guarantees
+        # parent flat pos < child flat pos, so ascending == root-to-leaf)
+        paths = [np.flatnonzero(acc[b, 1:]) + 1 if decoding[b]
+                 else np.zeros(0, np.int64) for b in range(B)]
+        # compact the surviving path's K/V from scattered flat positions
+        # to contiguous L+1..L+m BEFORE rewind releases anything; rows
+        # whose path is already contiguous (a chain prefix) need no copy
+        src = np.full((B, k), self.max_seq, np.int32)
+        dst = np.full((B, k), self.max_seq, np.int32)
+        need = False
+        for b in range(B):
+            m = len(paths[b])
+            if m == 0:
+                continue
+            L = int(lengths_h[b])
+            src[b, :m] = L + paths[b]
+            dst[b, :m] = L + 1 + np.arange(m)
+            if not np.array_equal(paths[b], np.arange(1, m + 1)):
+                need = True
+        if need:
+            with tr.span("spec.compact", "spec"):
+                if self.paged:
+                    # snapshot the block tables: the compact dispatch is
+                    # async and jnp.asarray aliases host memory on CPU,
+                    # while the rewind below nulls released page entries
+                    # in place — without the copy the in-flight gather
+                    # races the mutation and reads freed page ids
+                    self.kv.cache = self._compact(
+                        self.kv.cache, jnp.asarray(src),
+                        jnp.asarray(dst),
+                        jnp.asarray(self.kv.block_tables.copy()))
+                else:
+                    self.kv.cache = self._compact(
+                        self.kv.cache, jnp.asarray(src),
+                        jnp.asarray(dst))
+        now = time.monotonic()
+        for b in range(B):
+            req = self.slots[b]
+            if not decoding[b] or req is None:
+                continue
+            m = len(paths[b])
+            self._h_accept.record(m)
+            self.spec_proposed += int(n_nodes[b])
+            self.spec_accepted += m
+            if self.adaptive is not None:
+                self.adaptive.observe_tree(b, int(n_nodes[b]), m)
+            L = int(lengths_h[b])
+            for tok in [int(toks[b, j]) for j in paths[b]] + [
+                    int(next_tok[b])]:
+                self._emit(req, int(tok), now)
+                self.spec_emitted += 1
+                if req.done:
+                    break
+            else:
+                # request lives on: keep cur_tok + the m path tokens
+                # (now at positions L..L+m after compaction); the
+                # corrective token becomes cur_tok via _emit
                 self.kv.rewind(b, L + m + 1)
                 self.proposer.commit(b, req.prompt + req.out, L + m + 1)
 

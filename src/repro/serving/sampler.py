@@ -194,3 +194,105 @@ def spec_accept_batch(
         r2, jnp.log(jnp.maximum(p_next, 1e-30)), axis=-1)
     next_tok = jnp.where(temp <= 0.0, gtok[row, n_accept], sampled)
     return n_accept.astype(jnp.int32), next_tok.astype(jnp.int32)
+
+
+def spec_accept_tree(
+    logits: jax.Array,  # (B, C, V) verify logits over the tree chunk
+    tokens: jax.Array,  # (B, k) i32 tree node tokens, DFS order
+    parents: jax.Array,  # (B, k) i32 parent *chunk position* per node
+    n_nodes: jax.Array,  # (B,) i32 valid node count per row
+    rng: jax.Array,
+    temp: jax.Array,  # (B,) f32
+    topk: jax.Array,  # (B,) i32
+    topp: jax.Array,  # (B,) f32
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Accept/reject a token *tree* against the target distribution.
+
+    Node ``j`` (1-based chunk position; node index ``j - 1``) carries
+    token ``tokens[b, j-1]`` and hangs off chunk position
+    ``parents[b, j-1]`` (0 = the root / current token).  ``logits[b, i]``
+    is the target distribution after the row's context plus position
+    ``i``'s root path — what the ancestor-masked verify returns.  Nodes
+    are walked in DFS order (parents strictly before children): a node is
+    *tryable* iff its parent was accepted and no earlier sibling already
+    won that parent.  Each tryable candidate takes the Leviathan
+    point-mass decision against the parent's *residual* distribution —
+    previously rejected siblings struck out and the mass renormalized
+    (sampling without replacement), which preserves the target
+    distribution exactly for stochastic rows.  Greedy rows accept a child
+    iff its token equals the parent's argmax, reducing to the longest
+    root-to-leaf prefix of the greedy chain.
+
+    The corrective/bonus token samples the final accepted position's
+    residual (its rejected children struck, renormalized); greedy rows
+    take its argmax.  On a chain-shaped tree (node ``j``'s parent is
+    ``j - 1``) every step reduces *bit-exactly* to
+    :func:`spec_accept_batch`: the first trial at each parent divides by
+    a residual mass of exactly ``1.0``, the same per-trial uniforms line
+    up, and the finale applies the identical strike/renorm/categorical
+    ops.
+
+    Returns ``(n_accept (B,) i32, accepted (B, C) bool, next_tok (B,)
+    i32)``: the accepted chunk positions (position 0 always set) form a
+    root-to-leaf path whose ascending order is depth order; row b emits
+    the accepted nodes' tokens followed by ``next_tok[b]``.
+    """
+    B, C, V = logits.shape
+    k = tokens.shape[1]
+    assert k + 1 <= C, (tokens.shape, logits.shape)
+    lg = logits.astype(jnp.float32)
+    flat = _filter_logits(
+        lg.reshape(B * C, V),
+        jnp.repeat(temp, C), jnp.repeat(topk, C), jnp.repeat(topp, C),
+    ).reshape(B, C, V)
+    probs = jax.nn.softmax(flat, axis=-1)
+    gtok = jnp.argmax(lg, axis=-1)  # (B, C) greedy token at each position
+
+    r1, r2 = jax.random.split(rng)
+    u = jax.random.uniform(r1, (B, k))  # one uniform per node trial
+    greedy_row = temp <= 0.0  # (B,)
+    row = jnp.arange(B)
+
+    accepted = jnp.zeros((B, C), bool).at[:, 0].set(True)
+    child_done = jnp.zeros((B, C), bool)  # parent already has a winner
+    struck = jnp.zeros((B, C, V), bool)  # rejected tokens per position
+    struck_mass = jnp.zeros((B, C), jnp.float32)
+
+    for j in range(1, k + 1):
+        par = parents[:, j - 1]  # (B,) parent chunk position
+        tok = tokens[:, j - 1]  # (B,)
+        tryable = (
+            ((j - 1) < n_nodes)
+            & accepted[row, par]
+            & ~child_done[row, par]
+        )
+        p_tok = probs[row, par, tok]
+        was_struck = struck[row, par, tok]
+        denom = jnp.maximum(1.0 - struck_mass[row, par], 1e-30)
+        p_try = jnp.where(was_struck, 0.0, p_tok) / denom
+        ok = jnp.where(greedy_row, tok == gtok[row, par], u[:, j - 1] < p_try)
+        ok = ok & tryable
+        rej = tryable & ~ok
+        accepted = accepted.at[:, j].set(ok)
+        child_done = child_done.at[row, par].set(child_done[row, par] | ok)
+        struck = struck.at[row, par, tok].set(struck[row, par, tok] | rej)
+        struck_mass = struck_mass.at[row, par].add(
+            jnp.where(rej & ~was_struck, p_tok, 0.0))
+
+    # deepest accepted position = max accepted index (DFS: parent < child)
+    fin = jnp.max(
+        jnp.where(accepted, jnp.arange(C)[None], 0), axis=1)  # (B,)
+    n_accept = jnp.sum(accepted[:, 1:].astype(jnp.int32), axis=1)
+
+    p_next = probs[row, fin]  # (B, V)
+    p_next = jnp.where(struck[row, fin], 0.0, p_next)
+    p_next = p_next / jnp.maximum(
+        jnp.sum(p_next, axis=-1, keepdims=True), 1e-30)
+    sampled = jax.random.categorical(
+        r2, jnp.log(jnp.maximum(p_next, 1e-30)), axis=-1)
+    next_tok = jnp.where(greedy_row, gtok[row, fin], sampled)
+    return (
+        n_accept.astype(jnp.int32),
+        accepted,
+        next_tok.astype(jnp.int32),
+    )

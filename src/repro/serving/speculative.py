@@ -63,7 +63,15 @@ class SpecConfig:
     *shrinks* the proposal budget — the accept/reject rule is untouched
     — so greedy streams stay token-for-token identical to plain decode
     (and to non-adaptive speculation up to how many drafts ride each
-    verify)."""
+    verify).
+
+    ``tree=True`` drafts a *token tree* instead of a linear chain: the
+    proposer emits up to ``branch`` candidate continuations per node
+    (:meth:`DraftProposer.propose_tree`) within the same ``k``-node
+    budget, and one ancestor-masked verify scores every root-to-leaf
+    path at the same chunk width — tree width replaces chain length at
+    equal verify cost.  Requires a pure global-attention target stack
+    (rotating rings and recurrent state cannot fork across branches)."""
 
     k: int = 4
     proposer: str = "ngram"  # "ngram" | "model"
@@ -74,6 +82,108 @@ class SpecConfig:
     adaptive: bool = False  # per-slot EWMA acceptance -> draft caps
     k_min: int = 1  # adaptive floor (never shrink below this cap)
     ewma_decay: float = 0.5  # weight of the newest acceptance ratio
+    tree: bool = False  # token-tree drafts through ancestor-masked verify
+    branch: int = 2  # max candidate continuations per tree node
+
+
+class TokenTree:
+    """A draft token tree in flattened DFS layout.
+
+    Nodes are stored append-only; node ``i`` (0-based) occupies verify
+    *chunk position* ``i + 1`` (position 0 is the root — the current
+    token), and ``parents[i]`` names its parent's chunk position (0 for
+    children of the root).  Append order guarantees the layout invariant
+    every consumer relies on: a parent's chunk position is strictly less
+    than all of its children's, so the accept walk can resolve each
+    node's parent before reaching it, and the accepted positions in
+    ascending order *are* the root-to-leaf path in depth order.
+
+    ``depths[i]`` is the node's depth below the root (first level = 1):
+    the node's *logical* sequence position is ``base + depths[i]``, while
+    its cache slot stays at the flat ``base + i + 1`` until the accepted
+    path is compacted.
+    """
+
+    def __init__(self):
+        self.tokens: List[int] = []
+        self.parents: List[int] = []  # parent chunk position (0 = root)
+        self.depths: List[int] = []  # node depth below the root (>= 1)
+
+    @property
+    def n(self) -> int:
+        return len(self.tokens)
+
+    def add(self, token: int, parent: int) -> int:
+        """Append a node under chunk position ``parent``; returns the new
+        node's chunk position."""
+        pos = len(self.tokens) + 1
+        if not 0 <= parent < pos:
+            raise ValueError(
+                f"parent {parent} out of range for node at position {pos}")
+        self.tokens.append(int(token))
+        self.parents.append(int(parent))
+        self.depths.append(1 if parent == 0 else self.depths[parent - 1] + 1)
+        return pos
+
+    @classmethod
+    def chain(cls, tokens) -> "TokenTree":
+        """A degenerate linear tree — node ``j`` hangs off node ``j-1``."""
+        t = cls()
+        p = 0
+        for tok in tokens:
+            p = t.add(int(tok), p)
+        return t
+
+    def ancestor_mask(self, C: int) -> np.ndarray:
+        """The ``(C, C)`` ancestor bitmask over chunk positions: row ``j``
+        sets exactly position ``j``'s root path (itself included).
+        Padding rows past the last node get *causal* (lower-triangular)
+        rows, so a chain-shaped or empty tree yields the plain causal
+        mask bit-for-bit — the linear-verify reduction."""
+        n = self.n
+        if n + 1 > C:
+            raise ValueError(f"{n} nodes do not fit a width-{C} chunk")
+        anc = np.zeros((C, C), bool)
+        anc[0, 0] = True
+        for j in range(1, n + 1):
+            anc[j] = anc[self.parents[j - 1]]
+            anc[j, j] = True
+        for j in range(n + 1, C):
+            anc[j, :j + 1] = True
+        return anc
+
+    def padded_depths(self, C: int) -> np.ndarray:
+        """Per-chunk-position depths, ``(C,)`` i32: root 0, node ``i`` at
+        ``depths[i]``, padding positions at their causal offset (matching
+        the linear chunk's ``base + j`` positions exactly)."""
+        d = np.arange(C, dtype=np.int32)
+        d[1:self.n + 1] = self.depths
+        return d
+
+
+def tree_arrays(
+    trees: List[Optional["TokenTree"]], k: int, C: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Batch per-slot trees into the verify/accept arrays:
+    ``(tokens (B, k), parents (B, k), n_nodes (B,), anc (B, C, C),
+    depths (B, C))``.  Slots with no tree get the causal/chain layout
+    (zero nodes), so their rows reduce to the linear verify exactly."""
+    B = len(trees)
+    tokens = np.zeros((B, k), np.int32)
+    parents = np.tile(np.arange(k, dtype=np.int32), (B, 1))
+    n_nodes = np.zeros((B,), np.int32)
+    anc = np.tile(np.tril(np.ones((C, C), bool)), (B, 1, 1))
+    depths = np.tile(np.arange(C, dtype=np.int32), (B, 1))
+    for b, t in enumerate(trees):
+        if t is None or t.n == 0:
+            continue
+        n = t.n
+        tokens[b, :n] = t.tokens
+        parents[b, :n] = t.parents
+        n_nodes[b] = n
+        anc[b] = t.ancestor_mask(C)
+        depths[b] = t.padded_depths(C)
+    return tokens, parents, n_nodes, anc, depths
 
 
 def draft_caps(slots, lengths, active, k: int, seq_ceiling,
@@ -152,6 +262,15 @@ class AdaptiveDraft:
         ratio = min(1.0, accepted / proposed)
         self._ewma[slot] += self.decay * (ratio - self._ewma[slot])
 
+    def observe_tree(self, slot: int, n_nodes: int, path_len: int) -> None:
+        """Tree-mode observation: the chain ``observe`` assumes every
+        proposed position was on the (single) path, but a tree spends its
+        node budget across branches — the meaningful efficiency signal is
+        accepted-path-length over *proposed nodes* (tokens landed per
+        node of verify width paid), so the EWMA keeps driving the node
+        budget rather than saturating at the per-level acceptance."""
+        self.observe(slot, n_nodes, path_len)
+
     def cap(self, slot: int) -> int:
         """The slot's current draft cap, in [k_min, k]."""
         e = self._ewma.get(slot, 1.0)
@@ -199,6 +318,26 @@ class DraftProposer:
         """Return ``(draft (B, k) i32, counts (B,) i32)`` with
         ``counts[b] <= caps[b]`` valid tokens per active row."""
         raise NotImplementedError
+
+    def propose_tree(
+        self,
+        slots,  # List[Optional[Request]] — the engine's slot table
+        cur_tok: np.ndarray,  # (B, 1) last emitted (uncached) token
+        lengths: np.ndarray,  # (B,) target cache lengths
+        active: np.ndarray,  # (B,) bool — slots decoding this tick
+        caps: np.ndarray,  # (B,) per-slot *node budget* (<= k)
+        branch: int = 2,  # max candidate continuations per node
+    ) -> List[Optional["TokenTree"]]:
+        """Return one :class:`TokenTree` per slot (``None`` for inactive
+        or empty rows) with at most ``caps[b]`` nodes.  The base
+        implementation wraps :meth:`propose` into degenerate chains, so
+        every proposer is tree-capable; branchy proposers override it."""
+        draft, counts = self.propose(slots, cur_tok, lengths, active, caps)
+        trees: List[Optional[TokenTree]] = []
+        for b in range(len(slots)):
+            n = int(counts[b])
+            trees.append(TokenTree.chain(draft[b, :n]) if n > 0 else None)
+        return trees
 
     def commit(self, slot: int, context: List[int], new_len: int) -> None:
         """Verification committed ``new_len`` cache positions for
@@ -256,6 +395,26 @@ class NgramProposer(DraftProposer):
                     return ctx[start:start + cap]
         return []
 
+    def _lookup_multi(self, table: Dict, ctx: List[int],
+                      width: int) -> List[int]:
+        """Up to ``width`` *distinct* candidate next-tokens for the
+        context's current suffix, ordered longest-n-gram first and most
+        recent occurrence first within an n — the first candidate is
+        exactly what :meth:`_lookup` would draft, so a width-1 tree walk
+        reproduces the chain proposal."""
+        L = len(ctx)
+        cands: List[int] = []
+        for n in range(min(self.n_max, L), self.n_min - 1, -1):
+            occs = table.get(tuple(ctx[L - n:]))
+            if not occs:
+                continue
+            for start in reversed(occs):
+                if start < L and ctx[start] not in cands:
+                    cands.append(ctx[start])
+                    if len(cands) >= width:
+                        return cands
+        return cands
+
     def propose(self, slots, cur_tok, lengths, active, caps):
         B = len(slots)
         draft = np.zeros((B, self.k), np.int32)
@@ -269,6 +428,36 @@ class NgramProposer(DraftProposer):
             counts[b] = len(toks)
             draft[b, :len(toks)] = toks
         return draft, counts
+
+    def propose_tree(self, slots, cur_tok, lengths, active, caps, branch=2):
+        trees: List[Optional[TokenTree]] = [None] * len(slots)
+        for b, req in enumerate(slots):
+            if not active[b] or caps[b] <= 0 or req is None:
+                continue
+            ctx = req.prompt + req.out
+            table = self._extend(b, ctx)
+            tree = TokenTree()
+            budget = int(caps[b])
+
+            # each node spawns up to `branch` distinct continuations; all
+            # siblings are added before any subtree recurses so ambiguity
+            # near the root keeps its candidates even on a tight budget
+            def grow(parent_pos: int, path: List[int]) -> None:
+                nonlocal budget
+                if budget <= 0:
+                    return
+                kids = []
+                for tok in self._lookup_multi(table, path, branch):
+                    if budget <= 0:
+                        break
+                    kids.append((tree.add(tok, parent_pos), tok))
+                    budget -= 1
+                for pos, tok in kids:
+                    grow(pos, path + [tok])
+
+            grow(0, ctx)
+            trees[b] = tree if tree.n else None
+        return trees
 
 
 class ModelDraft(DraftProposer):
@@ -321,6 +510,11 @@ class ModelDraft(DraftProposer):
         self.cache = lm.init_cache(cfg, batch_slots, max_seq, dtype=dtype)
         self.lengths = np.zeros((batch_slots,), np.int32)  # clean fill
         self.draft_calls = 0  # draft model invocations (decode + prefill)
+        # tree mode: slot -> (start, fed tokens) — what propose_tree wrote
+        # into the draft cache this tick, reconciled against the accepted
+        # path by commit() (the spine may diverge from what verification
+        # accepts, unlike a chain whose accepted prefix is always clean)
+        self._written: Dict[int, Tuple[int, List[int]]] = {}
         self._step = jax.jit(
             lambda p, tok, cache, lens: lm.decode_step(
                 p, cfg, tok, cache, lens, dtype=dtype))
@@ -394,17 +588,91 @@ class ModelDraft(DraftProposer):
                                  np.int32)
         return draft, counts
 
+    def propose_tree(self, slots, cur_tok, lengths, active, caps, branch=2):
+        """Medusa-style tree drafting: walk the greedy *spine* through the
+        draft model, and at every step keep the top-``branch`` candidates
+        — the argmax extends the spine (and is fed back), the runners-up
+        hang off the same parent as single-node siblings.  A ``k``-node
+        budget therefore needs only ``ceil(k / branch)`` draft forwards
+        (vs ``k`` for a chain), and the tree covers the draft model's
+        top-``branch`` uncertainty at every accepted depth.
+
+        Cache writes follow the spine only; they are recorded per slot
+        and reconciled in :meth:`commit` against whatever path the target
+        actually accepted."""
+        B, k = self.B, self.k
+        branch = max(1, int(branch))
+        budgets = np.where(active, np.maximum(caps, 0), 0).astype(np.int32)
+        live0 = np.asarray(active, bool) & (budgets > 0)
+        trees: List[Optional[TokenTree]] = [None] * B
+        spine_pos = np.zeros((B,), np.int32)  # current spine chunk position
+        for b in range(B):
+            if live0[b] and slots[b] is not None:
+                trees[b] = TokenTree()
+        rem = np.where([t is not None for t in trees], budgets, 0)
+        pos = np.where(active, lengths, self.lengths).astype(np.int32)
+        pos = np.minimum(pos, self.max_seq - 1)
+        toks = np.array(cur_tok, np.int32).reshape(B, 1).copy()
+        fed = {b: [int(toks[b, 0])] for b in range(B) if trees[b] is not None}
+        steps = int(np.ceil(rem / branch).max(initial=0))
+        tr = self.tracer
+        with tr.span("draft.propose_tree", "spec", args=(
+                {"steps": steps, "branch": branch,
+                 "rows": int(live0.sum())} if tr.enabled else None)):
+            for _ in range(steps):
+                logits, self.cache = self._step(
+                    self.params, jnp.asarray(toks), self.cache,
+                    jnp.asarray(pos))
+                self.draft_calls += 1
+                top = np.asarray(
+                    jax.lax.top_k(logits, branch)[1], np.int32)  # (B, br)
+                for b in range(B):
+                    if trees[b] is None or rem[b] <= 0:
+                        continue
+                    w = min(branch, int(rem[b]))
+                    p0 = trees[b].add(top[b, 0], int(spine_pos[b]))
+                    for c in top[b, 1:w]:
+                        trees[b].add(int(c), int(spine_pos[b]))
+                    rem[b] -= w
+                    spine_pos[b] = p0
+                # feed the spine; rows out of budget freeze (rewrite the
+                # same token at the same — masked or real — position)
+                adv = np.asarray(
+                    [trees[b] is not None and rem[b] > 0 for b in range(B)])
+                pos = np.minimum(pos + adv.astype(np.int32),
+                                 self.max_seq - 1)
+                toks[adv, 0] = top[adv, 0]
+                for b in np.flatnonzero(adv):
+                    fed[b].append(int(top[b, 0]))
+        for b, f in fed.items():
+            # speculative writes are dirty until commit reconciles them
+            self._written[b] = (int(lengths[b]), f)
+            self.lengths[b] = int(lengths[b])
+        return trees
+
     def commit(self, slot, context, new_len):
+        rec = self._written.pop(slot, None)
+        if rec is not None:
+            # tree tick: the clean fill is however far the fed spine
+            # agrees with the committed context; the rest (a diverging
+            # accepted branch) is teacher-forced below
+            start, fed = rec
+            m = 0
+            while (m < len(fed) and start + m < new_len
+                   and fed[m] == context[start + m]):
+                m += 1
+            self.lengths[slot] = start + m
         fill = int(self.lengths[slot])
         if new_len > fill:
-            # full acceptance of a k-token draft: the bonus position's
-            # token (the last draft token) was generated but never
-            # written — teacher-force the gap (at most one token)
+            # chain: full acceptance of a k-token draft leaves the bonus
+            # position's token generated but never written (at most one
+            # token); tree: the accepted path diverged from the spine
             self._force(slot, context[fill:new_len], fill)
         self.lengths[slot] = new_len
 
     def free(self, slot):
         self.lengths[slot] = 0
+        self._written.pop(slot, None)
 
 
 def make_proposer(

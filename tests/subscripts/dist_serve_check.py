@@ -210,6 +210,65 @@ def main():
           f"(paged+stacked x 4x1+2x2; accepted={bstats['spec_accepted']}, "
           f"emitted={bstats['spec_emitted']})")
 
+    # --- 5b. distributed TREE-speculative decode -----------------------
+    # branchy token trees through the ancestor-masked sharded verify:
+    # greedy streams must stay bit-identical to plain decode on both
+    # layouts and both shard geometries (accepted-path K/V compaction +
+    # rejected-branch rewind under wave parking)
+    tspec = SpecConfig(k=4, tree=True, branch=2)
+    tbase = ServeEngine(cfg, params, batch_slots=4, max_seq=64, eos_id=-1,
+                        chunk_size=8, spec=tspec)
+    assert sserve(tbase) == swant, "single-device tree spec diverged"
+    assert tbase.stats()["spec_accepted"] > 0, "tree spec never engaged"
+    for layout in ("paged", "stacked"):
+        for n_shards, sps in ((4, 1), (2, 2)):
+            teng = DistributedServeEngine(
+                cfg, params, n_shards=n_shards, slots_per_shard=sps,
+                max_seq=64, eos_id=-1, chunk_size=8, kv_layout=layout,
+                spec=tspec)
+            tgot = sserve(teng)
+            assert tgot == swant, (layout, n_shards, sps, tgot, swant)
+            st = teng.stats()
+            assert st["spec_accepted"] > 0, (layout, n_shards, sps)
+            # wave-width adaptive dispatch stays inside [1, k+1]
+            assert 1 <= st["verify_width_min"] <= st["verify_width_max"] \
+                <= tspec.k + 1, (layout, n_shards, sps, st)
+            # transfer caps: logits (B, W, V) with W <= k+1; metadata now
+            # includes the (D, Bs, W, W) ancestor bitmasks
+            vlog = teng.B * (tspec.k + 1) * cfg.vocab_size * 4
+            vmeta = max(
+                teng.D * teng.Bs * max(teng.kv.pages_per_seq
+                                       if layout == "paged" else 0,
+                                       (tspec.k + 1) ** 2) * 4,
+                teng.D * teng.chunk_size * 4)
+            for name, nbytes, _ in teng.xfer.events:
+                cap = vlog if name.endswith(".logits") else vmeta
+                assert nbytes <= cap, (name, nbytes, cap)
+    print("distributed tree spec greedy bit-exact vs plain: OK "
+          "(paged+stacked x 4x1+2x2)")
+
+    # --- 5c. wave-width adaptive verify on a zero-proposal workload ----
+    # a proposer that never drafts: every wave's verify must collapse to
+    # width 1 (a decode step's position-axis compute, not k+1) while the
+    # stream stays bit-exact
+    from repro.serving.speculative import NgramProposer
+
+    class _NeverPropose(NgramProposer):
+        def propose(self, slots, cur_tok, lengths, active, caps):
+            B = len(slots)
+            return (np.zeros((B, self.k), np.int32),
+                    np.zeros((B,), np.int32))
+
+    weng = DistributedServeEngine(
+        cfg, params, n_shards=2, slots_per_shard=2, max_seq=64, eos_id=-1,
+        chunk_size=8, kv_layout="paged", spec=SpecConfig(k=4))
+    weng.proposer = _NeverPropose(4)
+    assert sserve(weng) == swant, "zero-proposal stream diverged"
+    wst = weng.stats()
+    assert wst["verify_width_max"] == 1, wst["verify_width_max"]
+    print("wave-width adaptive verify OK (zero-proposal waves dispatch "
+          f"width 1, not k+1={SpecConfig(k=4).k + 1})")
+
     # --- quantized distributed engine smoke ----------------------------
     import jax.numpy as jnp
 

@@ -455,6 +455,91 @@ def test_paged_verify_kernel_page_edge_offsets(base0):
         np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
 
 
+def _random_anc(rng, B, C):
+    """Random per-row ancestor bitmasks: each row grows a random token
+    tree (0..C-1 nodes, random parents) and takes its padded mask."""
+    from repro.serving.speculative import TokenTree
+
+    anc = np.zeros((B, C, C), bool)
+    for b in range(B):
+        t = TokenTree()
+        for _ in range(int(rng.integers(0, C))):
+            t.add(int(rng.integers(0, 100)), int(rng.integers(0, t.n + 1)))
+        anc[b] = t.ancestor_mask(C)
+    return jnp.asarray(anc)
+
+
+@pytest.mark.parametrize(
+    "B,H,Hkv,D,ps,n_pg,C",
+    [
+        (2, 4, 4, 64, 16, 4, 4),   # MHA
+        (2, 8, 2, 64, 16, 4, 6),   # GQA
+        (1, 4, 1, 128, 8, 6, 3),   # MQA, small pages
+        (3, 2, 2, 32, 32, 2, 8),   # wide chunk, page == two blocks
+        (2, 4, 2, 64, 8, 5, 5),    # GQA again, odd widths
+    ],
+)
+def test_paged_verify_kernel_ancestor_mask_matches_oracle(B, H, Hkv, D,
+                                                          ps, n_pg, C):
+    """Tree verify: the ancestor-masked kernel matches the gather-first
+    oracle across head / GQA / page-size / chunk-width grids with random
+    branchy trees and per-row bases anywhere in the pool."""
+    rng = np.random.default_rng(B * 977 + H * 31 + ps + C)
+    q, kp, vp, base, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, C)
+    anc = _random_anc(rng, B, C)
+    out = ops.paged_verify(q, kp, vp, base, bt, anc=anc,
+                           backend="interpret")
+    want = ops.paged_verify(q, kp, vp, base, bt, anc=anc, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("base0", [0, 7, 8, 15, 16, 28])
+def test_paged_verify_kernel_anc_page_edge_offsets(base0):
+    """Tree chunks straddling page boundaries: deterministic bases at
+    and around the edges, branchy masks."""
+    B, H, Hkv, D, ps, n_pg, C = 1, 2, 2, 32, 8, 4, 4
+    rng = np.random.default_rng(base0)
+    q, kp, vp, _, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, C)
+    base = jnp.asarray([base0], jnp.int32)
+    anc = _random_anc(rng, B, C)
+    out = ops.paged_verify(q, kp, vp, base, bt, anc=anc,
+                           backend="interpret")
+    want = ops.paged_verify(q, kp, vp, base, bt, anc=anc, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("backend", ["interpret", "jnp"])
+def test_paged_verify_causal_anc_is_bitwise_linear(backend):
+    """A causal-tril ancestor mask (what a chain tree or an empty row
+    produces) is BITWISE identical to the implicit-causal linear path on
+    both backends — the tree-mode reduction that keeps greedy tree-spec
+    streams byte-equal to plain decode."""
+    B, H, Hkv, D, ps, n_pg, C = 2, 4, 2, 64, 16, 4, 4
+    rng = np.random.default_rng(9)
+    q, kp, vp, base, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, C)
+    tril = jnp.asarray(
+        np.broadcast_to(np.tril(np.ones((C, C), bool)), (B, C, C)))
+    got = ops.paged_verify(q, kp, vp, base, bt, anc=tril, backend=backend)
+    want = ops.paged_verify(q, kp, vp, base, bt, backend=backend)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_verify_window_anc_mutually_exclusive():
+    """Sliding windows cut the *prefix*; ancestor masks replace the
+    in-chunk causal structure.  Combining them is undefined — both the
+    dispatcher and the oracle refuse."""
+    B, H, Hkv, D, ps, n_pg, C = 1, 2, 2, 32, 8, 2, 2
+    rng = np.random.default_rng(0)
+    q, kp, vp, base, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, C)
+    anc = _random_anc(rng, B, C)
+    with pytest.raises(ValueError, match="exclusive"):
+        ops.paged_verify(q, kp, vp, base, bt, window=8, anc=anc)
+    with pytest.raises(ValueError, match="exclusive"):
+        ref.paged_verify_ref(q, kp, vp, base, bt, window=8, anc=anc)
+
+
 def test_paged_verify_single_position_matches_decode_oracle():
     """A C=1 verify chunk is a decode step: the verify oracle at base =
     len-1 must agree with the decode oracle at lengths = len (the page
@@ -500,10 +585,38 @@ if _HAS_HYPOTHESIS:
                                 backend="jnp")
         np.testing.assert_allclose(
             np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        data=st.data(),
+        ps=st.sampled_from([8, 16]),
+        n_pg=st.integers(2, 4),
+        c=st.integers(1, 6),
+    )
+    def test_paged_verify_kernel_tree_property(data, ps, n_pg, c):
+        """Property sweep with random branchy ancestor masks: for any
+        page size / page count / chunk width and in-pool bases, the
+        tree kernel == the tree oracle."""
+        B, H, Hkv, D = 2, 4, 2, 32
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        q, kp, vp, base, bt = _verify_case(rng, B, H, Hkv, D, ps, n_pg, c)
+        anc = _random_anc(rng, B, c)
+        out = ops.paged_verify(q, kp, vp, base, bt, anc=anc,
+                               backend="interpret")
+        want = ops.paged_verify(q, kp, vp, base, bt, anc=anc,
+                                backend="jnp")
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5)
 else:
     @pytest.mark.skip(reason="hypothesis not installed; parametrized "
                       "sweeps above cover the same grid deterministically")
     def test_paged_verify_kernel_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed; parametrized "
+                      "sweeps above cover the same grid deterministically")
+    def test_paged_verify_kernel_tree_property():
         pass
 
 

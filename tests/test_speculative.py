@@ -498,3 +498,264 @@ def test_adaptive_spec_bitexact_and_reduces_waste(gpt2_setup, kv_layout):
     assert eng_a.adaptive is not None
     assert eng_f.spec_accepted < eng_f.spec_proposed  # low acceptance
     assert eng_a.spec_proposed < eng_f.spec_proposed  # less drafted waste
+
+
+# ---------------------------------------------------------------------------
+# tree speculative decoding: TokenTree structure, ancestor masks, the
+# tree accept rule, and end-to-end greedy bit-exactness
+# ---------------------------------------------------------------------------
+
+
+def _random_tree(rng, n_nodes, vocab=100):
+    """Grow a random TokenTree by attaching each node to a random
+    existing chunk position (root = 0)."""
+    from repro.serving.speculative import TokenTree
+
+    t = TokenTree()
+    for _ in range(n_nodes):
+        t.add(int(rng.integers(0, vocab)), int(rng.integers(0, t.n + 1)))
+    return t
+
+
+def _check_tree_mask(t, C):
+    """Every node's ancestor-mask row is exactly its root path (walked
+    independently via the parent pointers); padding rows are causal."""
+    anc = t.ancestor_mask(C)
+    assert anc.shape == (C, C) and anc.dtype == np.bool_
+    assert anc[0].tolist() == [True] + [False] * (C - 1)
+    for j in range(1, t.n + 1):
+        path = {0, j}
+        p = t.parents[j - 1]
+        while p != 0:
+            path.add(p)
+            p = t.parents[p - 1]
+        assert set(np.flatnonzero(anc[j]).tolist()) == path, (j, t.parents)
+        # depth bookkeeping: |root path| - 1 (root excluded)
+        assert t.depths[j - 1] == len(path) - 1
+    for j in range(t.n + 1, C):  # padding rows: causal, so a chain/empty
+        assert anc[j].tolist() == [True] * (j + 1) + [False] * (C - 1 - j)
+
+
+def test_token_tree_ancestor_mask_matches_parent_pointers():
+    """Deterministic sweep of the hypothesis property: random trees of
+    every size up to the chunk budget, plus the degenerate chain — the
+    mask row of node j holds exactly j's root path."""
+    from repro.serving.speculative import TokenTree
+
+    rng = np.random.default_rng(0)
+    for n in range(0, 8):
+        for _ in range(20):
+            _check_tree_mask(_random_tree(rng, n), C=9)
+    chain = TokenTree.chain([5, 6, 7])
+    _check_tree_mask(chain, C=4)
+    # a chain's mask IS the causal tril: the linear-verify reduction
+    assert np.array_equal(chain.ancestor_mask(4),
+                          np.tril(np.ones((4, 4), bool)))
+    with pytest.raises(ValueError, match="parent"):
+        TokenTree().add(1, 1)  # parent must already exist
+    with pytest.raises(ValueError):
+        TokenTree.chain([1, 2, 3]).ancestor_mask(3)  # n+1 > C
+
+
+try:
+    import importlib.util as _ilu
+    _HAS_HYPOTHESIS = _ilu.find_spec("hypothesis") is not None
+except Exception:  # pragma: no cover
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(data=st.data(), n=st.integers(0, 10))
+    def test_token_tree_mask_property(data, n):
+        seed = data.draw(st.integers(0, 2**31 - 1))
+        _check_tree_mask(_random_tree(np.random.default_rng(seed), n),
+                         C=n + 1 + data.draw(st.integers(0, 3)))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; the deterministic "
+                      "sweep above covers the same property")
+    def test_token_tree_mask_property():
+        pass
+
+
+def test_tree_arrays_defaults_and_packing():
+    """tree_arrays flattens per-slot trees into batch arrays; rows with
+    no tree get the chain/causal defaults (tril mask, arange depths) so
+    a parked or empty row is indistinguishable from linear verify."""
+    from repro.serving.speculative import TokenTree, tree_arrays
+
+    t = TokenTree()
+    a = t.add(10, 0)
+    b = t.add(11, 0)
+    c = t.add(12, a)
+    tokens, parents, n_nodes, anc, depths = tree_arrays([t, None], 4, 5)
+    assert tokens[0, :3].tolist() == [10, 11, 12]
+    assert parents[0, :3].tolist() == [0, 0, a]
+    assert n_nodes.tolist() == [3, 0]
+    assert np.array_equal(anc[1], np.tril(np.ones((5, 5), bool)))
+    assert depths[1].tolist() == [0, 1, 2, 3, 4]
+    assert depths[0, :4].tolist() == [0, 1, 1, 2]
+    assert anc[0][c].tolist() == [True, True, False, True, False]
+
+
+def test_spec_accept_tree_chain_reduces_to_batch():
+    """On a degenerate chain tree the tree accept rule IS the linear
+    rule: same accepted count, same bonus/corrective token, bit-exact —
+    greedy rows and stochastic rows alike (shared rng stream)."""
+    B, k, V = 6, 4, 50
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(B, k + 1, V)).astype(np.float32))
+    draft = jnp.asarray(rng.integers(0, V, (B, k)), jnp.int32)
+    n_draft = jnp.asarray([4, 3, 0, 4, 2, 1], jnp.int32)
+    parents = jnp.tile(jnp.arange(k, dtype=jnp.int32), (B, 1))
+    temp = jnp.asarray([0.0, 0.0, 0.0, 1.0, 0.7, 1.3], jnp.float32)
+    topk = jnp.asarray([0, 5, 0, 0, 8, 0], jnp.int32)
+    topp = jnp.asarray([0.0, 0.0, 0.9, 0.0, 0.0, 0.95], jnp.float32)
+    key = jax.random.PRNGKey(11)
+    n_b, tok_b = sampler.spec_accept_batch(
+        logits, draft, n_draft, key, temp, topk, topp)
+    n_t, acc, tok_t = sampler.spec_accept_tree(
+        logits, draft, parents, n_draft, key, temp, topk, topp)
+    assert np.array_equal(np.asarray(n_b), np.asarray(n_t))
+    assert np.array_equal(np.asarray(tok_b), np.asarray(tok_t))
+    # the accepted set is exactly the prefix mask of the chain
+    want = np.arange(k + 1)[None, :] <= np.asarray(n_b)[:, None]
+    assert np.array_equal(np.asarray(acc), want)
+
+
+def test_spec_accept_tree_picks_deepest_greedy_path():
+    """Greedy rows accept the longest root-to-leaf path that matches the
+    target argmax chain — siblings of the argmax token are rejected and
+    the corrective token is the argmax at the path's end."""
+    B, V = 1, 16
+    # chunk: [cur, n1(tok 3), n2(tok 5), n3(tok 7 under n1)]
+    # target argmax after cur -> 3; after [3] -> 7; after [3,7] -> 9
+    logits = np.full((B, 4, V), -10.0, np.float32)
+    logits[0, 0, 3] = 10.0   # after cur: argmax 3
+    logits[0, 1, 7] = 10.0   # after [3]: argmax 7  (row of node 1)
+    logits[0, 2, 2] = 10.0   # after [5]: unused (node 2 rejected)
+    logits[0, 3, 9] = 10.0   # after [3,7]: argmax 9
+    tokens = jnp.asarray([[3, 5, 7]], jnp.int32)
+    parents = jnp.asarray([[0, 0, 1]], jnp.int32)
+    n_nodes = jnp.asarray([3], jnp.int32)
+    n_acc, acc, next_tok = sampler.spec_accept_tree(
+        jnp.asarray(logits), tokens, parents, n_nodes,
+        jax.random.PRNGKey(0), jnp.zeros((B,)), jnp.zeros((B,), jnp.int32),
+        jnp.zeros((B,)))
+    assert int(n_acc[0]) == 2
+    assert np.asarray(acc)[0].tolist() == [True, True, False, True]
+    assert int(next_tok[0]) == 9
+
+
+def test_spec_accept_tree_preserves_target_distribution():
+    """Sequential sibling rejection-sampling keeps the emitted token's
+    marginal equal to the target distribution (first emitted position,
+    branchy tree, proposal disagrees with target)."""
+    V = 10
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(1, 4, V)).astype(np.float32) * 1.5)
+    target = np.asarray(jax.nn.softmax(logits[0, 0]))
+    # 3 sibling candidates off the root, fixed disagreeing proposal
+    tokens = jnp.asarray([[1, 2, 3]], jnp.int32)
+    parents = jnp.asarray([[0, 0, 0]], jnp.int32)
+    n_nodes = jnp.asarray([3], jnp.int32)
+    ones = jnp.ones((1,), jnp.float32)
+    zi = jnp.zeros((1,), jnp.int32)
+
+    @jax.jit
+    def first_tok(key):
+        n_acc, acc, next_tok = sampler.spec_accept_tree(
+            logits, tokens, parents, n_nodes, key, ones, zi, ones)
+        # the first emitted token: accepted child of the root, else the
+        # corrective sample
+        child = jnp.argmax(acc[0, 1:] & (parents[0] == 0), axis=-1)
+        has = jnp.any(acc[0, 1:] & (parents[0] == 0))
+        return jnp.where(has, tokens[0, child], next_tok[0])
+
+    keys = jax.random.split(jax.random.PRNGKey(42), 20000)
+    toks = np.asarray(jax.vmap(first_tok)(keys))
+    got = np.bincount(toks, minlength=V) / len(toks)
+    np.testing.assert_allclose(got, target, atol=0.015)
+
+
+@pytest.mark.parametrize("kv_layout", ["stacked", "paged"])
+@pytest.mark.parametrize("branch", [1, 3])
+def test_greedy_tree_spec_bitexact_vs_plain(gpt2_setup, kv_layout, branch):
+    """Greedy tree speculation is token-for-token identical to plain
+    decode on both layouts — the n-gram proposer emits branchy trees,
+    rejected branches rewind, the surviving path compacts in place."""
+    cfg, params = gpt2_setup
+    prompts = _mixed_prompts(cfg.vocab_size)
+    _, plain = _run(cfg, params, prompts, kv_layout=kv_layout)
+    eng, tree = _run(cfg, params, prompts, kv_layout=kv_layout,
+                     spec=SpecConfig(k=4, tree=True, branch=branch))
+    assert tree == plain
+    assert eng.spec_ticks > 0
+
+
+@pytest.mark.parametrize("kv_layout", ["stacked", "paged"])
+def test_model_draft_tree_spec_bitexact_vs_plain(gpt2_setup, kv_layout):
+    """The draft-model tree proposer preserves the greedy stream with a
+    disagreeing draft (heavy branch rejection + compaction traffic) and
+    with the target as its own draft (deep accepted spines)."""
+    cfg, params = gpt2_setup
+    draft_params = lm.init(cfg, jax.random.PRNGKey(7), max_seq=64)
+    prompts = _mixed_prompts(cfg.vocab_size, seed=2)
+    _, plain = _run(cfg, params, prompts, kv_layout=kv_layout)
+    for dp in (draft_params, params):
+        eng, tree = _run(cfg, params, prompts, kv_layout=kv_layout,
+                         spec=SpecConfig(k=4, tree=True, branch=2,
+                                         proposer="model", draft_cfg=cfg,
+                                         draft_params=dp))
+        assert tree == plain
+    assert eng.stats()["acceptance_rate"] > 0.3  # self-draft spine accepts
+
+
+def test_tree_spec_sampling_completes_with_accounting(gpt2_setup):
+    """Stochastic tree spec completes with coherent accounting (the
+    distribution-preservation property itself is unit-tested above)."""
+    cfg, params = gpt2_setup
+    prompts = _mixed_prompts(cfg.vocab_size, seed=5)
+    eng, out = _run(cfg, params, prompts, kv_layout="paged",
+                    spec=SpecConfig(k=4, tree=True, branch=2),
+                    sampling=sampler.SamplingParams(temperature=0.8,
+                                                    top_k=40))
+    assert all(len(v) == 10 for v in out.values())
+    assert eng.spec_accepted <= eng.spec_proposed
+    assert eng.spec_emitted >= eng.spec_ticks
+
+
+def test_tree_spec_requires_pure_attention_stack(gpt2_setup):
+    """Tree mode forks K/V across sibling branches; rings/recurrent
+    state cannot hold two candidate futures, so hybrid stacks refuse."""
+    import dataclasses
+
+    cfg, params = gpt2_setup
+    bad = dataclasses.replace(cfg, block_pattern=("attn", "local_attn"),
+                              window=32)
+    with pytest.raises(ValueError, match="tree"):
+        ServeEngine(bad, params, batch_slots=2, max_seq=64, eos_id=-1,
+                    chunk_size=8, spec=SpecConfig(k=2, tree=True))
+
+
+def test_adaptive_observe_tree_uses_path_over_nodes():
+    """Satellite: the per-slot EWMA observes tree ticks as
+    accepted-path-length / proposed-nodes — a wide tree with a short
+    surviving path is rejection evidence exactly like a rejected chain."""
+    from repro.serving.speculative import AdaptiveDraft
+
+    ad = AdaptiveDraft(k=4, k_min=1, decay=0.5)
+    ad2 = AdaptiveDraft(k=4, k_min=1, decay=0.5)
+    ad.alloc(0)
+    ad2.alloc(0)
+    for _ in range(4):
+        ad.observe_tree(0, 4, 1)  # 4-node tree, 1-deep surviving path
+        ad2.observe(0, 4, 1)
+    assert ad.cap(0) == ad2.cap(0) < 4
+    for _ in range(4):
+        ad.observe_tree(0, 4, 4)  # full chain survived
+    assert ad.cap(0) == 4
+    ad.observe_tree(0, 0, 0)  # zero-node tick: not rejection evidence
+    assert ad.cap(0) == 4
